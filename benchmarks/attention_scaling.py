@@ -1,0 +1,52 @@
+"""Paper Figure 2: attention speed & memory vs sequence length.
+
+Times direct-TaylorShift, efficient-TaylorShift, and softmax attention
+(single head, like the paper's Fig. 2) on this host and reports the
+empirical speed crossover N̂0 alongside the theoretical N0. Peak-entry
+memory is computed from the paper's §4.2 counters (exact, hardware-free).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taylor as T
+
+from benchmarks.common import emit, timeit
+
+
+def softmax_attn(q, k, v):
+    x = jnp.einsum("...nd,...md->...nm", q, k) / jnp.sqrt(q.shape[-1])
+    return jnp.einsum("...nm,...md->...nd", jax.nn.softmax(x, -1), v)
+
+
+def run(d_values=(16, 32), n_values=(256, 512, 1024, 2048, 4096)):
+    results = {}
+    for d in d_values:
+        crossing = None
+        for n in n_values:
+            key = jax.random.PRNGKey(n * d)
+            q, k, v = (jax.random.normal(kk, (1, 1, n, d))
+                       for kk in jax.random.split(key, 3))
+            t_dir, _ = timeit(jax.jit(functools.partial(
+                T.direct_taylorshift)), q, k, v)
+            t_eff, _ = timeit(jax.jit(functools.partial(
+                T.efficient_taylorshift)), q, k, v)
+            t_sm, _ = timeit(jax.jit(softmax_attn), q, k, v)
+            mem_dir = T.entries_direct(n, d)
+            mem_eff = T.entries_efficient(n, d)
+            emit(f"attn_d{d}_n{n}", t_dir * 1e6,
+                 f"eff_us={t_eff * 1e6:.1f};softmax_us={t_sm * 1e6:.1f};"
+                 f"entries_dir={mem_dir};entries_eff={mem_eff}")
+            if crossing is None and t_eff < t_dir:
+                crossing = n
+        n0 = T.crossover_n0(d)
+        results[d] = (crossing, n0)
+        emit(f"attn_crossover_d{d}", 0.0,
+             f"empirical_N0_bucket={crossing};theory_N0={n0:.0f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,107 @@
+"""Paper Table 4 / Appendix B.1: the normalization ablation.
+
+The paper's finding: WITHOUT the §3.3 normalization scheme the efficient
+implementation numerically explodes (overflow → NaN) while direct stays
+usable; WITH it both are stable and interchangeable. We reproduce the
+mechanism directly: feed realistic-magnitude activations through both
+implementations with normalization on/off and measure overflow rates in
+float16 (the paper trains in mixed precision) plus intermediate norms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import taylor as T
+
+from benchmarks.common import emit
+
+
+def overflow_rate(fn, q, k, v, dtype):
+    y = fn(q.astype(dtype), k.astype(dtype), v.astype(dtype))
+    y = np.asarray(y, np.float32)
+    return float(np.mean(~np.isfinite(y)))
+
+
+def naive_efficient(q, k, v, *, normalize: bool):
+    """The paper's Alg. 1 *without* our fp32-internal policy: every
+    intermediate stays in the input dtype, as in a plain mixed-precision
+    port. This is the implementation App. B.1 shows failing."""
+    d = q.shape[-1]
+    alpha = jnp.asarray(d ** 0.25, q.dtype)
+    if normalize:
+        q = q / jnp.linalg.norm(q.astype(q.dtype), axis=-1, keepdims=True)
+        k = k / jnp.linalg.norm(k.astype(k.dtype), axis=-1, keepdims=True)
+        q, k = q * alpha, k * alpha
+    ones = jnp.ones((*v.shape[:-1], 1), v.dtype)
+    n = q.shape[-2]
+    scale = (1.0 / n) if normalize else 1.0
+    vh = jnp.concatenate([ones * jnp.asarray(jnp.sqrt(d / n), v.dtype), v],
+                         -1) * jnp.asarray(scale, v.dtype)
+    a_mod = jnp.einsum("...me,...mf->...ef", T.boxtimes(k, k), vh)
+    y = 0.5 * jnp.einsum("...ne,...ef->...nf", T.boxtimes(q, q), a_mod)
+    coef_lin = alpha ** 2 if normalize else jnp.asarray(1.0, q.dtype)
+    coef_const = alpha ** 4 if normalize else jnp.asarray(1.0, q.dtype)
+    y += coef_lin * jnp.einsum(
+        "...nd,...df->...nf", q, jnp.einsum("...md,...mf->...df", k, vh))
+    y += coef_const * jnp.sum(vh, -2, keepdims=True)
+    return y[..., 1:] / y[..., :1]
+
+
+def run(n=1024, d=32, scale=8.0):
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    # trained-network magnitudes: activations are not unit-norm
+    q = jax.random.normal(kq, (1, 2, n, d)) * scale
+    k = jax.random.normal(kk, (1, 2, n, d)) * scale
+    v = jax.random.normal(kv, (1, 2, n, d))
+
+    rows = []
+    for name, fn in (
+        # paper App. B.1 setting: plain mixed-precision implementation
+        ("naive_efficient_plain",
+         lambda q, k, v: naive_efficient(q, k, v, normalize=False)),
+        ("naive_efficient_norm",
+         lambda q, k, v: naive_efficient(q, k, v, normalize=True)),
+        # our shipped implementations (Alg.1 normalization + fp32 states)
+        ("shipped_direct",
+         lambda q, k, v: T.direct_taylorshift(q, k, v)),
+        ("shipped_efficient",
+         lambda q, k, v: T.efficient_taylorshift(q, k, v)),
+        ("shipped_efficient_nonorm",
+         lambda q, k, v: T.efficient_taylorshift(q, k, v,
+                                                 normalize_inputs=False)),
+    ):
+        r16 = overflow_rate(fn, q, k, v, jnp.float16)
+        r32 = overflow_rate(fn, q, k, v, jnp.float32)
+        emit(f"norm_ablation_{name}", 0.0,
+             f"overflow_f16={r16:.3f};overflow_f32={r32:.3f}")
+        rows.append((name, r16))
+
+    # paper Table 1 growth laws: |A_mod| ~ (N+1)/sqrt(d) (linear in N),
+    # |Y| ~ sqrt(d/N). We validate the *scaling exponents* (App. B.2 fits
+    # them empirically too; the absolute constant depends on the norm
+    # convention).
+    def amod_norm(nn):
+        kq2, kk2, kv2 = jax.random.split(jax.random.PRNGKey(nn), 3)
+        kk_ = T.l2_normalize(jax.random.normal(kk2, (1, 2, nn, d)))
+        vv_ = T.l2_normalize(jax.random.normal(kv2, (1, 2, nn, d)))
+        vh = jnp.concatenate([jnp.ones((1, 2, nn, 1)), vv_], -1)
+        am = jnp.einsum("...me,...mf->...ef", T.boxtimes(kk_, kk_), vh)
+        return float(jnp.mean(jnp.sqrt(jnp.sum(am * am, axis=(-1, -2)))))
+
+    g = amod_norm(2 * n) / amod_norm(n)
+    emit("norm_scaling_amod_growth", 0.0,
+         f"N->2N_ratio={g:.2f};paper_model=2.0;ok={abs(g - 2.0) < 0.3}")
+    # the headline reproduction (paper Table 4 / App. B.1): the naive
+    # mixed-precision efficient form overflows; Alg. 1 normalization
+    # rescues it; our fp32-state policy is immune either way.
+    plain = dict(rows)["naive_efficient_plain"]
+    fixed = dict(rows)["naive_efficient_norm"]
+    shipped = dict(rows)["shipped_efficient"]
+    emit("norm_ablation_conclusion", 0.0,
+         f"naive_f16_overflow={plain:.3f};normalized_f16={fixed:.3f};"
+         f"shipped_f16={shipped:.3f};reproduced={plain > 0 >= max(fixed, shipped) - 1e-9}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+Emits one row per (arch × shape × mesh): the three roofline terms, the
+dominant bottleneck, and MODEL_FLOPS/HLO_FLOPS. Also writes the markdown
+table EXPERIMENTS.md §Roofline embeds."""
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def load_records(mesh="single"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("variant"):
+            continue
+        if r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def run(mesh="single"):
+    recs = load_records(mesh)
+    n_ok = 0
+    for r in recs:
+        tag = f"{r['arch']}__{r['shape']}"
+        if r["status"] != "ok":
+            emit(f"roofline_{tag}", 0.0, "status=FAIL")
+            continue
+        n_ok += 1
+        t = r["roofline"]
+        emit(f"roofline_{tag}", t["roofline_bound_s"] * 1e6,
+             f"dominant={t['dominant']};t_c={t['t_compute_s']:.3e};"
+             f"t_m={t['t_memory_s']:.3e};t_x={t['t_collective_s']:.3e};"
+             f"model/hlo={r['model_to_hlo_flops']:.3f}")
+    emit("roofline_cells_ok", 0.0, f"{n_ok}/{len(recs)}")
+    return recs
+
+
+def markdown_table(mesh="single") -> str:
+    rows = ["| arch | shape | t_compute | t_memory (lo–hi) | t_collective |"
+            " dominant | model/HLO flops | HBM fit (args+temp GB) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in load_records(mesh):
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | FAIL | — | — |")
+            continue
+        t = r["roofline"]
+        mem = r["memory"]
+        gb = (mem["argument_bytes"] + mem["temp_bytes"]) / 1e9
+        lo = t.get("t_memory_lower_s", t["t_memory_s"])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['t_compute_s']:.2e}s "
+            f"| {lo:.2e}–{t['t_memory_s']:.2e}s "
+            f"| {t['t_collective_s']:.2e}s | **{t['dominant']}** "
+            f"| {r['model_to_hlo_flops']:.2f} | {gb:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    run()

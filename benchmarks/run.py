@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+
+  Table 2  -> crossover            (N0/N1 transition points)
+  Fig. 2   -> attention_scaling    (attn speed/memory vs N)
+  Fig. 3   -> transformer_efficiency (full-model speed vs N)
+  Table 3  -> accuracy_parity      (taylor vs softmax accuracy)
+  Table 4  -> norm_ablation        (normalization => stability)
+  Table 5  -> heads_sweep          (more heads => faster efficient)
+  §Roofline-> roofline             (dry-run derived terms)
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    print("name,us_per_call,derived")
+    t0 = time.time()
+
+    from benchmarks import (accuracy_parity, attention_scaling, crossover,
+                            heads_sweep, norm_ablation, roofline,
+                            transformer_efficiency)
+
+    crossover.run()
+    norm_ablation.run()
+    heads_sweep.run()
+    attention_scaling.run(d_values=(16,) if fast else (16, 32),
+                          n_values=(256, 512, 1024) if fast
+                          else (256, 512, 1024, 2048, 4096))
+    transformer_efficiency.run(seq_lens=(256, 512) if fast
+                               else (256, 512, 1024, 2048))
+    accuracy_parity.run(steps=40 if fast else 800)
+    roofline.run()
+    print(f"benchmarks_total,{(time.time() - t0) * 1e6:.0f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Figure 3: full-transformer speed/memory, direct vs efficient vs
+softmax (ListOps hyperparameters, scaled to this host)."""
+
+import jax
+
+from repro.configs import get_config
+from repro.models import model as M
+
+from benchmarks.common import emit, timeit
+
+
+def run(seq_lens=(256, 512, 1024, 2048), d_model=128, n_layers=2):
+    base = get_config("taylorshift-lra").with_(
+        d_model=d_model, n_layers=n_layers, n_heads=8, n_kv_heads=8,
+        d_ff=2 * d_model, max_seq_len=max(seq_lens) + 1, remat=False,
+        dtype="float32")
+    out = {}
+    for backend, mode in (("taylor", "direct"), ("taylor", "efficient"),
+                          ("softmax", "")):
+        cfg = base.with_(attn_backend=backend)
+        if mode:
+            import dataclasses
+            cfg = cfg.with_(taylor=dataclasses.replace(cfg.taylor, mode=mode))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        for n in seq_lens:
+            tokens = jax.random.randint(jax.random.PRNGKey(n), (4, n), 0,
+                                        cfg.vocab)
+            fwd = jax.jit(lambda p, t, c=cfg: M.forward(p, c, {"tokens": t})[0])
+            t, _ = timeit(fwd, params, tokens, warmup=1, iters=3)
+            name = backend + (f"_{mode}" if mode else "")
+            emit(f"transformer_{name}_n{n}", t * 1e6, "")
+            out[(name, n)] = t
+    # derived: crossover sequence length where efficient beats softmax
+    for n in seq_lens:
+        if out.get(("taylor_efficient", n), 1e9) < out.get(("softmax", n), 0):
+            emit("transformer_eff_beats_softmax_at", 0.0, f"n={n}")
+            break
+    return out
+
+
+if __name__ == "__main__":
+    run()

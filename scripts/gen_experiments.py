@@ -1,0 +1,163 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+results/dryrun/*.json. §Perf iteration logs are kept in
+EXPERIMENTS_PERF.md and embedded verbatim."""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+OUT = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+PERF = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS_PERF.md")
+
+ARCH_ORDER = ["whisper-large-v3", "gemma3-1b", "yi-9b", "stablelm-1.6b",
+              "gemma2-27b", "llava-next-34b", "zamba2-7b",
+              "llama4-maverick-400b-a17b", "grok-1-314b", "xlstm-125m"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh, variant=""):
+    out = {}
+    for p in glob.glob(os.path.join(DRYRUN, "*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh and r.get("variant", "") == variant:
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_b(x):
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if abs(x) >= div:
+            return f"{x / div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def dryrun_section():
+    single = load("single")
+    multi = load("multi")
+    lines = ["## §Dry-run — 40 cells × 2 meshes, lower+compile status",
+             "",
+             "Meshes: single-pod `(16,16)=(data,model)` 256 chips; "
+             "multi-pod `(2,16,16)=(pod,data,model)` 512 chips "
+             "(`--xla_force_host_platform_device_count=512`). Every cell "
+             "lowers AND compiles; per-device memory from "
+             "`compiled.memory_analysis()`.",
+             "",
+             "| arch | shape | single: status / args+temp per dev / "
+             "compile | multi: status / args+temp per dev / compile |",
+             "|---|---|---|---|"]
+    n_ok = 0
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            cells = []
+            for recs in (single, multi):
+                r = recs.get((a, s))
+                if r is None:
+                    cells.append("missing")
+                    continue
+                if r["status"] != "ok":
+                    cells.append("FAIL")
+                    continue
+                n_ok += 1
+                m = r["memory"]
+                cells.append(
+                    f"ok / {fmt_b(m['argument_bytes'])}+"
+                    f"{fmt_b(m['temp_bytes'])} / {r['compile_s']:.0f}s")
+            lines.append(f"| {a} | {s} | {cells[0]} | {cells[1]} |")
+    lines.insert(3, f"**{n_ok}/80 cells compile.**")
+    lines += ["",
+              "Collective mix (single-pod, per step, from compiled HLO with "
+              "loop-trip multipliers):", "",
+              "| arch.shape | all-gather | all-reduce | reduce-scatter | "
+              "all-to-all | permute | wire bytes/dev |", "|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in ("train_4k", "decode_32k"):
+            r = single.get((a, s))
+            if not r or r["status"] != "ok":
+                continue
+            c = r["collectives"]["counts"]
+            lines.append(
+                f"| {a}.{s} | {c.get('all-gather', 0):.0f} "
+                f"| {c.get('all-reduce', 0):.0f} "
+                f"| {c.get('reduce-scatter', 0):.0f} "
+                f"| {c.get('all-to-all', 0):.0f} "
+                f"| {c.get('collective-permute', 0):.0f} "
+                f"| {fmt_b(r['roofline']['wire_bytes_per_device'])} |")
+    return "\n".join(lines)
+
+
+def roofline_section():
+    single = load("single")
+    lines = ["## §Roofline — per-device terms, single-pod (16,16), "
+             "TPU v5e model",
+             "",
+             "`t_compute = HLO_FLOPs/(197 TF/s)`, `t_memory = "
+             "HLO_bytes/(819 GB/s)` (lo = outputs-only, hi = operands+outputs"
+             " — the CPU-compiled HLO fuses less than TPU would, so the true"
+             " value sits in this band), `t_collective = ring-model wire "
+             "bytes/(50 GB/s link)`. FLOPs/bytes/collectives are parsed from"
+             " compiled post-SPMD HLO with `while` trip-count multipliers "
+             "(`repro/distributed/hlo_cost.py`) because XLA's "
+             "`cost_analysis()` counts scan bodies once.",
+             "",
+             "| arch | shape | t_compute | t_memory lo–hi | t_collective | "
+             "dominant | 6ND/HLO | what would move the dominant term |",
+             "|---|---|---|---|---|---|---|---|"]
+    notes = {
+        ("llama4-maverick-400b-a17b", "train_4k"):
+            "bf16 boundary collectives + RS-instead-of-AR cotangents (§Perf-1)",
+        ("grok-1-314b", "train_4k"):
+            "same as maverick + FSDP expert gathers in bf16",
+        ("xlstm-125m", "train_4k"):
+            "hoist input-gate matmuls out of the sLSTM scan (§Perf-2)",
+        ("xlstm-125m", "prefill_32k"):
+            "same sLSTM hoist; mLSTM chunk dtype discipline",
+        ("stablelm-1.6b", "train_4k"):
+            "efficient-mode + SP A_mod psum at the paper crossover (§Perf-3)",
+    }
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = single.get((a, s))
+            if not r or r["status"] != "ok":
+                continue
+            t = r["roofline"]
+            note = notes.get((a, s), "")
+            if not note:
+                dom = t["dominant"]
+                note = {"compute": "already compute-bound — kernel-level wins only",
+                        "memory": "fuse/recast fp32 transients; bigger per-dev batch",
+                        "collective": "bf16 boundary collectives; overlap with compute",
+                        }[dom]
+            lo = t.get("t_memory_lower_s", t["t_memory_s"])
+            lines.append(
+                f"| {a} | {s} | {t['t_compute_s']:.2e} | {lo:.2e}–"
+                f"{t['t_memory_s']:.2e} | {t['t_collective_s']:.2e} | "
+                f"**{t['dominant']}** | {r['model_to_hlo_flops']:.2f} | "
+                f"{note} |")
+    lines += ["",
+              "`6ND/HLO` = MODEL_FLOPS (6·N_active·tokens train, 2·N_active"
+              "·tokens inference) / compiled HLO FLOPs — the useful-compute"
+              " fraction. Values < 1 come from remat recompute, MoE "
+              "capacity-factor padding, and attention/SSM flops that 6ND "
+              "ignores; decode/long cells are tiny-N so the constant "
+              "per-step overheads dominate the ratio."]
+    return "\n".join(lines)
+
+
+def main():
+    header = open(os.path.join(os.path.dirname(__file__), "..",
+                               "EXPERIMENTS_HEADER.md")).read()
+    perf = open(PERF).read() if os.path.exists(PERF) else "## §Perf\n(TBD)\n"
+    body = "\n\n".join([header, dryrun_section(), roofline_section(), perf])
+    with open(OUT, "w") as f:
+        f.write(body + "\n")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

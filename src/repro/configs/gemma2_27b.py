@@ -1,0 +1,30 @@
+"""gemma2-27b — local/global alternating, logit softcaps [arXiv:2408.00118].
+
+46L, d_model=4608, 32 heads (GQA kv=16, head_dim=128), d_ff=36864,
+vocab=256000, window 4096, pre+post RMSNorm. NOTE (DESIGN.md
+§Arch-applicability): attention-logit softcapping is incompatible with
+the TaylorShift factorization — the learnable temperature tau takes its
+role on Taylor layers; softcap_attn applies on the softmax baseline path.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    family="decoder",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab=256000,
+    act="gelu",
+    gated_mlp=True,
+    norm="rms",
+    post_norm=True,
+    layer_pattern=("local", "global"),
+    window=4096,
+    softcap_attn=50.0,
+    softcap_final=30.0,
+)

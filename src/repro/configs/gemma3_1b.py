@@ -1,0 +1,29 @@
+"""gemma3-1b — dense decoder, 5:1 local:global [hf:google/gemma-3-1b-pt].
+
+26L, d_model=1152, 4 heads (GQA kv=1, head_dim=256), d_ff=6912,
+vocab=262144, sliding window 512. Global layers use efficient-TaylorShift
+(d=256 => N0 ~ 66k: auto mode picks efficient only for the long shapes —
+"and Back"); local layers use windowed direct-Taylor.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="decoder",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab=262144,
+    act="gelu",
+    gated_mlp=True,
+    norm="rms",
+    post_norm=True,
+    qk_norm=True,
+    layer_pattern=("local", "local", "local", "local", "local", "global"),
+    window=512,
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,24 @@
+"""grok-1-314b — MoE 8 experts top-2 [hf:xai-org/grok-1].
+
+64L, d_model=6144, 48 heads (GQA kv=8, d=128), expert d_ff=32768,
+vocab=131072; every layer MoE.
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab=131072,
+    act="gelu",
+    gated_mlp=True,
+    norm="rms",
+    layer_pattern=("global_moe",),
+    moe=MoEConfig(n_experts=8, top_k=2, capacity_factor=1.25, every=1),
+)

@@ -1,0 +1,28 @@
+"""llama4-maverick-400b-a17b — MoE 128e top-1 [hf:meta-llama/Llama-4].
+
+48L, d_model=5120, 40 heads (GQA kv=8, d=128), expert d_ff=8192,
+vocab=202048; 128 experts top-1 + 1 shared expert on alternating layers
+(dense/MoE interleave). Early-fusion multimodal frontend stubbed —
+text-only input specs per assignment. Experts are EP-sharded
+(expert dim over 'model', hidden over 'data'): see distributed/sharding.
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab=202048,
+    act="silu",
+    gated_mlp=True,
+    norm="rms",
+    layer_pattern=("global", "global_moe"),
+    moe=MoEConfig(n_experts=128, top_k=1, capacity_factor=1.25,
+                  n_shared_experts=1, every=2),
+)

@@ -1,0 +1,25 @@
+"""llava-next-34b — VLM (Yi-34B-class backbone) [hf:llava-hf/llava-v1.6].
+
+60L, d_model=7168, 56 heads (GQA kv=8, d=128), d_ff=20480, vocab=64000.
+The anyres vision tower is a STUB per assignment: input_specs() provides
+patch embeddings (B, n_patches, d_model) prepended to the token stream.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab=64000,
+    act="silu",
+    gated_mlp=True,
+    norm="rms",
+    frontend="vision_stub",
+    n_patches=576,
+    tie_embeddings=False,
+)

@@ -1,0 +1,24 @@
+"""stablelm-1.6b [hf:stabilityai/stablelm-2-1_6b].
+
+24L, d_model=2048, 32 heads MHA (kv=32, d=64), d_ff=5632, vocab=100352.
+Uses LayerNorm. d=64 puts train_4k almost exactly at the paper's N0
+crossover (N0(64)=4256) — flagged as a §Perf hillclimb cell.
+Simplification: full RoPE instead of stablelm's 25% partial rotary.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    family="decoder",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=5632,
+    vocab=100352,
+    act="silu",
+    gated_mlp=True,
+    norm="ln",
+    tie_embeddings=False,
+)

@@ -1,0 +1,24 @@
+"""The paper's own model: TaylorShift Transformer encoder (LRA ListOps
+hyperparameters, paper Appendix C Table 6: depth 4, d_embed=512, 8 heads,
+MLP ratio 2). Used by examples/ and the accuracy-parity benchmark.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="taylorshift-lra",
+    family="decoder",
+    causal=False,               # non-causal encoder — the paper's setting
+    n_layers=4,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=1024,
+    vocab=32,
+    act="gelu",
+    gated_mlp=False,
+    norm="ln",
+    pos_embed="learned",
+    max_seq_len=2048,
+    tie_embeddings=True,
+)

@@ -1,0 +1,31 @@
+"""whisper-large-v3 — enc-dec audio transformer [arXiv:2212.04356].
+
+32L enc + 32L dec, d_model=1280, 20 heads (MHA), d_ff=5120, vocab=51866.
+The conv frontend is a STUB per assignment: input_specs() provides
+precomputed frame embeddings. TaylorShift sites: non-causal encoder
+self-attn (the paper's exact setting), causal decoder self-attn, and
+cross-attention (served via a frozen encoder TaylorState).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="encdec",
+    n_layers=32,
+    n_encoder_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab=51866,
+    act="gelu",
+    gated_mlp=False,
+    norm="ln",
+    pos_embed="learned",
+    max_seq_len=4096,
+    decoder_len=448,
+    encoder_frames=1500,
+    frontend="audio_stub",
+    tie_embeddings=True,
+)

@@ -1,0 +1,24 @@
+"""xlstm-125m — sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+12L alternating (mLSTM, sLSTM), d_model=768, 4 heads, d_ff=0 (blocks
+carry their own projections), vocab=50304. TaylorShift INAPPLICABLE:
+attention-free (DESIGN.md §Arch-applicability); the mLSTM matrix memory
+is itself the nearest linear-attention cousin of the Taylor state.
+"""
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="xlstm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    norm="ln",
+    pos_embed="none",
+    layer_pattern=("mlstm", "slstm"),
+    ssm=SSMConfig(chunk=64),
+)

@@ -1,0 +1,21 @@
+"""yi-9b — llama-architecture GQA decoder [arXiv:2403.04652].
+
+48L, d_model=4096, 32 heads (GQA kv=4), d_ff=11008, vocab=64000.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="decoder",
+    n_layers=48,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=11008,
+    vocab=64000,
+    act="silu",
+    gated_mlp=True,
+    norm="rms",
+    tie_embeddings=False,
+)

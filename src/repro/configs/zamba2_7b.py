@@ -1,0 +1,28 @@
+"""zamba2-7b — Mamba2 backbone + shared attention blocks [arXiv:2411.15242].
+
+81 layers, d_model=3584, ssm_state=64; a SHARED transformer-attention
+block (single weight set) is applied every 6th layer. TaylorShift applies
+to the shared attention; the Mamba2 SSD blocks are already linear-time
+(DESIGN.md §Arch-applicability). Simplifications: one shared block (not
+two alternating), no per-invocation LoRA, shared block has no MLP.
+"""
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab=32000,
+    act="gelu",
+    norm="rms",
+    layer_pattern=("mamba", "mamba", "mamba", "mamba", "mamba",
+                   "mamba_shared"),
+    ssm=SSMConfig(state=64, head_dim=64, expansion=2, conv_width=4,
+                  n_groups=1, chunk=64),
+)

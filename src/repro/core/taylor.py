@@ -1,0 +1,488 @@
+"""TaylorShift attention (Nauen et al., 2024) — core algorithms.
+
+Implements, in pure JAX (jnp) at reference quality:
+
+  * ``taylor_softmax``            — T-SM^(2), Eq. (1) building block
+  * ``direct_taylorshift``        — O(N^2 d), materializes the N×N matrix
+  * ``efficient_taylorshift``     — O(N d^3) via the ⊠ tensor-product trick,
+                                    Algorithm 1 normalization
+  * ``causal_*`` variants         — chunkwise prefix-state forms (beyond
+                                    paper; needed for decoder LMs)
+  * ``TaylorState`` + decode step — constant-memory recurrent decode
+
+Shapes follow the paper: per-head ``q, k, v: (..., N, d)``. Batch/head
+dims are leading ``...`` dims; everything vmaps/broadcasts over them.
+
+Normalization (paper §3.3 / Algorithm 1):
+  alpha   = d ** 0.25
+  q <- alpha * tau * q / ||q||,  k <- alpha * k / ||k||
+  v_hat   = (1/N) * concat(sqrt(d/N) * 1_N, v)          (denominator col 0)
+  Y_hat   = 0.5 * Q^⊠2 A_mod + alpha^2 Q (K^T V̂) + alpha^4 Σ_i V̂_i
+  Y       = Y_hat[..., 1:] / Y_hat[..., :1]
+
+The division cancels the common 1/N factor; the sqrt(d/N) on the ones
+column makes the output scale ~ sqrt(N/d) * convex-combination, which the
+paper chooses so the output has mean size ~1 (Table 1).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# FLOP / memory models (paper §4) — used by auto-switching and benchmarks.
+# ---------------------------------------------------------------------------
+
+def ops_direct(N: int, d: int) -> int:
+    """Eq. (5): FLOPs of direct-TaylorShift."""
+    return 4 * N * N * d + 6 * N * N
+
+
+def ops_efficient(N: int, d: int) -> int:
+    """Eq. (6): FLOPs of efficient-TaylorShift."""
+    return N * (4 * d**3 + 10 * d**2 + 9 * d + 4)
+
+
+def crossover_n0(d: int) -> float:
+    """Eq. (7): sequence length where efficient becomes FLOP-cheaper."""
+    return (4 * d**3 + 10 * d**2 + 9 * d + 4) / (4 * d + 6)
+
+
+def entries_direct(N: int, d: int) -> int:
+    """§4.2: peak simultaneous tensor entries, direct."""
+    return d * N + 2 * N * N
+
+
+def entries_efficient(N: int, d: int) -> int:
+    """Eq. (8): peak simultaneous tensor entries, efficient."""
+    return d * d * (d + 1) + 2 * d * N + (d + 1) * N + d * d * N
+
+
+def crossover_n1(d: int) -> float:
+    """Eq. (9): sequence length where efficient becomes memory-cheaper."""
+    return 0.25 * (
+        d * d + 2 * d + 1
+        + math.sqrt(d**4 + 12 * d**3 + 14 * d**2 + 4 * d + 1)
+    )
+
+
+def pick_mode(N: int, d: int, *, optimize_for: str = "speed") -> str:
+    """Paper's "and Back": choose direct vs efficient from the crossover."""
+    thresh = crossover_n0(d) if optimize_for == "speed" else crossover_n1(d)
+    return "efficient" if N >= thresh else "direct"
+
+
+# ---------------------------------------------------------------------------
+# Taylor softmax and input normalization
+# ---------------------------------------------------------------------------
+
+def taylor_exp(x: jnp.ndarray) -> jnp.ndarray:
+    """2nd-order Taylor approximation of exp around 0: 1 + x + x^2/2."""
+    return 1.0 + x + 0.5 * x * x
+
+
+def taylor_softmax(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """T-SM^(2)(x) = normalize(1 + x + x^2/2); positive for even order."""
+    t = taylor_exp(x)
+    return t / jnp.sum(t, axis=axis, keepdims=True)
+
+
+def l2_normalize(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Row-wise l2 normalization in fp32 (paper §3.3)."""
+    x32 = x.astype(jnp.float32)
+    n = jnp.sqrt(jnp.sum(x32 * x32, axis=axis, keepdims=True) + EPS)
+    return (x32 / n).astype(x.dtype)
+
+
+def normalize_qk(q, k, tau):
+    """q <- tau * q/||q||, k <- k/||k|| (the alpha factor is applied by
+    each implementation together with its Taylor coefficients)."""
+    q = l2_normalize(q) * tau
+    k = l2_normalize(k)
+    return q, k
+
+
+# ---------------------------------------------------------------------------
+# Direct TaylorShift — O(N^2 d)
+# ---------------------------------------------------------------------------
+
+def direct_taylorshift(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    tau: jnp.ndarray | float = 1.0,
+    causal: bool = False,
+    normalize_inputs: bool = True,
+    output_scale: bool = True,
+    mask: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Direct implementation of Eq. (1) with §3.3 normalization.
+
+    q, k, v: (..., N, d) / (..., M, d) — supports cross-attention (M keys).
+    Returns (..., N, d_v).
+    """
+    N = q.shape[-2]
+    d = q.shape[-1]
+    if normalize_inputs:
+        q, k = normalize_qk(q, k, tau)
+    x = jnp.einsum("...nd,...md->...nm", q, k,
+                   preferred_element_type=jnp.float32)
+    a = taylor_exp(x)
+    if causal:
+        Nq, Nk = a.shape[-2], a.shape[-1]
+        cm = jnp.tril(jnp.ones((Nq, Nk), dtype=bool), Nk - Nq)
+        a = jnp.where(cm, a, 0.0)
+    if mask is not None:
+        a = jnp.where(mask, a, 0.0)
+    denom = jnp.sum(a, axis=-1, keepdims=True)
+    y = jnp.einsum("...nm,...md->...nd", a / denom, v.astype(a.dtype))
+    if output_scale:
+        # Paper multiplies the output by sqrt(N/d) so its mean size is ~1
+        # (Table 1); N is the number of *keys* attended over. For the
+        # causal form that count is per-row (i+1), matching the recurrent
+        # decode convention.
+        if causal:
+            Nq, Nk = a.shape[-2], a.shape[-1]
+            counts = jnp.arange(Nk - Nq + 1, Nk + 1, dtype=jnp.float32)
+            y = y * jnp.sqrt(counts / d)[..., :, None]
+        else:
+            y = y * jnp.sqrt(k.shape[-2] / d)
+    return y.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Efficient TaylorShift — O(N d^3), Algorithm 1
+# ---------------------------------------------------------------------------
+
+def boxtimes(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Per-row tensor product ⊠: (..., N, d1) x (..., N, d2) -> (..., N, d1*d2)."""
+    out = a[..., :, :, None] * b[..., :, None, :]
+    return out.reshape(*out.shape[:-2], a.shape[-1] * b.shape[-1])
+
+
+def _vhat(v: jnp.ndarray, n_keys: int, d: int) -> jnp.ndarray:
+    """Line 5 of Algorithm 1: V̂ = (1/N) concat(sqrt(d/N)·1, V), fp32."""
+    ones = jnp.full((*v.shape[:-1], 1), math.sqrt(d / n_keys), v.dtype)
+    return jnp.concatenate([ones, v], axis=-1).astype(jnp.float32) / n_keys
+
+
+def efficient_taylorshift(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    tau: jnp.ndarray | float = 1.0,
+    normalize_inputs: bool = True,
+    output_scale: bool = True,
+) -> jnp.ndarray:
+    """Algorithm 1 (non-causal). q: (..., N, d); k, v: (..., M, d)."""
+    d = q.shape[-1]
+    M = k.shape[-2]
+    alpha = d ** 0.25
+    if normalize_inputs:
+        q, k = normalize_qk(q, k, tau)
+    q = (q * alpha).astype(jnp.float32)
+    k = (k * alpha).astype(jnp.float32)
+    vh = _vhat(v, M, d) if output_scale else _vhat_unit(v, M)
+
+    a_mod = jnp.einsum("...me,...mf->...ef", boxtimes(k, k), vh)   # (d², d+1)
+    y_hat = 0.5 * jnp.einsum("...ne,...ef->...nf", boxtimes(q, q), a_mod)
+    kv = jnp.einsum("...md,...mf->...df", k, vh)                    # (d, d+1)
+    y_hat += (alpha**2) * jnp.einsum("...nd,...df->...nf", q, kv)
+    y_hat += (alpha**4) * jnp.sum(vh, axis=-2, keepdims=True)
+    denom, nom = y_hat[..., :1], y_hat[..., 1:]
+    return (nom / denom).astype(v.dtype)
+
+
+def _vhat_unit(v: jnp.ndarray, n_keys: int) -> jnp.ndarray:
+    """V̂ without the sqrt(d/N) output scaling (ones column = 1)."""
+    ones = jnp.ones((*v.shape[:-1], 1), v.dtype)
+    return jnp.concatenate([ones, v], axis=-1).astype(jnp.float32) / n_keys
+
+
+# ---------------------------------------------------------------------------
+# Causal TaylorShift (beyond paper): chunkwise prefix states
+# ---------------------------------------------------------------------------
+#
+# Y_nom[i] = Σ_{j<=i} (½ x_ij² + α² x_ij + α⁴) v̂_j    with x_ij = q_i·k_j
+#          = ½ q_i^⊠2 S2[i] + α² q_i S1[i] + α⁴ S0[i]
+# where S2[i] = Σ_{j<=i} k_j^⊠2 ⊗ v̂_j ∈ R^{d²×(d+1)}, etc.
+#
+# Chunked: split N into chunks of C. Inter-chunk term uses the exclusive
+# chunk-prefix state (a lax scan / associative cumsum over chunk sums);
+# intra-chunk term is the masked direct form, O(C²d).
+
+class TaylorState(NamedTuple):
+    """Recurrent decode state — replaces the KV cache.
+
+    s2: (..., d²,  d+1) fp32     s1: (..., d, d+1) fp32
+    s0: (..., 1,   d+1) fp32     n:  () int32 — tokens absorbed so far
+    """
+    s2: jnp.ndarray
+    s1: jnp.ndarray
+    s0: jnp.ndarray
+    n: jnp.ndarray
+
+    @staticmethod
+    def zeros(batch_dims: tuple, d: int, dtype=jnp.float32) -> "TaylorState":
+        return TaylorState(
+            s2=jnp.zeros((*batch_dims, d * d, d + 1), dtype),
+            s1=jnp.zeros((*batch_dims, d, d + 1), dtype),
+            s0=jnp.zeros((*batch_dims, 1, d + 1), dtype),
+            n=jnp.zeros((), jnp.int32),
+        )
+
+
+def _chunk_sums(k, vh):
+    """Per-chunk state contributions. k: (..., G, C, d), vh: (..., G, C, d+1)."""
+    s2 = jnp.einsum("...gce,...gcf->...gef", boxtimes(k, k), vh)
+    s1 = jnp.einsum("...gcd,...gcf->...gdf", k, vh)
+    s0 = jnp.sum(vh, axis=-2, keepdims=True)
+    return s2, s1, s0
+
+
+def causal_taylorshift(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    tau: jnp.ndarray | float = 1.0,
+    chunk: int = 128,
+    normalize_inputs: bool = True,
+    output_scale: bool = True,
+    initial_state: TaylorState | None = None,
+    return_state: bool = False,
+    state_sharder=None,
+):
+    """Chunkwise-parallel causal efficient-TaylorShift.
+
+    q, k, v: (..., N, d) with N divisible by ``chunk`` (pad upstream).
+    ``initial_state`` continues from previous context (chunked prefill).
+
+    State convention (shared with :func:`taylor_decode_step`): raw,
+    *unnormalized* prefix sums in fp32 with ones-column = 1. Algorithm 1's
+    1/N factor cancels in nom/denom; the sqrt(N/d) output scaling is
+    applied per-row with the row's true context length, matching what the
+    decode step produces token by token.
+    """
+    *lead, N, d = q.shape
+    assert N % chunk == 0, f"N={N} must be divisible by chunk={chunk}"
+    G = N // chunk
+    alpha = d ** 0.25
+    if normalize_inputs:
+        q, k = normalize_qk(q, k, tau)
+    q = (q * alpha).astype(jnp.float32)
+    k = (k * alpha).astype(jnp.float32)
+    n_prev = (initial_state.n if initial_state is not None
+              else jnp.zeros((), jnp.int32))
+    ones = jnp.ones((*v.shape[:-1], 1), jnp.float32)
+    vh = jnp.concatenate([ones, v.astype(jnp.float32)], axis=-1)
+
+    # k/v may have broadcastable lead dims (GQA: (B, KV, 1, N, d) against
+    # q's (B, KV, G_q, N, d)) — reshape each with its own leads.
+    klead = k.shape[:-2]
+    vlead = vh.shape[:-2]
+    qg = q.reshape(*lead, G, chunk, d)
+    kg = k.reshape(*klead, G, chunk, d)
+    vg = vh.reshape(*vlead, G, chunk, d + 1)
+
+    slead = klead  # state lead = k's lead (shared across GQA groups)
+    if initial_state is not None:
+        s2_0 = jnp.broadcast_to(initial_state.s2,
+                                (*slead, d * d, d + 1)).astype(jnp.float32)
+        s1_0 = jnp.broadcast_to(initial_state.s1,
+                                (*slead, d, d + 1)).astype(jnp.float32)
+        s0_0 = jnp.broadcast_to(initial_state.s0,
+                                (*slead, 1, d + 1)).astype(jnp.float32)
+    else:
+        s2_0 = jnp.zeros((*slead, d * d, d + 1), jnp.float32)
+        s1_0 = jnp.zeros((*slead, d, d + 1), jnp.float32)
+        s0_0 = jnp.zeros((*slead, 1, d + 1), jnp.float32)
+
+    cm = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    gax = len(lead)
+
+    def chunk_body(carry, inp):
+        """One chunk: inter-chunk readout from the running state + masked
+        intra-chunk direct term; then absorb this chunk into the state.
+        Streaming (lax.scan) keeps exactly ONE (d², d+1) state live —
+        materializing all N/C prefix states costs O(B·KV·(N/C)·d³) bytes,
+        which at d=128 dominated HBM (§Perf iteration 5)."""
+        s2, s1, s0 = carry
+        qc, kc, vc = inp                       # (*lead, chunk, d/d+1)
+        y = 0.5 * jnp.einsum("...ce,...ef->...cf", boxtimes(qc, qc), s2)
+        y += (alpha**2) * jnp.einsum("...cd,...df->...cf", qc, s1)
+        y += (alpha**4) * s0
+        # intra-chunk: q,k are alpha-scaled, so the Taylor numerator
+        # alpha^4*(1 + x_u + x_u^2/2) becomes x^2/2 + alpha^2 x + alpha^4
+        # (Alg. 1 line 9 coefficients).
+        x = jnp.einsum("...cd,...ed->...ce", qc, kc)
+        a = 0.5 * x * x + (alpha**2) * x + alpha**4
+        a = jnp.where(cm, a, 0.0)
+        y += jnp.einsum("...ce,...ef->...cf", a, vc)
+        s2 = s2 + jnp.einsum("...ce,...cf->...ef", boxtimes(kc, kc), vc)
+        s1 = s1 + jnp.einsum("...cd,...cf->...df", kc, vc)
+        s0 = s0 + jnp.sum(vc, axis=-2, keepdims=True)
+        if state_sharder is not None:
+            s2 = state_sharder(s2)
+        return (s2, s1, s0), y
+
+    move = lambda t: jnp.moveaxis(t, gax, 0)
+    (s2, s1, s0), ys = jax.lax.scan(
+        chunk_body, (s2_0, s1_0, s0_0),
+        (move(qg), move(kg), move(vg)))
+    y_hat = jnp.moveaxis(ys, 0, gax).reshape(*lead, N, d + 1)
+
+    denom, nom = y_hat[..., :1], y_hat[..., 1:]
+    y = nom / denom
+    if output_scale:
+        counts = n_prev.astype(jnp.float32) + jnp.arange(1, N + 1,
+                                                         dtype=jnp.float32)
+        y = y * jnp.sqrt(counts / d)[..., :, None]
+    y = y.astype(v.dtype)
+    if not return_state:
+        return y
+    state = TaylorState(s2=s2, s1=s1, s0=s0, n=n_prev + N)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Recurrent decode — one token, O(d^2 (d+1)), constant memory
+# ---------------------------------------------------------------------------
+
+def taylor_decode_step(
+    state: TaylorState,
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    tau: jnp.ndarray | float = 1.0,
+    normalize_inputs: bool = True,
+    output_scale: bool = True,
+):
+    """Absorb one (k, v) into the state and attend with one q.
+
+    q, k, v: (..., 1, d). State tensors are *unnormalized* sums (the 1/N
+    of Algorithm 1 cancels in the division; we apply only the output
+    scaling column explicitly). Returns (y, new_state), y: (..., 1, d).
+    """
+    d = q.shape[-1]
+    alpha = d ** 0.25
+    if normalize_inputs:
+        q, k = normalize_qk(q, k, tau)
+    q = (q * alpha).astype(jnp.float32)
+    k = (k * alpha).astype(jnp.float32)
+    ones = jnp.ones((*v.shape[:-1], 1), jnp.float32)
+    vh = jnp.concatenate([ones, v.astype(jnp.float32)], axis=-1)  # (...,1,d+1)
+
+    s2 = state.s2 + jnp.einsum("...ce,...cf->...ef", boxtimes(k, k), vh)
+    s1 = state.s1 + jnp.einsum("...cd,...cf->...df", k, vh)
+    s0 = state.s0 + vh
+    n = state.n + 1
+
+    y_hat = 0.5 * jnp.einsum("...ce,...ef->...cf", boxtimes(q, q), s2)
+    y_hat += (alpha**2) * jnp.einsum("...cd,...df->...cf", q, s1)
+    y_hat += (alpha**4) * s0
+    denom, nom = y_hat[..., :1], y_hat[..., 1:]
+    y = nom / denom
+    if output_scale:
+        y = y * jnp.sqrt(n.astype(jnp.float32) / d)
+    return y.astype(v.dtype), TaylorState(s2=s2, s1=s1, s0=s0, n=n)
+
+
+def taylor_encode_state(
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    normalize_inputs: bool = True,
+) -> TaylorState:
+    """Summarize a key/value set into a TaylorState without attending.
+
+    Used for cross-attention serving (whisper): the encoder's K/V are
+    folded into a constant-size state once; every decode step is then a
+    :func:`taylor_readout`. k, v: (..., M, d).
+    """
+    d = k.shape[-1]
+    alpha = d ** 0.25
+    if normalize_inputs:
+        k = l2_normalize(k)
+    k = (k * alpha).astype(jnp.float32)
+    ones = jnp.ones((*v.shape[:-1], 1), jnp.float32)
+    vh = jnp.concatenate([ones, v.astype(jnp.float32)], axis=-1)
+    return TaylorState(
+        s2=jnp.einsum("...me,...mf->...ef", boxtimes(k, k), vh),
+        s1=jnp.einsum("...md,...mf->...df", k, vh),
+        s0=jnp.sum(vh, axis=-2, keepdims=True),
+        n=jnp.asarray(k.shape[-2], jnp.int32),
+    )
+
+
+def taylor_readout(
+    state: TaylorState,
+    q: jnp.ndarray,
+    *,
+    tau: jnp.ndarray | float = 1.0,
+    normalize_inputs: bool = True,
+    output_scale: bool = True,
+) -> jnp.ndarray:
+    """Attend with q over a frozen TaylorState (no update). q: (..., T, d)."""
+    d = q.shape[-1]
+    alpha = d ** 0.25
+    if normalize_inputs:
+        q = l2_normalize(q) * tau
+    q = (q * alpha).astype(jnp.float32)
+    y_hat = 0.5 * jnp.einsum("...te,...ef->...tf", boxtimes(q, q), state.s2)
+    y_hat += (alpha**2) * jnp.einsum("...td,...df->...tf", q, state.s1)
+    y_hat += (alpha**4) * state.s0
+    denom, nom = y_hat[..., :1], y_hat[..., 1:]
+    y = nom / denom
+    if output_scale:
+        y = y * jnp.sqrt(state.n.astype(jnp.float32) / d)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Causal direct (oracle for the causal variants) and auto dispatch
+# ---------------------------------------------------------------------------
+
+def causal_direct_taylorshift(q, k, v, *, tau=1.0, normalize_inputs=True,
+                              output_scale=True):
+    """O(N²d) masked direct form — oracle for causal_taylorshift.
+
+    Output scaling uses per-row context counts sqrt((i+1)/d), matching
+    both the chunked and the recurrent decode conventions exactly.
+    """
+    return direct_taylorshift(q, k, v, tau=tau, causal=True,
+                              normalize_inputs=normalize_inputs,
+                              output_scale=output_scale)
+
+
+def taylorshift_attention(q, k, v, *, tau=1.0, causal=False, mode="auto",
+                          chunk=128, normalize_inputs=True, output_scale=True):
+    """Front door: dispatches on mode ∈ {auto, direct, efficient}."""
+    N, d = q.shape[-2], q.shape[-1]
+    if mode == "auto":
+        mode = pick_mode(N, d)
+    if mode == "direct":
+        return direct_taylorshift(q, k, v, tau=tau, causal=causal,
+                                  normalize_inputs=normalize_inputs,
+                                  output_scale=output_scale)
+    if causal:
+        c = min(chunk, N)
+        while N % c:
+            c //= 2
+        return causal_taylorshift(q, k, v, tau=tau, chunk=max(c, 1),
+                                  normalize_inputs=normalize_inputs,
+                                  output_scale=output_scale)
+    return efficient_taylorshift(q, k, v, tau=tau,
+                                 normalize_inputs=normalize_inputs,
+                                 output_scale=output_scale)

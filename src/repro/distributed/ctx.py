@@ -1,0 +1,144 @@
+"""Ambient sharding context for activation constraints inside model code.
+
+Model code calls ``constrain(x, spec_fn)`` at strategic points; with no
+mesh configured these are no-ops, so tests/benches on a single device are
+unaffected. The launch layer activates the context for dryrun/train/serve.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    enabled: bool = False
+    dp: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    mesh: object | None = None
+    sp_carry: bool = True     # Megatron-SP carry sharding (d_model@model)
+
+    @property
+    def dp_spec(self):
+        return tuple(self.dp) if len(self.dp) > 1 else self.dp[0]
+
+
+_CTX = ShardCtx()
+
+
+def get() -> ShardCtx:
+    return _CTX
+
+
+@contextlib.contextmanager
+def use(mesh, *, sp_carry: bool = True):
+    """Activate activation-sharding constraints for this mesh."""
+    global _CTX
+    prev = _CTX
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    _CTX = ShardCtx(enabled=True, dp=dp, mesh=mesh, sp_carry=sp_carry)
+    try:
+        yield _CTX
+    finally:
+        _CTX = prev
+
+
+def _divisible(dim: int, *axes) -> bool:
+    if _CTX.mesh is None:
+        return False
+    size = 1
+    for a in axes:
+        for name in (a if isinstance(a, tuple) else (a,)):
+            size *= _CTX.mesh.shape[name]
+    return dim % size == 0 and dim >= size
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint if the context is active and divisible."""
+    if not _CTX.enabled:
+        return x
+    clean = []
+    for dim, s in zip(x.shape, spec):
+        if s is None:
+            clean.append(None)
+        elif _divisible(dim, s):
+            clean.append(s)
+        else:
+            clean.append(None)
+    clean += [None] * (len(x.shape) - len(clean))
+    return jax.lax.with_sharding_constraint(x, P(*clean))
+
+
+def activations(x):
+    """(B, N, d) activation sharding: batch over dp, d_model over 'model'.
+
+    Sharding the layer-scan carry over 'model' (Megatron-SP style) is what
+    keeps the remat-saved residual stream at n_layers·B·N·d/(dp·tp) per
+    device instead of n_layers·B·N·d/dp — the dominant training buffer.
+    Forward: reduce-scatter onto d; backward: pinned bf16 all-gather.
+    """
+    if not _CTX.enabled:
+        return x
+    carry = "model" if _CTX.sp_carry else None
+    f = _boundary_fwd_bwd(
+        lambda t: _spec_or_none(t, _CTX.dp_spec, None, carry),
+        lambda t: _spec_or_none(t, _CTX.dp_spec, None, None),
+    )(x.dtype)
+    return f(x)
+
+
+def _spec_or_none(x, *spec):
+    clean = []
+    for dim, s in zip(x.shape, spec):
+        clean.append(s if (s is None or _divisible(dim, s)) else None)
+    clean += [None] * (len(x.shape) - len(clean))
+    return P(*clean)
+
+
+def _boundary_fwd_bwd(fwd_spec_fn, bwd_spec_fn):
+    """A sharding boundary with PINNED collectives in both directions.
+
+    Forward: constrain to fwd_spec (e.g. all-gather the feature dim).
+    Backward: cast the cotangent to the primal dtype (bf16) and constrain
+    to bwd_spec (e.g. reduce-scatter back onto the feature dim). Without
+    this, GSPMD transposes the forward all-gather into an fp32
+    all-reduce of the cotangent — 4× the wire bytes of a bf16
+    reduce-scatter (§Perf iteration 1).
+    """
+    def make(dtype):
+        @jax.custom_vjp
+        def f(x):
+            return jax.lax.with_sharding_constraint(x, fwd_spec_fn(x))
+
+        def fwd(x):
+            return f(x), ()
+
+        def bwd(_, g):
+            g = g.astype(dtype)
+            return (jax.lax.with_sharding_constraint(g, bwd_spec_fn(g)),)
+
+        f.defvjp(fwd, bwd)
+        return f
+    return make
+
+
+def gathered(x):
+    """Replicate the feature dim (explicit bf16 all-gather point).
+
+    Placed on the *post-norm, post-cast* tensor entering each dense
+    projection so GSPMD gathers 2-byte activations — without this it
+    gathers the norm's fp32 internals (2× the wire bytes). The backward
+    direction is pinned to a bf16 reduce-scatter.
+    """
+    if not _CTX.enabled:
+        return x
+    carry = "model" if _CTX.sp_carry else None
+    f = _boundary_fwd_bwd(
+        lambda t: _spec_or_none(t, _CTX.dp_spec, None, None),
+        lambda t: _spec_or_none(t, _CTX.dp_spec, None, carry),
+    )(x.dtype)
+    return f(x)

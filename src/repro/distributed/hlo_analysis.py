@@ -1,0 +1,132 @@
+"""HLO-level analysis: collective byte accounting + roofline terms.
+
+The compiled module (post-SPMD) is a per-device program, so every shape
+below is per-device. Wire-byte models per collective (ring algorithms):
+
+  all-reduce        2·B·(g-1)/g      (B = buffer bytes, g = group size)
+  all-gather        B_out·(g-1)/g
+  reduce-scatter    B_out·(g-1)
+  all-to-all        B·(g-1)/g
+  collective-permute B
+
+Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16,
+819 GB/s HBM, 50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2  # conservative default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    buffer_bytes: dict
+    wire_bytes_per_device: float
+
+    def as_dict(self):
+        return {"counts": self.counts, "buffer_bytes": self.buffer_bytes,
+                "wire_bytes_per_device": self.wire_bytes_per_device}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    buf: dict[str, int] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_str, op, _ = m.groups()
+        b = _shape_bytes(shape_str)
+        g = _group_size(line)
+        counts[op] = counts.get(op, 0) + 1
+        buf[op] = buf.get(op, 0) + b
+        if op == "all-reduce":
+            wire += 2 * b * (g - 1) / g
+        elif op == "all-gather":
+            wire += b * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire += b * (g - 1)
+        elif op == "all-to-all":
+            wire += b * (g - 1) / g
+        else:  # collective-permute
+            wire += b
+    return CollectiveStats(counts, buf, wire)
+
+
+def roofline_terms(cost: dict, coll: CollectiveStats) -> dict:
+    """Three per-device roofline times (seconds)."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    bytes_lower = float(cost.get("bytes_out", bytes_hbm))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_hbm / HBM_BW
+    t_memory_lower = bytes_lower / HBM_BW
+    t_collective = coll.wire_bytes_per_device / LINK_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)),
+        key=lambda kv: kv[1])[0]
+    bound = max(t_compute, t_memory, t_collective)
+    return {
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": bytes_hbm,
+        "wire_bytes_per_device": coll.wire_bytes_per_device,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_lower_s": t_memory_lower,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "roofline_bound_s": bound,
+        "compute_fraction_of_bound": t_compute / bound if bound else 0.0,
+    }
+
+
+def count_hlo_ops(hlo_text: str, *patterns: str) -> dict[str, int]:
+    out = {}
+    for p in patterns:
+        out[p] = len(re.findall(rf"\b{re.escape(p)}", hlo_text))
+    return out

@@ -1,0 +1,204 @@
+"""Sharding rules: param-tree paths → PartitionSpec (MaxText-style).
+
+Parameters get semantic rules (contraction-aware TP/EP placement);
+caches/optimizer extras use a greedy divisibility-based sharder (any
+placement is *correct* under GSPMD — the rules only control memory and
+collective traffic).
+
+ZeRO-1: optimizer moments/master get the param's spec plus the ``data``
+axis on the first still-unsharded, divisible dimension.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+
+# (regex over 'a/b/c' tree path) -> spec for the *trailing* dims;
+# stacked leading layer dims are padded with None automatically.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed/emb$",                    ("model", None)),
+    (r"(wq|wk|wv)/w$",                 (None, "model")),
+    (r"wo/w$",                         ("model", None)),
+    (r"(up|gate)/w$",                  (None, "model")),
+    (r"down/w$",                       ("model", None)),
+    (r"unembed/w$",                    (None, "model")),
+    (r"router/w$",                     (None, None)),
+    (r"w_(up|gate)$",                  ("model", None, "data")),   # MoE EP
+    (r"w_down$",                       ("model", "data", None)),
+    (r"shared/(up|gate)/w$",           (None, "model")),
+    (r"shared/down/w$",                ("model", None)),
+    (r"in_proj/w$",                    (None, "model")),
+    (r"out_proj/w$",                   ("model", None)),
+    (r"conv_w$",                       (None, "model")),
+    (r"(A_log|D|dt_bias)$",            ("model",)),
+    (r"(up_proj|w_gates|r_gates)/w$",  (None, "model")),
+    (r"down_proj/w$",                  ("model", None)),
+    (r"w_if/w$",                       (None, None)),
+    (r"pos/pos$",                      (None, None)),
+    (r"tau$",                          (None,)),
+    (r"(scale|bias)$",                 (None,)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    return dim % size == 0
+
+
+def _spec_for_param(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    # --- MoE expert weights: EP when E divides 'model', else FSDP-style
+    # 2D weight sharding with just-in-time all-gather over 'data'
+    # (DESIGN.md §5; grok-1 has 8 experts on 16-way model axes). ---
+    m = re.search(r"w_(up|gate|down)$", path)
+    if m and len(shape) >= 3:
+        E = shape[-3]
+        if E % mesh.shape["model"] == 0:
+            trailing = (("model", None, "data") if m.group(1) in ("up", "gate")
+                        else ("model", "data", None))
+        else:
+            trailing = ((None, "data", "model") if m.group(1) in ("up", "gate")
+                        else (None, "model", "data"))
+        spec = [None] * (len(shape) - 3) + list(trailing)
+        spec = [s if (s is None or _fits(shape[i], mesh, s)) else None
+                for i, s in enumerate(spec)]
+        return P(*spec)
+
+    for pat, trailing in _PARAM_RULES:
+        if re.search(pat, path):
+            spec = list(trailing)
+            # pad for stacked layer dims
+            while len(spec) < len(shape):
+                spec.insert(0, None)
+            spec = spec[-len(shape):] if len(spec) > len(shape) else spec
+            # drop axes that don't divide (grok's 8 experts on 16 devices
+            # would pad 2x — prefer dropping to silent padding for params)
+            spec = [s if (s is None or _fits(shape[i], mesh, s)) else None
+                    for i, s in enumerate(spec)]
+            return P(*spec)
+    return P()  # replicate
+
+
+def param_shardings(shapes_tree, mesh: Mesh):
+    """Tree of NamedShardings matching an eval_shape'd param tree."""
+    def one(path, leaf):
+        return NamedSharding(mesh, _spec_for_param(_path_str(path),
+                                                   leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, shapes_tree)
+
+
+# ---------------------------------------------------------------------------
+# Greedy sharder for caches / activations-like trees
+# ---------------------------------------------------------------------------
+
+def greedy_spec(shape: tuple[int, ...], mesh: Mesh, *,
+                batch_dim: int | None = None, skip_dims: tuple = ()) -> P:
+    """Shard batch_dim over dp axes if divisible, then the largest
+    remaining dim over 'model'."""
+    spec: list = [None] * len(shape)
+    dp = dp_axes(mesh)
+    used_model = False
+    if batch_dim is not None and len(shape) > batch_dim:
+        if _fits(shape[batch_dim], mesh, tuple(dp)) and shape[batch_dim] > 1:
+            spec[batch_dim] = tuple(dp) if len(dp) > 1 else dp[0]
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if spec[i] is not None or i == batch_dim or i in skip_dims:
+            continue
+        if not used_model and shape[i] >= mesh.shape["model"] \
+                and shape[i] % mesh.shape["model"] == 0:
+            spec[i] = "model"
+            used_model = True
+    return P(*spec)
+
+
+def cache_shardings(cache_tree, mesh: Mesh, *, stacked: bool = True):
+    """Decode-cache tree: leading layer-stack dim (if any) replicated,
+    batch dim sharded over dp, biggest dim over model.
+
+    Leaf name heuristics:
+      TaylorState.s2 (…, d², d+1): shard d² over model — universal since
+      d ≡ 0 (mod 4) ⇒ d² ≡ 0 (mod 16); this is also what makes batch=1
+      long_500k shardable at all.
+    """
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        base = 1 if stacked and nd > 1 else 0   # skip layer-stack dim
+        if re.search(r"s2$", ps) and nd >= 2:
+            spec = [None] * nd
+            if shape[base] > 1:
+                dp = dp_axes(mesh)
+                if _fits(shape[base], mesh, tuple(dp)):
+                    spec[base] = tuple(dp) if len(dp) > 1 else dp[0]
+            if shape[-2] % mesh.shape["model"] == 0:
+                spec[-2] = "model"
+            return NamedSharding(mesh, P(*spec))
+        spec = greedy_spec(shape[base:], mesh, batch_dim=0)
+        full = [None] * base + list(spec)
+        return NamedSharding(mesh, P(*full))
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    """Input batches: dim 0 over dp axes, rest replicated."""
+    dp = dp_axes(mesh)
+    dpspec = tuple(dp) if len(dp) > 1 else dp[0]
+
+    def one(leaf):
+        if leaf.shape and leaf.shape[0] > 1 and _fits(leaf.shape[0], mesh,
+                                                      tuple(dp)):
+            return NamedSharding(mesh, P(dpspec, *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def zero1_shardings(param_shardings_tree, shapes_tree, mesh: Mesh):
+    """Optimizer-state sharding: param spec + 'data' on the first
+    unsharded divisible dim (ZeRO-1)."""
+    def one(sh, leaf):
+        spec = list(sh.spec) + [None] * (len(leaf.shape) - len(sh.spec))
+        used = set()
+        for s in spec:
+            for a in (s if isinstance(s, tuple) else (s,)):
+                if a:
+                    used.add(a)
+        if "data" not in used:
+            for i, s in enumerate(spec):
+                if s is None and leaf.shape[i] % mesh.shape["data"] == 0 \
+                        and leaf.shape[i] >= mesh.shape["data"]:
+                    spec[i] = "data"
+                    break
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(one, param_shardings_tree, shapes_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,78 @@
+"""Jitted wrappers around the Pallas TaylorShift kernels.
+
+These are the entry points the attention layer uses when
+``cfg.taylor.use_kernel`` is set: they apply Algorithm 1's input
+normalization (ℓ2 + temperature τ + α-scaling) in plain JAX, reshape
+(B, H, N, d) → (BH, N, d), and dispatch to the kernels. On non-TPU
+backends they run the kernels in interpret mode (Python execution of the
+kernel body) so correctness is testable anywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taylor as T
+from repro.kernels.taylor_direct import taylor_direct_attention
+from repro.kernels.taylor_efficient import taylor_efficient_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _flatten_heads(x):
+    b, h, n, d = x.shape
+    return x.reshape(b * h, n, d)
+
+
+def _prep(q, k, tau):
+    d = q.shape[-1]
+    alpha = d ** 0.25
+    q, k = T.normalize_qk(q, k, tau)
+    return (q * alpha).astype(jnp.float32), (k * alpha).astype(jnp.float32)
+
+
+def taylor_attention_kernel(q, k, v, *, tau=1.0, causal: bool = False,
+                            mode: str = "auto", out_scale: bool = True,
+                            block_q: int = 128, block_k: int = 128,
+                            interpret: bool | None = None):
+    """Fused TaylorShift attention. q,k,v: (B, H, N, d) raw.
+
+    mode: auto → paper crossover N0(d); causal currently implies the
+    direct kernel (the chunked-causal efficient form stays in core/).
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    b, h, n, d = q.shape
+    if mode == "auto":
+        mode = T.pick_mode(n, d)
+    if causal:
+        mode = "direct"
+    qs, ks = _prep(q, k, tau)
+    qf = _flatten_heads(qs)
+    kf = _flatten_heads(ks)
+    vf = _flatten_heads(v)
+    bq = _good_block(n, block_q)
+    bk = _good_block(k.shape[2], block_k)
+    if mode == "direct":
+        y = taylor_direct_attention(qf, kf, vf, causal=causal, block_q=bq,
+                                    block_k=bk, out_scale=out_scale,
+                                    interpret=interp)
+    else:
+        y = taylor_efficient_attention(qf, kf, vf, block_q=bq, block_k=bk,
+                                       out_scale=out_scale, interpret=interp)
+    return y.reshape(b, h, n, d)
+
+
+def _good_block(n: int, want: int) -> int:
+    b = min(want, n)
+    while n % b:
+        b -= 1
+    return max(b, 1)
+
+
+__all__ = ["taylor_attention_kernel", "taylor_direct_attention",
+           "taylor_efficient_attention"]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These delegate to repro.core.taylor — the reference implementations that
+tests/test_taylor_core.py already proves equivalent to each other and to
+the paper's Algorithm 1. Kernel tests assert allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import taylor as T
+
+
+def direct_ref(q, k, v, *, tau=1.0, causal=False, out_scale=True):
+    """q,k,v: (BH, N, d) raw (un-normalized)."""
+    return T.direct_taylorshift(q, k, v, tau=tau, causal=causal,
+                                normalize_inputs=True,
+                                output_scale=out_scale)
+
+
+def efficient_ref(q, k, v, *, tau=1.0, out_scale=True):
+    return T.efficient_taylorshift(q, k, v, tau=tau, normalize_inputs=True,
+                                   output_scale=out_scale)
+
+
+def amod_ref(k_scaled, v):
+    """A_mod = (K^⊠2)ᵀ V̂ for already α-scaled k. (BH, N, d) -> (BH, d², d+1)."""
+    ones = jnp.ones((*v.shape[:-1], 1), jnp.float32)
+    vh = jnp.concatenate([ones, v.astype(jnp.float32)], axis=-1)
+    k2 = T.boxtimes(k_scaled.astype(jnp.float32), k_scaled.astype(jnp.float32))
+    return jnp.einsum("bne,bnf->bef", k2, vh)

@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces (results/dryrun/<arch>__<shape>__<mesh>.json):
+  * memory_analysis  — proves the cell fits per-device HBM
+  * cost_analysis    — per-device FLOPs / bytes for §Roofline
+  * collective stats — parsed from compiled HLO (wire-byte model)
+  * roofline terms   — compute / memory / collective seconds + dominant
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --force
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed import ctx
+from repro.distributed import hlo_analysis as H
+from repro.distributed import hlo_cost as HC
+from repro.launch import shapes as SH
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.models import model as M
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def model_flops_for_cell(cfg, cell_name: str) -> float:
+    """MODEL_FLOPS: 6·N_active·tokens (train) / 2·N_active·tokens (fwd)."""
+    cell = SH.SHAPE_CELLS[cell_name]
+    n_active = M.count_params_analytic(cfg, active_only=True)
+    if cfg.family == "encdec":
+        tokens = cell.global_batch * (
+            cfg.decoder_len if cell.kind == "train" else 1)
+        if cell.kind != "decode":
+            tokens += cell.global_batch * cell.seq_len  # encoder frames
+    else:
+        tokens = cell.global_batch * (1 if cell.kind == "decode"
+                                      else cell.seq_len)
+    mult = 6 if cell.kind == "train" else 2
+    return float(mult * n_active * tokens)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, force: bool = False,
+             out_dir: str = RESULTS_DIR, cache_kind: str = "taylor",
+             variant: str = "", config_edit=None,
+             sp_carry: bool = True, microbatches: int = 1) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape}__{mesh_kind}" + (f"__{variant}" if variant else "")
+    path = os.path.join(out_dir, f"{tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+              "variant": variant, "status": "error"}
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        cfg = get_config(arch)
+        if config_edit is not None:
+            cfg = config_edit(cfg)
+        with mesh, ctx.use(mesh, sp_carry=sp_carry):
+            jitted, args, cfg_used = build_cell(cfg, shape, mesh,
+                                                cache_kind=cache_kind,
+                                                microbatches=microbatches)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        # Loop-aware cost model (XLA's cost_analysis counts scan bodies
+        # once; ours multiplies by known_trip_count — see hlo_cost.py).
+        lc = HC.analyze(hlo)
+        coll = H.CollectiveStats(
+            counts=lc["coll_counts"], buffer_bytes=lc["coll_buffer_bytes"],
+            wire_bytes_per_device=lc["coll_wire_bytes"])
+        terms = H.roofline_terms(
+            {"flops": lc["flops"], "bytes accessed": lc["bytes"],
+             "bytes_out": lc["bytes_out"]}, coll)
+        terms["xla_cost_analysis_flops_scan_once"] = float(
+            cost.get("flops", 0.0))
+        n_dev = mesh.size
+        mf = model_flops_for_cell(cfg_used, shape)
+        hlo_flops_global = terms["flops_per_device"] * n_dev
+        record.update({
+            "status": "ok",
+            "n_devices": n_dev,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", 0),
+                "peak_bytes_estimate": (
+                    getattr(mem, "argument_size_in_bytes", 0)
+                    + getattr(mem, "output_size_in_bytes", 0)
+                    + getattr(mem, "temp_size_in_bytes", 0)),
+            },
+            "collectives": coll.as_dict(),
+            "roofline": terms,
+            "model_flops_global": mf,
+            "hlo_flops_global": hlo_flops_global,
+            "model_to_hlo_flops": (mf / hlo_flops_global
+                                   if hlo_flops_global else 0.0),
+            "params_total": M.count_params_analytic(cfg_used),
+            "params_active": M.count_params_analytic(cfg_used,
+                                                     active_only=True),
+        })
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    record["wall_s"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    choices=["all", *SH.SHAPE_CELLS.keys()])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--cache-kind", default="taylor",
+                    choices=["taylor", "kv"])
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SH.SHAPE_CELLS) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, force=args.force,
+                               cache_kind=args.cache_kind)
+                ok = rec["status"] == "ok"
+                n_ok += ok
+                n_fail += (not ok)
+                msg = (f"[{'ok' if ok else 'FAIL'}] {arch} {shape} "
+                       f"{mesh_kind} ({rec.get('wall_s', '?')}s)")
+                if ok:
+                    r = rec["roofline"]
+                    msg += (f" dominant={r['dominant']}"
+                            f" t_c={r['t_compute_s']:.3e}"
+                            f" t_m={r['t_memory_s']:.3e}"
+                            f" t_x={r['t_collective_s']:.3e}")
+                else:
+                    msg += " " + rec.get("error", "")[:160]
+                print(msg, flush=True)
+    print(f"dryrun complete: {n_ok} ok, {n_fail} failed", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input specs.
+
+Four cells per architecture (40 total):
+  train_4k     seq_len=4096    global_batch=256   -> train_step
+  prefill_32k  seq_len=32768   global_batch=32    -> prefill_step
+  decode_32k   seq_len=32768   global_batch=128   -> serve_step (1 token,
+                                                     cache of seq_len)
+  long_500k    seq_len=524288  global_batch=1     -> serve_step
+
+``long_500k`` runs for ALL archs here: efficient-TaylorShift gives every
+attention architecture a constant-size decode state (DESIGN.md §6), and
+the SSM/xLSTM archs use their native states.
+
+Per-family interpretation (DESIGN.md):
+  encdec  — seq_len = encoder frames (train/prefill, mel-stub features) or
+            decoder cache length (decode shapes; encoder fixed at 1500).
+  vlm     — n_patches stub embeddings + (seq_len - n_patches) text tokens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+N_MELS = 128  # whisper stub frontend feature dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+SHAPE_CELLS = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def adapt_config(cfg: ModelConfig, cell: ShapeCell) -> ModelConfig:
+    """Shape-dependent config tweaks (learned-pos table size, etc.)."""
+    kw = {}
+    if cfg.pos_embed == "learned":
+        kw["max_seq_len"] = max(cfg.max_seq_len, cell.seq_len + 1)
+    if cell.kind != "train":
+        kw["remat"] = False
+    return cfg.with_(**kw) if kw else cfg
+
+
+def train_input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    B, N = cell.global_batch, cell.seq_len
+    if cfg.family == "encdec":
+        return {
+            "frames": sds((B, N, N_MELS), jnp.bfloat16),
+            "tokens": sds((B, cfg.decoder_len), jnp.int32),
+            "labels": sds((B, cfg.decoder_len), jnp.int32),
+        }
+    if cfg.frontend == "vision_stub":
+        n_text = N - cfg.n_patches
+        return {
+            "patch_embeds": sds((B, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+            "tokens": sds((B, n_text), jnp.int32),
+            "labels": sds((B, n_text), jnp.int32),
+        }
+    return {
+        "tokens": sds((B, N), jnp.int32),
+        "labels": sds((B, N), jnp.int32),
+    }
+
+
+def prefill_input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    spec = train_input_specs(cfg, cell)
+    spec.pop("labels", None)
+    return spec
+
+
+def decode_input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    return {"tokens": sds((cell.global_batch, 1), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, cell_name: str) -> dict:
+    cell = SHAPE_CELLS[cell_name]
+    cfg = adapt_config(cfg, cell)
+    if cell.kind == "train":
+        return train_input_specs(cfg, cell)
+    if cell.kind == "prefill":
+        return prefill_input_specs(cfg, cell)
+    return decode_input_specs(cfg, cell)

@@ -1,0 +1,212 @@
+"""Step builders: train / prefill / serve, with their shardings.
+
+Everything here is mesh-aware but allocation-free: shapes come from
+``jax.eval_shape`` and shardings from distributed/sharding.py, so the
+dry-run can lower+compile 400B-parameter configurations on a CPU host.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as S
+from repro.launch import shapes as SH
+from repro.launch.mesh import dp_axes
+from repro.models import model as M
+from repro.optim import OptConfig, make_optimizer
+
+
+def default_opt_config(cfg: ModelConfig) -> OptConfig:
+    """Memory policy scales with model size (DESIGN.md §5)."""
+    n = M.count_params_analytic(cfg)
+    if n > 100e9:
+        return OptConfig(moment_dtype="bfloat16", master=False,
+                         stochastic_round=True)
+    if n > 20e9:
+        return OptConfig(moment_dtype="bfloat16")
+    return OptConfig()
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                     *, microbatches: int = 1):
+    """Train step with optional gradient accumulation.
+
+    ``microbatches > 1`` scans over batch slices, accumulating fp32
+    gradients — activation memory drops ~M× at the cost of M sequential
+    passes (the standard fit-the-HBM lever for the ≥300B MoE cells and
+    the §Perf stablelm `sp_carry=False` variant)."""
+    _, update = make_optimizer(opt_cfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: M.loss_fn(p, cfg, batch))(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def slice_mb(i):
+                return jax.tree.map(
+                    lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                        *x.shape[1:])[i], batch)
+
+            def body(carry, i):
+                acc, loss_acc = carry
+                loss_i, g_i = grads_of(params, slice_mb(i))
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, g_i)
+                return (acc, loss_acc + loss_i), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(microbatches))
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: (g / microbatches), gsum)
+        rng = jax.random.fold_in(jax.random.PRNGKey(17), opt_state["step"])
+        params, opt_state, metrics = update(params, grads, opt_state, rng=rng)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        hidden, _ = M.forward(params, cfg, batch)
+        logits = M.logits_from_hidden(params, cfg, hidden[:, -1:])
+        return logits
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch):
+        return M.decode_step(params, cfg, batch, cache)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(M.init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def opt_state_shapes(cfg: ModelConfig, opt_cfg: OptConfig, pshapes):
+    init_opt, _ = make_optimizer(opt_cfg)
+    return jax.eval_shape(init_opt, pshapes)
+
+
+def opt_state_shardings(cfg, opt_cfg, pshapes, pshardings, mesh):
+    """mu/nu/master: ZeRO-1 (param spec + data axis); step: replicated."""
+    oshapes = opt_state_shapes(cfg, opt_cfg, pshapes)
+    out = {}
+    for k, v in oshapes.items():
+        if k == "step":
+            out[k] = S.replicated(mesh)
+        else:
+            out[k] = S.zero1_shardings(pshardings, v, mesh)
+    return out
+
+
+def model_cache_shardings(cache_shapes, mesh):
+    """Shardings for the model-level decode cache pytree."""
+    out: dict[str, Any] = {}
+    out["groups"] = [S.cache_shardings(g, mesh, stacked=True)
+                     for g in cache_shapes["groups"]]
+    out["rem"] = [S.cache_shardings(r, mesh, stacked=False)
+                  for r in cache_shapes["rem"]]
+    out["pos"] = S.replicated(mesh)
+    if "cross" in cache_shapes:
+        out["cross"] = S.cache_shardings(cache_shapes["cross"], mesh,
+                                         stacked=True)
+    return out
+
+
+def logits_sharding(cfg: ModelConfig, mesh, batch: int = 0):
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    dpspec = (tuple(dp) if len(dp) > 1 else dp[0]) \
+        if (batch == 0 or batch % dp_size == 0) and batch != 1 else None
+    vspec = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+    return NamedSharding(mesh, P(dpspec, None, vspec))
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly: everything dryrun/train/serve needs for one (arch, shape)
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ModelConfig, cell_name: str, mesh, *,
+               cache_kind: str = "taylor", microbatches: int = 1):
+    """Returns (jitted_fn, example_args) where every arg is a
+    ShapeDtypeStruct with sharding attached — ready to .lower()."""
+    cell = SH.SHAPE_CELLS[cell_name]
+    cfg = SH.adapt_config(cfg, cell)
+    pshapes = param_shapes(cfg)
+    pshard = S.param_shardings(pshapes, mesh)
+    batch = SH.input_specs(cfg, cell_name)
+    bshard = S.batch_shardings(batch, mesh)
+
+    def with_sharding(shapes, shardings):
+        return jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            shapes, shardings)
+
+    if cell.kind == "train":
+        opt_cfg = default_opt_config(cfg)
+        ostates = opt_state_shapes(cfg, opt_cfg, pshapes)
+        oshard = opt_state_shardings(cfg, opt_cfg, pshapes, pshard, mesh)
+        fn = build_train_step(cfg, opt_cfg, microbatches=microbatches)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, S.replicated(mesh)),
+            donate_argnums=(0, 1),
+        )
+        args = (with_sharding(pshapes, pshard),
+                with_sharding(ostates, oshard),
+                with_sharding(batch, bshard))
+        return jitted, args, cfg
+
+    if cell.kind == "prefill":
+        fn = build_prefill_step(cfg)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(pshard, bshard),
+            out_shardings=logits_sharding(cfg, mesh, cell.global_batch),
+        )
+        args = (with_sharding(pshapes, pshard), with_sharding(batch, bshard))
+        return jitted, args, cfg
+
+    # decode
+    cache_shapes = jax.eval_shape(
+        lambda: M.init_decode_state(cfg, cell.global_batch,
+                                    cache_len=cell.seq_len,
+                                    cache_kind=cache_kind))
+    cshard = model_cache_shardings(cache_shapes, mesh)
+    fn = build_serve_step(cfg)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(pshard, cshard, bshard),
+        out_shardings=(logits_sharding(cfg, mesh, cell.global_batch), cshard),
+        donate_argnums=(1,),
+    )
+    args = (with_sharding(pshapes, pshard),
+            with_sharding(cache_shapes, cshard),
+            with_sharding(batch, bshard))
+    return jitted, args, cfg

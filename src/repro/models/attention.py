@@ -1,0 +1,370 @@
+"""Multi-head attention with TaylorShift / softmax backends.
+
+The paper's technique is integrated as a first-class backend: every
+attention site (global causal, global non-causal, sliding-window local,
+cross-attention, and single-token decode) has a TaylorShift form, and the
+direct↔efficient choice follows the paper's N0/N1 crossover unless pinned
+by config.
+
+Caches for decode:
+  * ``kv``     — classic KV cache (softmax or direct-Taylor readout)
+  * ``taylor`` — constant-size TaylorState (efficient-Taylor readout);
+                 this is what makes ``long_500k`` feasible for
+                 full-attention architectures.
+  * local layers always use a bounded ring-buffer window cache.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import taylor as T
+from repro.distributed import ctx
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig) -> Params:
+    dh, H, KV = cfg.dim_head, cfg.n_heads, cfg.kv_heads
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    p: Params = {
+        "wq": L.dense_init(ks[0], cfg.d_model, H * dh, dt),
+        "wk": L.dense_init(ks[1], cfg.d_model, KV * dh, dt),
+        "wv": L.dense_init(ks[2], cfg.d_model, KV * dh, dt),
+        "wo": L.dense_init(ks[3], H * dh, cfg.d_model, dt),
+    }
+    if cfg.attn_backend == "taylor":
+        p["tau"] = jnp.full((H,), cfg.taylor.tau_init, jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(dh)
+        p["k_norm"] = L.rmsnorm_init(dh)
+    return p
+
+
+def _split_heads(x, n_heads, dh):
+    b, n, _ = x.shape
+    return x.reshape(b, n, n_heads, dh).transpose(0, 2, 1, 3)  # (B,H,N,dh)
+
+
+def _merge_heads(x):
+    b, h, n, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions, *, rope=True):
+    dh, H, KV = cfg.dim_head, cfg.n_heads, cfg.kv_heads
+    q = _split_heads(L.dense(params["wq"], x), H, dh)
+    k = _split_heads(L.dense(params["wk"], x), KV, dh)
+    v = _split_heads(L.dense(params["wv"], x), KV, dh)
+    if cfg.qk_norm:
+        q = L.rmsnorm(params["q_norm"], q)
+        k = L.rmsnorm(params["k_norm"], k)
+    if rope and cfg.pos_embed == "rope":
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _group_q(q, KV):
+    """(B,H,N,d) -> (B,KV,G,N,d) so Taylor states are per-kv-head."""
+    b, h, n, d = q.shape
+    return q.reshape(b, KV, h // KV, n, d)
+
+
+def _tau(params, cfg: ModelConfig, grouped: bool):
+    tau = params["tau"].astype(jnp.float32)
+    if grouped:
+        return tau.reshape(1, cfg.kv_heads, cfg.n_heads // cfg.kv_heads, 1, 1)
+    return tau.reshape(1, cfg.n_heads, 1, 1)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _softmax_attention(cfg, q, k, v, *, causal, window=0):
+    """Vanilla baseline (the paper's comparison target). GQA by repeat."""
+    b, h, n, d = q.shape
+    kv = k.shape[1]
+    if kv != h:
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    x = jnp.einsum("bhnd,bhmd->bhnm", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(d)
+    if cfg.softcap_attn:
+        x = L.softcap(x, cfg.softcap_attn)
+    m = k.shape[2]
+    if causal:
+        mask = jnp.tril(jnp.ones((n, m), bool), m - n)
+        if window:
+            mask &= jnp.triu(jnp.ones((n, m), bool), m - n - window + 1)
+        x = jnp.where(mask, x, -1e30)
+    a = jax.nn.softmax(x, axis=-1)
+    y = jnp.einsum("bhnm,bhmd->bhnd", a.astype(v.dtype), v)
+    return y
+
+
+def _sharding_aware_mode(cfg: ModelConfig, N: int, d: int) -> str:
+    """Paper crossover + a TPU-mesh twist (§Perf iteration 4).
+
+    The FLOP crossover N0(d) picks direct below ~d². But when the head
+    count doesn't divide the model axis, the direct form's (B,H,N,N)
+    score matrices end up partially replicated and PSUMed across the
+    mesh (~770 GB/step on llama4-maverick train_4k), while the efficient
+    form contracts over d² — always divisible by the mesh (d ≡ 0 mod 4 ⇒
+    16 | d²) — with only a (B,KV,N,d+1) psum. Wire bytes beat FLOPs at
+    256 chips, so prefer efficient whenever heads shard unevenly.
+    """
+    base = T.pick_mode(N, d)
+    c = ctx.get()
+    if base == "direct" and c.enabled and c.mesh is not None:
+        msize = c.mesh.shape["model"]
+        if cfg.n_heads % msize and (d * d) % msize == 0:
+            return "efficient"
+    return base
+
+
+def _taylor_global(cfg: ModelConfig, params, q, k, v, *, causal):
+    """Dispatch to direct / efficient / chunked-causal Taylor forms."""
+    tc = cfg.taylor
+    N, d = q.shape[-2], q.shape[-1]
+    mode = tc.mode
+    if mode == "auto":
+        # The sharding-aware override applies to NON-causal sites only:
+        # measured on maverick train_4k, the causal chunked-efficient form
+        # at d=128 pays more in (d², d+1)-state HBM/wire traffic than the
+        # direct form's uneven-head psum costs (§Perf iteration 4: napkin
+        # said win, measurement said regression — reverted for causal).
+        mode = (_sharding_aware_mode(cfg, N, d) if not causal
+                else T.pick_mode(N, d))
+    kv_heads = cfg.kv_heads
+    if mode == "direct":
+        # direct handles GQA by repeating K/V (it materializes NxN anyway).
+        if kv_heads != cfg.n_heads:
+            rep = cfg.n_heads // kv_heads
+            k = jnp.repeat(k, rep, axis=1)
+            v = jnp.repeat(v, rep, axis=1)
+        return T.direct_taylorshift(
+            q, k, v, tau=_tau(params, cfg, False), causal=causal,
+            normalize_inputs=tc.normalize_inputs, output_scale=tc.output_scale)
+    qg = _group_q(q, kv_heads)
+    kg, vg = k[:, :, None], v[:, :, None]
+    tau = _tau(params, cfg, True)
+    if causal:
+        # Cap chunk passes at 8: each pass re-reads the (d², d+1) state,
+        # so many small chunks are HBM-bound (§Perf iteration 5b).
+        chunk = min(max(tc.chunk, N // 8), N)
+        while N % chunk:
+            chunk //= 2
+        c = ctx.get()
+        sharder = None
+        if c.enabled:
+            dpspec = c.dp_spec
+            sharder = lambda s2: ctx.constrain(
+                s2, dpspec, None, *( [None] * (s2.ndim - 4) ), "model", None)
+        y = T.causal_taylorshift(
+            qg, kg, vg, tau=tau, chunk=max(chunk, 1),
+            normalize_inputs=tc.normalize_inputs,
+            output_scale=tc.output_scale, state_sharder=sharder)
+    else:
+        y = T.efficient_taylorshift(
+            qg, kg, vg, tau=tau,
+            normalize_inputs=tc.normalize_inputs,
+            output_scale=tc.output_scale)
+    return y.reshape(q.shape)
+
+
+def _local_taylor(cfg: ModelConfig, params, q, k, v):
+    """Causal sliding-window attention, blocked so cost is O(N·w).
+
+    Window w sits far below the paper's N0 crossover, so the *direct*
+    Taylor form is the paper-optimal choice here ("and Back").
+    Query block i attends key blocks i-1 and i with a banded mask.
+    """
+    w = cfg.window
+    b, h, n, d = q.shape
+    kv = k.shape[1]
+    if kv != h:
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if n <= w or n % w:
+        # Small or ragged sequences: banded direct form (O(N²), only hit
+        # far below the crossover / in tests).
+        qpos = jnp.arange(n)[:, None]
+        kpos = jnp.arange(n)[None, :]
+        band = (kpos <= qpos) & (kpos > qpos - w)
+        y = T.direct_taylorshift(
+            q, k, v, tau=_tau(params, cfg, False), causal=False, mask=band,
+            normalize_inputs=cfg.taylor.normalize_inputs, output_scale=False)
+        if cfg.taylor.output_scale:
+            counts = jnp.minimum(jnp.arange(1, n + 1), w).astype(jnp.float32)
+            y = y * jnp.sqrt(counts / d)[None, None, :, None]
+        return y
+    nb = n // w
+    tau = _tau(params, cfg, False)
+    tc = cfg.taylor
+    if tc.normalize_inputs:
+        q, k = T.normalize_qk(q, k, tau)
+    qb = q.reshape(b, h, nb, w, d)
+    kb = k.reshape(b, h, nb, w, d)
+    vb = v.reshape(b, h, nb, w, d)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :, :1]), kb[:, :, :-1]], 2)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :, :1]), vb[:, :, :-1]], 2)
+    kk = jnp.concatenate([k_prev, kb], axis=3)           # (B,H,nb,2w,d)
+    vv = jnp.concatenate([v_prev, vb], axis=3)
+    x = jnp.einsum("bhgqd,bhgkd->bhgqk", qb, kk,
+                   preferred_element_type=jnp.float32)
+    a = T.taylor_exp(x)
+    qpos = jnp.arange(w)[:, None]
+    kpos = jnp.arange(2 * w)[None, :] - w
+    band = (kpos <= qpos) & (kpos > qpos - w)            # exactly w keys
+    first_blk = jnp.arange(nb) == 0
+    valid = jnp.where(first_blk[:, None, None],
+                      (kpos >= 0) & (kpos <= qpos), band[None, :, :])
+    a = jnp.where(valid[None, None], a, 0.0)
+    denom = jnp.sum(a, axis=-1, keepdims=True)
+    y = jnp.einsum("bhgqk,bhgkd->bhgqd", a / denom, vv.astype(a.dtype))
+    if tc.output_scale:
+        counts = jnp.where(first_blk[:, None], qpos.T + 1, w).astype(jnp.float32)
+        y = y * jnp.sqrt(counts / d)[None, None, :, :, None]
+    return y.reshape(b, h, n, d).astype(v.dtype)
+
+
+def attn_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+               positions: jnp.ndarray, kind: str = "global",
+               causal: bool = True,
+               cross_kv: tuple[jnp.ndarray, jnp.ndarray] | None = None
+               ) -> jnp.ndarray:
+    """Full-sequence attention. x: (B, N, d_model)."""
+    q, k, v = _project_qkv(params, cfg, x, positions,
+                           rope=(cross_kv is None))
+    if cross_kv is not None:
+        k, v = cross_kv  # (B, KV, M, dh) — already projected by the encoder side
+        causal = False
+    if cfg.attn_backend == "softmax":
+        y = _softmax_attention(cfg, q, k, v, causal=causal,
+                               window=cfg.window if kind == "local" else 0)
+    elif kind == "local" and causal:
+        y = _local_taylor(cfg, params, q, k, v)
+    else:
+        y = _taylor_global(cfg, params, q, k, v, causal=causal)
+    return L.dense(params["wo"], _merge_heads(y).astype(x.dtype))
+
+
+def project_cross_kv(params: Params, cfg: ModelConfig,
+                     enc_out: jnp.ndarray):
+    """Project encoder outputs to (K, V) once for all decoder steps."""
+    dh, KV = cfg.dim_head, cfg.kv_heads
+    k = _split_heads(L.dense(params["wk"], enc_out), KV, dh)
+    v = _split_heads(L.dense(params["wv"], enc_out), KV, dh)
+    if cfg.qk_norm:
+        k = L.rmsnorm(params["k_norm"], k)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, *, kind: str, cache_len: int,
+               cache_kind: str = "taylor", dtype=jnp.bfloat16):
+    """Cache pytree for one attention layer."""
+    dh, KV = cfg.dim_head, cfg.kv_heads
+    if kind == "local":
+        w = cfg.window
+        return {
+            "k": jnp.zeros((batch, KV, w, dh), dtype),
+            "v": jnp.zeros((batch, KV, w, dh), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cache_kind == "taylor":
+        return T.TaylorState.zeros((batch, KV, 1), dh)
+    return {
+        "k": jnp.zeros((batch, KV, cache_len, dh), dtype),
+        "v": jnp.zeros((batch, KV, cache_len, dh), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def attn_decode(params: Params, cfg: ModelConfig, x: jnp.ndarray, cache,
+                *, kind: str = "global",
+                cross_state: T.TaylorState | None = None):
+    """One-token decode. x: (B, 1, d_model). Returns (y, new_cache)."""
+    if cross_state is not None:
+        # cross-attention readout from the frozen encoder Taylor state
+        dh, H, KV = cfg.dim_head, cfg.n_heads, cfg.kv_heads
+        q = _split_heads(L.dense(params["wq"], x), H, dh)
+        if cfg.qk_norm:
+            q = L.rmsnorm(params["q_norm"], q)
+        qg = _group_q(q, KV)
+        y = T.taylor_readout(cross_state, qg, tau=_tau(params, cfg, True),
+                             normalize_inputs=cfg.taylor.normalize_inputs,
+                             output_scale=cfg.taylor.output_scale)
+        y = y.reshape(q.shape).astype(x.dtype)
+        return L.dense(params["wo"], _merge_heads(y)), cache
+
+    is_taylor_state = isinstance(cache, T.TaylorState)
+    pos = cache.n if is_taylor_state else cache["pos"]
+    positions = pos[None]  # (1,)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+
+    if is_taylor_state:
+        qg, kg, vg = _group_q(q, cfg.kv_heads), k[:, :, None], v[:, :, None]
+        y, cache = T.taylor_decode_step(
+            cache, qg, kg, vg, tau=_tau(params, cfg, True),
+            normalize_inputs=cfg.taylor.normalize_inputs,
+            output_scale=cfg.taylor.output_scale)
+        y = y.reshape(q.shape)
+    else:
+        w = cache["k"].shape[2]
+        slot = jnp.mod(pos, w) if kind == "local" else pos
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 2)
+        cache = {"k": ck, "v": cv, "pos": pos + 1}
+        n_valid = jnp.minimum(pos + 1, w) if kind == "local" else pos + 1
+        y = _decode_attend(cfg, params, q, ck, cv, n_valid, w)
+    return L.dense(params["wo"], _merge_heads(y).astype(x.dtype)), cache
+
+
+def _decode_attend(cfg, params, q, ck, cv, n_valid, cache_len):
+    """Masked single-query attention over a (possibly ring) cache."""
+    b, h, _, d = q.shape
+    kv = ck.shape[1]
+    if kv != h:
+        rep = h // kv
+        ck = jnp.repeat(ck, rep, axis=1)
+        cv = jnp.repeat(cv, rep, axis=1)
+    valid = jnp.arange(cache_len) < n_valid                    # ring buffers
+    if cfg.attn_backend == "softmax":
+        x = jnp.einsum("bhqd,bhmd->bhqm", q, ck,
+                       preferred_element_type=jnp.float32) / math.sqrt(d)
+        if cfg.softcap_attn:
+            x = L.softcap(x, cfg.softcap_attn)
+        x = jnp.where(valid[None, None, None], x, -1e30)
+        a = jax.nn.softmax(x, -1)
+        return jnp.einsum("bhqm,bhmd->bhqd", a.astype(cv.dtype), cv)
+    tc = cfg.taylor
+    tau = _tau(params, cfg, False)
+    if tc.normalize_inputs:
+        q, ck = T.normalize_qk(q, ck, tau)
+    x = jnp.einsum("bhqd,bhmd->bhqm", q, ck,
+                   preferred_element_type=jnp.float32)
+    a = jnp.where(valid[None, None, None], T.taylor_exp(x), 0.0)
+    y = jnp.einsum("bhqm,bhmd->bhqd", a / jnp.sum(a, -1, keepdims=True),
+                   cv.astype(a.dtype))
+    if tc.output_scale:
+        y = y * jnp.sqrt(n_valid.astype(jnp.float32) / d)
+    return y.astype(cv.dtype)

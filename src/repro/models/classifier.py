@@ -1,0 +1,43 @@
+"""Sequence classifier — the paper's evaluation setting (§5.3).
+
+Transformer *encoder* (non-causal TaylorShift or softmax backend) with
+mean pooling and a linear head; used for the ListOps-style accuracy
+parity benchmark (paper Table 3) and the normalization ablation
+(paper Table 4)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import model as M
+
+
+def classifier_init(cfg: ModelConfig, n_classes: int, rng):
+    k1, k2 = jax.random.split(rng)
+    params = M.init_params(cfg, k1)
+    params["head"] = L.dense_init(k2, cfg.d_model, n_classes,
+                                  dtype=jnp.float32)
+    return params
+
+
+def classifier_logits(params, cfg: ModelConfig, tokens):
+    hidden, _ = M.forward(params, cfg, {"tokens": tokens})
+    pooled = jnp.mean(hidden.astype(jnp.float32), axis=1)
+    return L.dense(params["head"], pooled)
+
+
+def classifier_loss(params, cfg: ModelConfig, batch):
+    logits = classifier_logits(params, cfg, batch["tokens"])
+    labels = batch["label"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def classifier_accuracy(params, cfg: ModelConfig, batch):
+    logits = classifier_logits(params, cfg, batch["tokens"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["label"]).astype(
+        jnp.float32))

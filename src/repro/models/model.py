@@ -1,0 +1,556 @@
+"""Model assembly: decoder LMs, hybrids, xLSTM, and encoder-decoder.
+
+Layers are grouped by the config's ``layer_pattern`` (the repeating
+heterogeneity unit) and scanned with ``lax.scan`` over stacked parameter
+pytrees, so HLO size and compile time are O(pattern length), not
+O(n_layers) — essential for 46–81-layer archs compiled 80× in the
+dry-run sweep. A remainder of ``n_layers mod len(pattern)`` layers is
+unrolled at the end.
+
+Public surface:
+  init_params(cfg, rng)                      -> params (or eval_shape'able)
+  forward(params, cfg, batch, training)      -> (hidden, aux_loss)
+  loss_fn(params, cfg, batch)                -> scalar (chunked xent)
+  init_decode_state(cfg, batch, cache_len, cache_kind) -> cache
+  decode_step(params, cfg, batch, cache)     -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import taylor as T
+from repro.distributed import ctx
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models import xlstm as XL
+
+Params = dict[str, Any]
+
+ATTN_KINDS = ("global", "local", "global_moe")
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply / decode — dispatch on pattern kind
+# ---------------------------------------------------------------------------
+
+def _block_init(kind: str, key, cfg: ModelConfig, *, cross: bool = False) -> Params:
+    ninit, _ = L.make_norm(cfg.norm)
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    if kind in ATTN_KINDS:
+        p["norm1"] = ninit(cfg.d_model)
+        p["attn"] = A.attn_init(ks[0], cfg)
+        if cfg.post_norm:
+            p["norm1_post"] = ninit(cfg.d_model)
+        if cross:
+            p["norm_x"] = ninit(cfg.d_model)
+            p["cross"] = A.attn_init(ks[3], cfg)
+        if cfg.d_ff:
+            p["norm2"] = ninit(cfg.d_model)
+            if kind == "global_moe":
+                p["moe"] = MOE.moe_init(ks[1], cfg)
+            else:
+                p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                      gated=cfg.gated_mlp,
+                                      dtype=cfg.param_dtype)
+            if cfg.post_norm:
+                p["norm2_post"] = ninit(cfg.d_model)
+    elif kind == "mamba":
+        p["norm1"] = ninit(cfg.d_model)
+        p["mamba"] = M2.mamba2_init(ks[0], cfg)
+    elif kind == "mamba_shared":
+        # shared attention weights live at top level; only norms are local
+        p["norm_shared"] = ninit(cfg.d_model)
+        p["norm1"] = ninit(cfg.d_model)
+        p["mamba"] = M2.mamba2_init(ks[0], cfg)
+    elif kind == "mlstm":
+        p["norm1"] = ninit(cfg.d_model)
+        p["mlstm"] = XL.mlstm_init(ks[0], cfg)
+    elif kind == "slstm":
+        p["norm1"] = ninit(cfg.d_model)
+        p["slstm"] = XL.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    return p
+
+
+def _block_apply(kind: str, p: Params, cfg: ModelConfig, x, *, positions,
+                 causal: bool, shared: Params | None,
+                 cross_kv=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One residual block. Sequence-parallel discipline: the residual
+    carry x stays d_model-sharded; each sub-layer's input is explicitly
+    all-gathered in bf16 (ctx.gathered) and its output reduce-scattered
+    back (ctx.activations)."""
+    _, norm = L.make_norm(cfg.norm)
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ATTN_KINDS:
+        z = ctx.gathered(norm(p["norm1"], x))
+        h = A.attn_apply(p["attn"], cfg, z, positions=positions,
+                         kind="local" if kind == "local" else "global",
+                         causal=causal)
+        h = ctx.activations(h)
+        if cfg.post_norm:
+            h = norm(p["norm1_post"], h)
+        x = x + h
+        if cross_kv is not None:
+            h = A.attn_apply(p["cross"], cfg,
+                             ctx.gathered(norm(p["norm_x"], x)),
+                             positions=positions, cross_kv=cross_kv)
+            x = x + ctx.activations(h)
+        if cfg.d_ff:
+            z = ctx.gathered(norm(p["norm2"], x))
+            if kind == "global_moe":
+                h, aux = MOE.moe_apply(p["moe"], cfg, z)
+            else:
+                h = L.mlp(p["mlp"], z, act=cfg.act)
+            h = ctx.activations(h)
+            if cfg.post_norm:
+                h = norm(p["norm2_post"], h)
+            x = x + h
+    elif kind in ("mamba", "mamba_shared"):
+        if kind == "mamba_shared":
+            assert shared is not None
+            h = A.attn_apply(shared["attn"], cfg,
+                             ctx.gathered(norm(p["norm_shared"], x)),
+                             positions=positions, causal=causal)
+            x = x + ctx.activations(h)
+        h = M2.mamba2_apply(p["mamba"], cfg,
+                            ctx.gathered(norm(p["norm1"], x)))
+        x = x + ctx.activations(h)
+    elif kind == "mlstm":
+        h = XL.mlstm_apply(p["mlstm"], cfg, ctx.gathered(norm(p["norm1"], x)))
+        x = x + ctx.activations(h)
+    elif kind == "slstm":
+        h = XL.slstm_apply(p["slstm"], cfg, ctx.gathered(norm(p["norm1"], x)))
+        x = x + ctx.activations(h)
+    return x, aux
+
+
+def _block_init_cache(kind: str, cfg: ModelConfig, batch: int, cache_len: int,
+                      cache_kind: str, dtype):
+    if kind in ATTN_KINDS:
+        return A.init_cache(cfg, batch, kind="global", cache_len=cache_len,
+                            cache_kind=cache_kind, dtype=dtype)
+    if kind == "local":  # pragma: no cover — kind handled above
+        raise AssertionError
+    if kind == "mamba":
+        return M2.mamba2_init_cache(cfg, batch)
+    if kind == "mamba_shared":
+        return {"attn": A.init_cache(cfg, batch, kind="global",
+                                     cache_len=cache_len,
+                                     cache_kind=cache_kind, dtype=dtype),
+                "mamba": M2.mamba2_init_cache(cfg, batch)}
+    if kind == "mlstm":
+        return XL.mlstm_init_cache(cfg, batch)
+    if kind == "slstm":
+        return XL.slstm_init_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def _cache_kind_for(kind: str, cfg: ModelConfig, cache_kind: str, batch: int,
+                    cache_len: int, dtype):
+    if kind == "local":
+        return A.init_cache(cfg, batch, kind="local", cache_len=cache_len,
+                            cache_kind="kv", dtype=dtype)
+    return _block_init_cache(kind, cfg, batch, cache_len, cache_kind, dtype)
+
+
+def _block_decode(kind: str, p: Params, cfg: ModelConfig, x, cache, *,
+                  shared: Params | None, cross_state=None):
+    _, norm = L.make_norm(cfg.norm)
+    if kind in ATTN_KINDS or kind == "local":
+        akind = "local" if kind == "local" else "global"
+        h, cache_a = A.attn_decode(
+            p["attn"], cfg, norm(p["norm1"], x),
+            cache["self"] if cross_state is not None else cache, kind=akind)
+        if cfg.post_norm:
+            h = norm(p["norm1_post"], h)
+        x = x + h
+        if cross_state is not None:
+            h, _ = A.attn_decode(p["cross"], cfg, norm(p["norm_x"], x), None,
+                                 cross_state=cross_state)
+            x = x + h
+            cache = {"self": cache_a}
+        else:
+            cache = cache_a
+        if cfg.d_ff:
+            z = norm(p["norm2"], x)
+            if kind == "global_moe":
+                h, _ = MOE.moe_apply(p["moe"], cfg, z)
+            else:
+                h = L.mlp(p["mlp"], z, act=cfg.act)
+            if cfg.post_norm:
+                h = norm(p["norm2_post"], h)
+            x = x + h
+    elif kind in ("mamba", "mamba_shared"):
+        if kind == "mamba_shared":
+            h, ca = A.attn_decode(shared["attn"], cfg,
+                                  norm(p["norm_shared"], x), cache["attn"])
+            x = x + h
+            y, cm = M2.mamba2_decode(p["mamba"], cfg, norm(p["norm1"], x),
+                                     cache["mamba"])
+            x = x + y
+            cache = {"attn": ca, "mamba": cm}
+        else:
+            y, cache = M2.mamba2_decode(p["mamba"], cfg, norm(p["norm1"], x),
+                                        cache)
+            x = x + y
+    elif kind == "mlstm":
+        y, cache = XL.mlstm_decode(p["mlstm"], cfg, norm(p["norm1"], x), cache)
+        x = x + y
+    elif kind == "slstm":
+        y, cache = XL.slstm_decode(p["slstm"], cfg, norm(p["norm1"], x), cache)
+        x = x + y
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Stacking machinery
+# ---------------------------------------------------------------------------
+
+def _pattern_layout(cfg: ModelConfig, n_layers: int | None = None):
+    pattern = tuple(cfg.layer_pattern)
+    n = n_layers if n_layers is not None else cfg.n_layers
+    P = len(pattern)
+    return pattern, n // P, tuple(pattern[i] for i in range(n % P))
+
+
+def _stacked_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    pattern, n_groups, rem = _pattern_layout(cfg)
+    keys = jax.random.split(rng, 8)
+    p: Params = {"embed": L.embedding_init(keys[0], cfg.vocab, cfg.d_model,
+                                           cfg.param_dtype)}
+    ninit, _ = L.make_norm(cfg.norm)
+    p["final_norm"] = ninit(cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.dense_init(keys[6], cfg.d_model, cfg.vocab,
+                                    cfg.param_dtype)
+    if cfg.pos_embed == "learned":
+        p["pos"] = L.learned_pos_init(keys[5], cfg.max_seq_len, cfg.d_model,
+                                      cfg.param_dtype)
+    if any(k == "mamba_shared" for k in cfg.layer_pattern):
+        p["shared_attn"] = {"attn": A.attn_init(keys[4], cfg)}
+
+    if n_groups:
+        p["groups"] = [
+            _stacked_init(lambda k, kind=kind: _block_init(kind, k, cfg),
+                          jax.random.fold_in(keys[1], i), n_groups)
+            for i, kind in enumerate(pattern)
+        ]
+    else:
+        p["groups"] = []
+    p["rem"] = [_block_init(kind, jax.random.fold_in(keys[2], i), cfg)
+                for i, kind in enumerate(rem)]
+
+    if cfg.family == "encdec":
+        enc_cfg = cfg
+        p["enc"] = {
+            # STUB frontend (per assignment): linear mel->d_model projection
+            "frontend_proj": L.dense_init(
+                jax.random.fold_in(keys[7], 1), 128, cfg.d_model,
+                cfg.param_dtype),
+            "pos": L.learned_pos_init(keys[7], max(cfg.encoder_frames,
+                                                   cfg.max_seq_len),
+                                      cfg.d_model, cfg.param_dtype),
+            "blocks": _stacked_init(
+                lambda k: _block_init("global", k, enc_cfg),
+                keys[3], cfg.n_encoder_layers),
+            "final_norm": ninit(cfg.d_model),
+        }
+        # decoder blocks get cross-attention
+        p["groups"] = [_stacked_init(
+            lambda k: _block_init("global", k, cfg, cross=True),
+            keys[1], n_groups)]
+        p["rem"] = []
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / full-sequence)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    """Token (+ frontend-stub) embedding. Returns (x, positions)."""
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens) * jnp.asarray(
+        jnp.sqrt(cfg.d_model), cfg.param_dtype)
+    if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    if cfg.pos_embed == "learned":
+        x = L.add_learned_pos(params["pos"], x, positions)
+    return ctx.activations(x), positions
+
+
+def _run_blocks(params, cfg: ModelConfig, x, positions, *, causal: bool,
+                cross_kv_list=None, n_layers: int | None = None):
+    pattern, n_groups, rem = _pattern_layout(cfg, n_layers)
+    shared = params.get("shared_attn")
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if n_groups:
+        def group_body(x, sliced):
+            aux = jnp.zeros((), jnp.float32)
+            for kind, bp in zip(pattern, sliced):
+                x, a = _block_apply(kind, bp, cfg, x, positions=positions,
+                                    causal=causal, shared=shared)
+                aux += a
+            return ctx.activations(x), aux
+
+        body = jax.checkpoint(group_body) if cfg.remat else group_body
+
+        def scan_fn(x, sliced):
+            return body(x, sliced)
+
+        x, auxs = jax.lax.scan(scan_fn, x, tuple(params["groups"]))
+        aux_total += jnp.sum(auxs)
+
+    for kind, bp in zip(rem, params["rem"]):
+        x, a = _block_apply(kind, bp, cfg, x, positions=positions,
+                            causal=causal, shared=shared)
+        aux_total += a
+    return x, aux_total
+
+
+def _encode(params, cfg: ModelConfig, frames):
+    """Whisper encoder over (stubbed) mel frames (B, M, n_mels) or
+    precomputed embeddings (B, M, d_model)."""
+    x = frames.astype(cfg.param_dtype)
+    if x.shape[-1] != cfg.d_model:
+        x = L.dense(params["enc"]["frontend_proj"], x)
+    x = ctx.activations(x)
+    pos = jnp.arange(x.shape[1])
+    x = L.add_learned_pos(params["enc"]["pos"], x, pos)
+
+    def body(x, bp):
+        x, _ = _block_apply("global", bp, cfg, x, positions=pos,
+                            causal=cfg.encoder_causal, shared=None)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc"]["blocks"])
+    _, norm = L.make_norm(cfg.norm)
+    return norm(params["enc"]["final_norm"], x)
+
+
+def forward(params, cfg: ModelConfig, batch, *, training: bool = False):
+    """Returns (hidden (B,N,d), aux_loss). N includes any stub prefix."""
+    _, norm = L.make_norm(cfg.norm)
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, batch["frames"])
+        x, positions = _embed_inputs(params, cfg, batch)
+        pattern, n_groups, _ = _pattern_layout(cfg)
+
+        def body(x, bp):
+            cross_kv = A.project_cross_kv(bp["cross"], cfg, enc_out)
+            h = x
+            h, _ = _block_apply("global", bp, cfg, h, positions=positions,
+                                causal=True, shared=None, cross_kv=cross_kv)
+            return h, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["groups"][0])
+        return norm(params["final_norm"], x), jnp.zeros((), jnp.float32)
+
+    x, positions = _embed_inputs(params, cfg, batch)
+    x, aux = _run_blocks(params, cfg, x, positions, causal=cfg.causal)
+    return norm(params["final_norm"], x), aux
+
+
+def logits_from_hidden(params, cfg: ModelConfig, hidden):
+    if cfg.tie_embeddings:
+        lg = L.unembed(params["embed"], hidden)
+    else:
+        lg = L.dense(params["unembed"], hidden).astype(jnp.float32)
+    if cfg.softcap_final:
+        lg = L.softcap(lg, cfg.softcap_final)
+    return lg
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Next-token cross-entropy, chunked over the sequence so the full
+    (B, N, vocab) logits tensor never materializes (decisive for
+    vocab=262k × 1M tokens)."""
+    hidden, aux = forward(params, cfg, batch, training=True)
+    labels = batch["labels"]
+    if hidden.shape[1] != labels.shape[1]:      # vlm stub prefix
+        hidden = hidden[:, hidden.shape[1] - labels.shape[1]:]
+    B, N, _ = hidden.shape
+    chunk = cfg.logits_chunk or max(min(N, (128 * 1024 * 1024)
+                                        // max(cfg.vocab, 1)), 1)
+    chunk = min(chunk, N)
+    while N % chunk:
+        chunk -= 1
+    nc = N // chunk
+
+    def xent(h, y):
+        lg = logits_from_hidden(params, cfg, h)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, y[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    if nc <= 1:
+        total = xent(hidden, labels)
+    else:
+        hs = hidden.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+        ys = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+        def body(acc, hy):
+            h, y = hy
+            return acc + xent(h, y), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ys))
+    return total / (B * N) + aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
+                      cache_kind: str = "taylor", dtype=jnp.bfloat16):
+    """Cache pytree mirroring the params' group/remainder structure."""
+    pattern, n_groups, rem = _pattern_layout(cfg)
+    if cfg.family == "encdec":
+        blk = A.init_cache(cfg, batch, kind="global", cache_len=cache_len,
+                           cache_kind=cache_kind, dtype=dtype)
+        self_caches = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups, *a.shape)), {"self": blk})
+        d = cfg.dim_head
+        cross = T.TaylorState(
+            s2=jnp.zeros((n_groups, batch, cfg.kv_heads, 1, d * d, d + 1),
+                         jnp.float32),
+            s1=jnp.zeros((n_groups, batch, cfg.kv_heads, 1, d, d + 1),
+                         jnp.float32),
+            s0=jnp.zeros((n_groups, batch, cfg.kv_heads, 1, 1, d + 1),
+                         jnp.float32),
+            n=jnp.zeros((n_groups,), jnp.int32),
+        )
+        return {"groups": [self_caches], "rem": [], "cross": cross,
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def stack(kind):
+        one = _cache_kind_for(kind, cfg, cache_kind, batch, cache_len, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups, *a.shape)).copy(), one)
+
+    groups = [stack(kind) for kind in pattern] if n_groups else []
+    remc = [_cache_kind_for(kind, cfg, cache_kind, batch, cache_len, dtype)
+            for kind in rem]
+    return {"groups": groups, "rem": remc, "pos": jnp.zeros((), jnp.int32)}
+
+
+def encode_for_decode(params, cfg: ModelConfig, frames, cache):
+    """encdec: run the encoder once, fold K/V into per-layer Taylor states."""
+    enc_out = _encode(params, cfg, frames)
+
+    def per_layer(bp):
+        k, v = A.project_cross_kv(bp["cross"], cfg, enc_out)
+        return T.taylor_encode_state(k[:, :, None], v[:, :, None],
+                                     normalize_inputs=cfg.taylor.normalize_inputs)
+
+    cross = jax.vmap(per_layer)(params["groups"][0])
+    return {**cache, "cross": cross}
+
+
+def decode_step(params, cfg: ModelConfig, batch, cache):
+    """One token for every sequence in the batch.
+
+    batch: {"tokens": (B, 1)}. Returns (logits (B,1,V), new cache).
+    """
+    _, norm = L.make_norm(cfg.norm)
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens) * jnp.asarray(
+        jnp.sqrt(cfg.d_model), cfg.param_dtype)
+    if cfg.pos_embed == "learned":
+        x = L.add_learned_pos(params["pos"], x, cache["pos"][None])
+    pattern, n_groups, rem = _pattern_layout(cfg)
+    shared = params.get("shared_attn")
+    is_encdec = cfg.family == "encdec"
+    eff_pattern = ("global",) if is_encdec else pattern
+
+    new_groups = []
+    if n_groups:
+        if is_encdec:
+            def body(x, sliced):
+                bp, bc, cs = sliced
+                x, nc = _block_decode("global", bp, cfg, x, bc, shared=None,
+                                      cross_state=cs)
+                return x, (nc,)
+
+            x, (ncache,) = jax.lax.scan(
+                body, x,
+                (params["groups"][0], cache["groups"][0], cache["cross"]))
+            new_groups.append(ncache)
+        else:
+            # One scan over groups; the body applies every pattern position
+            # in order so the layer interleaving matches forward().
+            def body(x, sliced):
+                new_caches = []
+                for kind, bp, bc in zip(eff_pattern, sliced[0], sliced[1]):
+                    x, nc = _block_decode(kind, bp, cfg, x, bc, shared=shared)
+                    new_caches.append(nc)
+                return x, tuple(new_caches)
+
+            x, ncaches = jax.lax.scan(
+                body, x, (tuple(params["groups"]), tuple(cache["groups"])))
+            new_groups = list(ncaches)
+
+    new_rem = []
+    for kind, bp, bc in zip(rem, params["rem"], cache["rem"]):
+        x, nc = _block_decode(kind, bp, cfg, x, bc, shared=shared)
+        new_rem.append(nc)
+
+    x = norm(params["final_norm"], x)
+    lg = logits_from_hidden(params, cfg, x)
+    out = {"groups": new_groups, "rem": new_rem, "pos": cache["pos"] + 1}
+    if is_encdec:
+        out["cross"] = cache["cross"]
+    return lg, out
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts (for MODEL_FLOPS = 6·N·D)
+# ---------------------------------------------------------------------------
+
+def count_params(params) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree.leaves(params)
+               if hasattr(x, "size"))
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact count via eval_shape (no allocation); MoE optionally counted
+    at top_k/n_experts activation."""
+    shapes = jax.eval_shape(
+        functools.partial(init_params, cfg),
+        jax.random.PRNGKey(0))
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        keys = "/".join(str(p) for p in path)
+        if active_only and ("w_up" in keys or "w_gate" in keys
+                            or "w_down" in keys):
+            n = n * cfg.moe.top_k // max(cfg.moe.n_experts, 1)
+        total += n
+    return total
+
+
+def count_embedding_params(cfg: ModelConfig) -> int:
+    n = cfg.vocab * cfg.d_model
+    if not cfg.tie_embeddings:
+        n *= 2
+    return n

@@ -1,0 +1,247 @@
+"""xLSTM blocks (sLSTM + mLSTM) — xlstm-125m.
+
+TaylorShift is inapplicable (attention-free; DESIGN.md
+§Arch-applicability). Notably the mLSTM matrix memory C_t ∈ R^{d×d} is
+the closest structural cousin of efficient-TaylorShift's S1 state — both
+are outer-product accumulators read out by the query — so the chunked
+implementation below mirrors core/taylor.py's chunk scheme.
+
+mLSTM: exponential input gate, sigmoid-style forget gate in log space,
+max-stabilizer m_t; chunked parallel form for training, O(1)-state decode.
+sLSTM: strict scalar recurrence with exponential gating and normalizer —
+``lax.scan`` over time.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig) -> Params:
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 7)
+    up = 2 * d
+    return {
+        "up_proj": L.dense_init(ks[0], d, 2 * up, dt),    # path + gate
+        "wq": L.dense_init(ks[1], up, H * dh, dt),
+        "wk": L.dense_init(ks[2], up, H * dh, dt),
+        "wv": L.dense_init(ks[3], up, up, dt),
+        "w_if": L.dense_init(ks[4], up, 2 * H, jnp.float32),
+        "norm": L.rmsnorm_init(up),
+        "down_proj": L.dense_init(ks[5], up, d, dt),
+    }
+
+
+def _mlstm_cell_chunked(q, k, v, i_gate, f_gate, chunk):
+    """Stabilized chunked mLSTM cell.
+
+    q,k: (B,H,N,dk); v: (B,H,N,dv); i_gate,f_gate: (B,H,N) raw (pre-act).
+    Returns (B,H,N,dv).
+
+    h_t = (qᵀ C_t) / max(|qᵀ n_t|, 1);  C_t = f C_{t-1} + i k vᵀ
+    with log-space stabilization m_t = max(log f + m_{t-1}, log i).
+    Chunked: exact same algebra, stabilizer carried per chunk.
+    """
+    b, h, n, dk = q.shape
+    dv = v.shape[-1]
+    assert n % chunk == 0
+    nc = n // chunk
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))   # (B,H,N)
+    logi = i_gate.astype(jnp.float32)
+    q = q.astype(jnp.float32) / jnp.sqrt(dk)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+
+    def r(t, *shape):
+        return t.reshape(b, h, nc, chunk, *shape)
+
+    qc, kc, vc = r(q, dk), r(k, dk), r(v, dv)
+    lf, li = r(logf), r(logi)
+    csf = jnp.cumsum(lf, axis=-1)                            # Σ log f within chunk
+    # intra-chunk log weights: D[i,j] = csf_i - csf_j + li_j  (j <= i)
+    Dm = csf[..., :, None] - csf[..., None, :] + li[..., None, :]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Dm = jnp.where(mask, Dm, -jnp.inf)
+    m_intra = jnp.max(Dm, axis=-1)                           # (B,H,nc,C)
+
+    # inter-chunk state: S_z = Σ_j exp(csf_end - csf_j + li_j) k_j v_jᵀ, with
+    # per-chunk stabilizer m_state = max_j (csf_end - csf_j + li_j)
+    end = csf[..., -1:]
+    wlog = end - csf + li                                    # (B,H,nc,C)
+    m_state = jnp.max(wlog, axis=-1)                         # (B,H,nc)
+    w = jnp.exp(wlog - m_state[..., None])
+    S = jnp.einsum("bhzc,bhzck,bhzcv->bhzkv", w, kc, vc)
+    nrm = jnp.einsum("bhzc,bhzck->bhzk", w, kc)
+    fsum = end[..., 0]                                       # Σ log f per chunk
+
+    def scan_fn(carry, inp):
+        Cprev, nprev, mprev = carry
+        Sz, nz, mz, fz = inp
+        mnew = jnp.maximum(fz + mprev, mz)
+        Cnew = (Cprev * jnp.exp(fz + mprev - mnew)[..., None, None]
+                + Sz * jnp.exp(mz - mnew)[..., None, None])
+        nnew = (nprev * jnp.exp(fz + mprev - mnew)[..., None]
+                + nz * jnp.exp(mz - mnew)[..., None])
+        return (Cnew, nnew, mnew), (Cprev, nprev, mprev)
+
+    C0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    n0 = jnp.zeros((b, h, dk), jnp.float32)
+    m0 = jnp.full((b, h), -jnp.inf)
+    swap = lambda t: jnp.moveaxis(t, 2, 0)
+    (_, _, _), (Cp, np_, mp) = jax.lax.scan(
+        scan_fn, (C0, n0, m0),
+        (swap(S), swap(nrm), swap(m_state), swap(fsum)))
+    Cp, np_, mp = jnp.moveaxis(Cp, 0, 2), jnp.moveaxis(np_, 0, 2), jnp.moveaxis(mp, 0, 2)
+
+    # combine intra + inter with a joint stabilizer per position
+    m_inter = csf + mp[..., None]                            # (B,H,nc,C)
+    m_tot = jnp.maximum(m_intra, m_inter)
+    m_tot = jnp.where(jnp.isfinite(m_tot), m_tot, 0.0)
+    w_intra = jnp.exp(jnp.where(mask, Dm - m_tot[..., None], -jnp.inf))
+    w_intra = jnp.where(mask, w_intra, 0.0)
+    scores = jnp.einsum("bhzik,bhzjk->bhzij", qc, kc) * w_intra
+    num = jnp.einsum("bhzij,bhzjv->bhziv", scores, vc)
+    den = jnp.sum(scores, axis=-1)
+    wi = jnp.exp(m_inter - m_tot)
+    num = num + jnp.einsum("bhzc,bhzck,bhzkv->bhzcv", wi, qc, Cp)
+    den = den + jnp.einsum("bhzc,bhzck,bhzk->bhzc", wi, qc, np_)
+    out = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return out.reshape(b, h, n, dv)
+
+
+def mlstm_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    b, n, d = x.shape
+    H = cfg.n_heads
+    up = 2 * d
+    dh = d // H
+    path, gate = jnp.split(L.dense(params["up_proj"], x), 2, axis=-1)
+    q = L.dense(params["wq"], path).reshape(b, n, H, dh).transpose(0, 2, 1, 3)
+    k = L.dense(params["wk"], path).reshape(b, n, H, dh).transpose(0, 2, 1, 3)
+    v = L.dense(params["wv"], path).reshape(b, n, H, up // H).transpose(0, 2, 1, 3)
+    gif = L.dense(params["w_if"], path.astype(jnp.float32)).reshape(b, n, 2, H)
+    i_g = gif[:, :, 0].transpose(0, 2, 1)                    # (B,H,N)
+    f_g = gif[:, :, 1].transpose(0, 2, 1)
+    chunk = min(cfg.ssm.chunk, n)
+    while n % chunk:
+        chunk //= 2
+    y = _mlstm_cell_chunked(q, k, v, i_g, f_g, max(chunk, 1))
+    y = y.transpose(0, 2, 1, 3).reshape(b, n, up).astype(x.dtype)
+    y = L.rmsnorm(params["norm"], y)
+    y = y * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    return L.dense(params["down_proj"], y)
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int):
+    d, H = cfg.d_model, cfg.n_heads
+    dh, dv = d // H, 2 * d // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dv), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(params: Params, cfg: ModelConfig, x: jnp.ndarray, cache):
+    b, _, d = x.shape
+    H = cfg.n_heads
+    up = 2 * d
+    dh = d // H
+    path, gate = jnp.split(L.dense(params["up_proj"], x), 2, axis=-1)
+    q = L.dense(params["wq"], path).reshape(b, H, dh).astype(jnp.float32) / jnp.sqrt(dh)
+    k = L.dense(params["wk"], path).reshape(b, H, dh).astype(jnp.float32)
+    v = L.dense(params["wv"], path).reshape(b, H, up // H).astype(jnp.float32)
+    gif = L.dense(params["w_if"], path.astype(jnp.float32)).reshape(b, 2, H)
+    logi = gif[:, 0]
+    logf = jax.nn.log_sigmoid(gif[:, 1])
+    mnew = jnp.maximum(logf + cache["m"], logi)
+    Cnew = (cache["C"] * jnp.exp(logf + cache["m"] - mnew)[..., None, None]
+            + jnp.einsum("bhk,bhv->bhkv", k, v) * jnp.exp(logi - mnew)[..., None, None])
+    nnew = (cache["n"] * jnp.exp(logf + cache["m"] - mnew)[..., None]
+            + k * jnp.exp(logi - mnew)[..., None])
+    num = jnp.einsum("bhk,bhkv->bhv", q, Cnew)
+    den = jnp.einsum("bhk,bhk->bh", q, nnew)
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    y = y.reshape(b, 1, up).astype(x.dtype)
+    y = L.rmsnorm(params["norm"], y) * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    return L.dense(params["down_proj"], y), {"C": Cnew, "n": nnew, "m": mnew}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": L.dense_init(ks[0], d, 4 * d, dt),      # z, i, f, o
+        "r_gates": L.dense_init(ks[1], d, 4 * d, dt),      # recurrent
+        "norm": L.rmsnorm_init(d),
+        "ffn": L.mlp_init(ks[2], d, int(d * 4 / 3) // 8 * 8, gated=True, dtype=dt),
+    }
+
+
+def _slstm_step_from_wx(params, carry, wx_t):
+    """One sLSTM step given the precomputed input projection wx_t.
+
+    §Perf iteration (xlstm): W·x_t for ALL timesteps is hoisted out of
+    the scan into one batched MXU matmul — inside the scan only the
+    recurrent R·h remains, halving per-step weight re-reads (the scan
+    re-read both (d,4d) matrices from HBM every timestep: 2×9.4 MB ×
+    4096 steps × layers of pure HBM traffic)."""
+    c, nrm, m, h = carry
+    gates = (wx_t
+             + L.dense(params["r_gates"], h.astype(wx_t.dtype))
+             ).astype(jnp.float32)
+    z, i, f, o = jnp.split(gates, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f)
+    mnew = jnp.maximum(logf + m, i)
+    ig = jnp.exp(i - mnew)
+    fg = jnp.exp(logf + m - mnew)
+    cnew = fg * c + ig * jnp.tanh(z)
+    nnew = fg * nrm + ig
+    hnew = jax.nn.sigmoid(o) * cnew / jnp.maximum(nnew, 1.0)
+    return (cnew, nnew, mnew, hnew), hnew
+
+
+def slstm_apply(params: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    b, n, d = x.shape
+    carry = slstm_init_cache(cfg, b)
+    wx = L.dense(params["w_gates"], x)        # (B, N, 4d) — one MXU matmul
+
+    def step(carry, wx_t):
+        return _slstm_step_from_wx(params, carry, wx_t)
+
+    _, hs = jax.lax.scan(step, carry, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    h = L.rmsnorm(params["norm"], h)
+    return L.mlp(params["ffn"], h, act="gelu")
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, jnp.full((batch, d), -1e30, jnp.float32), z)
+
+
+def slstm_decode(params: Params, cfg: ModelConfig, x: jnp.ndarray, cache):
+    wx = L.dense(params["w_gates"], x[:, 0])
+    carry, h = _slstm_step_from_wx(params, cache, wx)
+    h = h[:, None].astype(x.dtype)
+    h = L.rmsnorm(params["norm"], h)
+    return L.mlp(params["ffn"], h, act="gelu"), carry

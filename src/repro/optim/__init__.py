@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    lamb_init,
+    lamb_update,
+    make_optimizer,
+)

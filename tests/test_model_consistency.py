@@ -1,0 +1,157 @@
+"""Consistency of the two execution paths every serving system needs:
+full-sequence forward (train/prefill) vs token-by-token decode, plus
+sequential oracles for the SSD and mLSTM cells."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import mamba2 as M2
+from repro.models import model as M
+from repro.models import xlstm as XL
+
+SEQ = 24
+BATCH = 2
+
+
+def _logits_forward(cfg, params, tokens):
+    hidden, _ = M.forward(params, cfg, {"tokens": tokens})
+    return M.logits_from_hidden(params, cfg, hidden)
+
+
+def _logits_decode(cfg, params, tokens, cache_kind):
+    cache = M.init_decode_state(cfg, tokens.shape[0], cache_len=SEQ,
+                                cache_kind=cache_kind, dtype=jnp.float32)
+    outs = []
+    step = jax.jit(lambda b, c: M.decode_step(params, cfg, b, c))
+    for t in range(tokens.shape[1]):
+        lg, cache = step({"tokens": tokens[:, t:t+1]}, cache)
+        outs.append(lg)
+    return jnp.concatenate(outs, axis=1)
+
+
+@pytest.mark.parametrize("arch,cache_kind", [
+    ("stablelm-1.6b", "taylor"),
+    ("stablelm-1.6b", "kv"),
+    ("gemma3-1b", "taylor"),
+    ("zamba2-7b", "taylor"),
+    ("xlstm-125m", "taylor"),   # cache_kind ignored: state blocks
+])
+def test_decode_matches_forward(arch, cache_kind):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (BATCH, SEQ), 0,
+                                cfg.vocab)
+    lg_fwd = _logits_forward(cfg, params, tokens)
+    lg_dec = _logits_decode(cfg, params, tokens, cache_kind)
+    np.testing.assert_allclose(np.asarray(lg_fwd), np.asarray(lg_dec),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_whisper_decode_matches_forward():
+    cfg = get_config("whisper-large-v3").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    frames = jax.random.normal(jax.random.PRNGKey(2),
+                               (BATCH, cfg.encoder_frames, cfg.d_model))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (BATCH, cfg.decoder_len),
+                                0, cfg.vocab)
+    hidden, _ = M.forward(params, cfg, {"tokens": tokens, "frames": frames})
+    lg_fwd = M.logits_from_hidden(params, cfg, hidden)
+
+    cache = M.init_decode_state(cfg, BATCH, cache_len=cfg.decoder_len,
+                                cache_kind="taylor", dtype=jnp.float32)
+    cache = M.encode_for_decode(params, cfg, frames, cache)
+    outs = []
+    for t in range(tokens.shape[1]):
+        lg, cache = M.decode_step(params, cfg, {"tokens": tokens[:, t:t+1]},
+                                  cache)
+        outs.append(lg)
+    lg_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(lg_fwd), np.asarray(lg_dec),
+                               rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Cell-level oracles
+# ---------------------------------------------------------------------------
+
+def _ssd_sequential(xh, dt, A, Bm, Cm):
+    """Naive O(N) recurrence: h_t = exp(-A dt_t) h_{t-1} + B_t (x_t dt_t)."""
+    b, n, h, p = xh.shape
+    g = Bm.shape[2]
+    rep = h // g
+    Bh = np.repeat(np.asarray(Bm), rep, axis=2)
+    Ch = np.repeat(np.asarray(Cm), rep, axis=2)
+    xh, dt, A = map(np.asarray, (xh, dt, A))
+    S = Bh.shape[-1]
+    hstate = np.zeros((b, h, S, p))
+    ys = np.zeros_like(xh)
+    for t in range(n):
+        dec = np.exp(-A[None] * dt[:, t])            # (b, h)
+        hstate = hstate * dec[..., None, None] + np.einsum(
+            "bhs,bhp->bhsp", Bh[:, t], xh[:, t] * dt[:, t][..., None])
+        ys[:, t] = np.einsum("bhs,bhsp->bhp", Ch[:, t], hstate)
+    return ys
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_matches_sequential(chunk):
+    key = jax.random.PRNGKey(3)
+    b, n, h, p, s, g = 2, 16, 4, 8, 8, 2
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    xh = jax.random.normal(k1, (b, n, h, p))
+    dt = jax.nn.softplus(jax.random.normal(k2, (b, n, h)))
+    A = jnp.exp(jax.random.normal(k3, (h,)) * 0.5)
+    Bm = jax.random.normal(k4, (b, n, g, s))
+    Cm = jax.random.normal(jax.random.fold_in(key, 9), (b, n, g, s))
+    y_chunked = M2._ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+    y_seq = _ssd_sequential(xh, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y_chunked), y_seq,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mamba2_decode_matches_prefill():
+    cfg = get_config("zamba2-7b").reduced()
+    params = M2.mamba2_init(jax.random.PRNGKey(4), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (BATCH, 16, cfg.d_model))
+    y_full = M2.mamba2_apply(params, cfg, x)
+    cache = M2.mamba2_init_cache(cfg, BATCH)
+    ys = []
+    for t in range(16):
+        y, cache = M2.mamba2_decode(params, cfg, x[:, t:t+1], cache)
+        ys.append(y)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_dec),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_decode_matches_prefill():
+    cfg = get_config("xlstm-125m").reduced()
+    params = XL.mlstm_init(jax.random.PRNGKey(6), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(7), (BATCH, 16, cfg.d_model))
+    y_full = XL.mlstm_apply(params, cfg, x)
+    cache = XL.mlstm_init_cache(cfg, BATCH)
+    ys = []
+    for t in range(16):
+        y, cache = XL.mlstm_decode(params, cfg, x[:, t:t+1], cache)
+        ys.append(y)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_dec),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_slstm_decode_matches_scan():
+    cfg = get_config("xlstm-125m").reduced()
+    params = XL.slstm_init(jax.random.PRNGKey(8), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(9), (BATCH, 12, cfg.d_model))
+    y_full = XL.slstm_apply(params, cfg, x)
+    cache = XL.slstm_init_cache(cfg, BATCH)
+    ys = []
+    for t in range(12):
+        y, cache = XL.slstm_decode(params, cfg, x[:, t:t+1], cache)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(ys, 1)),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,99 @@
+"""Paper Table 1 / App. B.2: scaling behavior of intermediate tensors.
+
+The normalization scheme is derived from how intermediates grow with N
+and d; we validate the *growth laws* as property tests (the paper fits
+the same laws empirically — its App. B.2 reports ≤1% error for large N).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import taylor as T
+
+
+def unit_rows(key, n, d):
+    x = jax.random.normal(key, (n, d))
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def amod_fro(key, n, d):
+    k = unit_rows(key, n, d)
+    v = unit_rows(jax.random.fold_in(key, 1), n, d)
+    vh = jnp.concatenate([jnp.ones((n, 1)), v], -1)
+    am = T.boxtimes(k, k).T @ vh
+    return float(jnp.sqrt(jnp.sum(am * am)))
+
+
+class TestTable1ScalingLaws:
+    @pytest.mark.parametrize("d", [8, 16])
+    def test_amod_linear_in_n(self, d):
+        """|A_mod| ~ (N+1)/sqrt(d): doubling N doubles the norm."""
+        key = jax.random.PRNGKey(d)
+        r = amod_fro(key, 2048, d) / amod_fro(key, 1024, d)
+        assert 1.7 < r < 2.3, r
+
+    def test_amod_decreases_with_d(self):
+        """|A_mod| ~ 1/sqrt(d) at fixed N."""
+        key = jax.random.PRNGKey(0)
+        n = 2048
+        a8 = amod_fro(key, n, 8)
+        a32 = amod_fro(key, n, 32)
+        # sqrt(32/8) = 2; allow generous tolerance for the constant
+        assert 1.4 < a8 / a32 < 2.9, a8 / a32
+
+    @pytest.mark.parametrize("d", [8, 16])
+    def test_output_scale_without_norm_is_sqrt_d_over_n(self, d):
+        """|Y| ~ sqrt(d/N) pre-output-scaling (Table 1, last column):
+        the paper multiplies by sqrt(N/d) to undo exactly this."""
+        key = jax.random.PRNGKey(d + 100)
+        sizes = {}
+        for n in (256, 1024):
+            q = unit_rows(key, n, d)[None, None]
+            k = unit_rows(jax.random.fold_in(key, 1), n, d)[None, None]
+            v = unit_rows(jax.random.fold_in(key, 2), n, d)[None, None]
+            y = T.efficient_taylorshift(q, k, v, normalize_inputs=False,
+                                        output_scale=False)
+            sizes[n] = float(jnp.mean(jnp.linalg.norm(y[0, 0], axis=-1)))
+        # N x4 => |Y| halves
+        r = sizes[256] / sizes[1024]
+        assert 1.5 < r < 2.7, r
+
+    def test_output_scale_normalizes_mean_size(self):
+        """The sqrt(N/d) output scaling (§3.3) undoes the sqrt(d/N) decay:
+        WITHOUT it |Y| falls ~sqrt(1/N); WITH it |Y| is ~N-independent.
+        Averaged over seeds (single draws of the Taylor-weighted mean of
+        unit vectors are heavy-tailed)."""
+        d = 16
+
+        def mean_size(n, scale, seeds=6):
+            tot = 0.0
+            for s in range(seeds):
+                key = jax.random.PRNGKey(7 + s)
+                q = jax.random.normal(key, (1, 1, n, d))
+                k = jax.random.normal(jax.random.fold_in(key, 1),
+                                      (1, 1, n, d))
+                v = unit_rows(jax.random.fold_in(key, 2), n, d)[None, None]
+                y = T.efficient_taylorshift(q, k, v, output_scale=scale)
+                tot += float(jnp.mean(jnp.linalg.norm(y[0, 0], axis=-1)))
+            return tot / seeds
+
+        r_without = mean_size(2048, False) / mean_size(256, False)
+        r_with = mean_size(2048, True) / mean_size(256, True)
+        assert r_without < 0.6, r_without        # ~ sqrt(256/2048) = 0.35
+        assert 0.45 < r_with < 2.2, r_with       # ~ constant
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.sampled_from([128, 256, 512]), d=st.sampled_from([4, 8, 16]),
+           seed=st.integers(0, 1000))
+    def test_denominator_positive(self, n, d, seed):
+        """Y_denom > 0 always (Taylor numerator is positive) — division
+        is safe at any scale after normalization."""
+        key = jax.random.PRNGKey(seed)
+        q = jax.random.normal(key, (1, 1, n, d)) * 100
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, n, d)) * 100
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 1, n, d))
+        y = T.efficient_taylorshift(q, k, v)
+        assert bool(jnp.all(jnp.isfinite(y)))

@@ -1,0 +1,168 @@
+"""Unit tests for the distribution layer: param sharding rules, ZeRO-1
+augmentation, cache shardings, greedy sharder, HLO cost model."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import sharding as S
+from repro.distributed.hlo_cost import analyze
+from repro.launch.steps import param_shapes
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # a miniature (data, model) mesh with the same axis names
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def spec_of(tree, mesh):
+    shard = S.param_shardings(tree, mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, s: (S._path_str(p), s.spec), shard)
+
+
+class TestParamRules:
+    def test_core_rules(self, mesh):
+        sds = jax.ShapeDtypeStruct
+        tree = {
+            "embed": {"emb": sds((3200, 64), jnp.bfloat16)},
+            "groups": [{
+                "attn": {"wq": {"w": sds((64, 128), jnp.bfloat16)},
+                         "wo": {"w": sds((128, 64), jnp.bfloat16)},
+                         "tau": sds((4,), jnp.float32)},
+                "mlp": {"up": {"w": sds((64, 256), jnp.bfloat16)},
+                        "down": {"w": sds((256, 64), jnp.bfloat16)}},
+                "norm1": {"scale": sds((64,), jnp.float32)},
+            }],
+        }
+        sh = S.param_shardings(tree, mesh)
+        g = sh["groups"][0]
+        assert sh["embed"]["emb"].spec == P("model", None)
+        assert g["attn"]["wq"]["w"].spec == P(None, "model")
+        assert g["attn"]["wo"]["w"].spec == P("model", None)
+        assert g["mlp"]["up"]["w"].spec == P(None, "model")
+        assert g["mlp"]["down"]["w"].spec == P("model", None)
+        assert g["attn"]["tau"].spec == P(None)
+        assert g["norm1"]["scale"].spec == P(None)
+
+    def test_stacked_layer_dim_padded(self, mesh):
+        tree = {"groups": [{"attn": {"wq": {"w": jax.ShapeDtypeStruct(
+            (12, 64, 128), jnp.bfloat16)}}}]}
+        sh = S.param_shardings(tree, mesh)
+        assert sh["groups"][0]["attn"]["wq"]["w"].spec == P(None, None, "model")
+
+    def test_moe_ep_vs_fsdp(self):
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+
+        # 128 experts divide the 16-way model axis => EP placement
+        spec = S._spec_for_param("groups/0/moe/w_up", (128, 64, 256),
+                                 FakeMesh())
+        assert spec[0] == "model" and spec[2] == "data"
+        # 8 experts do NOT divide 16 => FSDP-style 2D weight sharding
+        spec = S._spec_for_param("groups/0/moe/w_up", (8, 64, 256),
+                                 FakeMesh())
+        assert spec[0] is None
+        assert spec[1] == "data" or spec[2] == "model"
+        spec = S._spec_for_param("groups/0/moe/w_down", (8, 256, 64),
+                                 FakeMesh())
+        assert spec[0] is None and spec[1] == "model"
+
+    def test_full_arch_no_unsharded_giants(self, mesh):
+        """No parameter > 200M elements may be fully replicated."""
+        cfg = get_config("grok-1-314b")
+        shapes = param_shapes(cfg)
+        sh = S.param_shardings(shapes, mesh)
+        flat_sh = jax.tree_util.tree_flatten_with_path(sh)[0]
+        flat_s = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        for (path, shard), (_, leaf) in zip(flat_sh, flat_s):
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            if n > 200e6:
+                assert any(s is not None for s in shard.spec), \
+                    f"{S._path_str(path)} {leaf.shape} replicated"
+
+
+class TestZero1:
+    def test_adds_data_axis(self, mesh):
+        sds = jax.ShapeDtypeStruct
+        shapes = {"w": sds((64, 128), jnp.float32)}
+        psh = S.param_shardings({"mlp": {"up": {"w": shapes["w"]}}}, mesh)
+        zsh = S.zero1_shardings(psh, {"mlp": {"up": {"w": shapes["w"]}}}, mesh)
+        spec = zsh["mlp"]["up"]["w"].spec
+        assert "data" in [a for s in spec for a in
+                          ((s,) if not isinstance(s, tuple) else s) if a]
+
+
+class TestGreedySharder:
+    def test_batch_then_biggest(self, mesh):
+        spec = S.greedy_spec((8, 4, 1024), mesh, batch_dim=0)
+        assert spec[0] in ("data", ("data",))
+        assert spec[2] == "model"
+
+    def test_indivisible_skipped(self, mesh):
+        spec = S.greedy_spec((7, 3), mesh, batch_dim=0)
+        # 7 % 1 == 0 for this mini-mesh; structural check only
+        assert len(spec) <= 2
+
+
+class TestHloCostModel:
+    def test_while_trip_multiplier(self):
+        hlo = """
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %y = f32[8,8]{1,0} multiply(%x, %x)
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %y)
+}
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%z, %a)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+        a = analyze(hlo)
+        assert a["flops"] == pytest.approx(7 * 64 + 64, rel=0.2)
+
+    def test_collective_wire_model(self):
+        hlo = """
+ENTRY %main (a: f32[16,16]) -> f32[16,16] {
+  %a = f32[16,16]{1,0} parameter(0)
+  ROOT %ar = f32[16,16]{1,0} all-reduce(%a), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+%add (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+"""
+        a = analyze(hlo)
+        # ring all-reduce: 2 * 1024B * 3/4
+        assert a["coll_wire_bytes"] == pytest.approx(2 * 1024 * 0.75)
+
+    def test_dynamic_slice_charged_at_slice_size(self):
+        hlo = """
+ENTRY %main (p0: f32[4096,16,48], p1: s32[]) -> f32[1,16,48] {
+  %p0 = f32[4096,16,48]{2,1,0} parameter(0)
+  %p1 = s32[] parameter(1)
+  %c = s32[] constant(0)
+  ROOT %ds = f32[1,16,48]{2,1,0} dynamic-slice(%p0, %p1, %c, %c), dynamic_slice_sizes={1,16,48}
+}
+"""
+        a = analyze(hlo)
+        assert a["bytes"] == 2 * 16 * 48 * 4

@@ -1,0 +1,314 @@
+"""Correctness of the core TaylorShift algorithms.
+
+The paper's central mathematical claim — direct- and efficient-TaylorShift
+compute the *same* function — is asserted here to tight tolerance, along
+with the causal/chunked/recurrent extensions.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.taylor import (
+    TaylorState,
+    boxtimes,
+    causal_direct_taylorshift,
+    causal_taylorshift,
+    crossover_n0,
+    crossover_n1,
+    direct_taylorshift,
+    efficient_taylorshift,
+    entries_direct,
+    entries_efficient,
+    ops_direct,
+    ops_efficient,
+    pick_mode,
+    taylor_decode_step,
+    taylor_softmax,
+    taylorshift_attention,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand_qkv(key, b, h, n, d, dtype=jnp.float32):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, n, d), dtype)
+    k = jax.random.normal(kk, (b, h, n, d), dtype)
+    v = jax.random.normal(kv, (b, h, n, d), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Taylor softmax basics
+# ---------------------------------------------------------------------------
+
+class TestTaylorSoftmax:
+    def test_rows_sum_to_one(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+        s = taylor_softmax(x)
+        np.testing.assert_allclose(jnp.sum(s, -1), jnp.ones(4), rtol=1e-6)
+
+    def test_positive_for_even_order(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (128,)) * 10
+        assert jnp.all(taylor_softmax(x) > 0)  # 1 + x + x²/2 > 0 ∀x
+
+    def test_approximates_softmax_for_small_logits(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (8, 32)) * 0.1
+        np.testing.assert_allclose(
+            taylor_softmax(x), jax.nn.softmax(x, -1), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Paper §3: direct == efficient (the core identity)
+# ---------------------------------------------------------------------------
+
+class TestDirectEfficientEquivalence:
+    @pytest.mark.parametrize("d", [4, 8, 16, 32, 64])
+    @pytest.mark.parametrize("n", [16, 128])
+    def test_equivalence(self, n, d):
+        q, k, v = rand_qkv(jax.random.PRNGKey(d * 1000 + n), 2, 3, n, d)
+        y_dir = direct_taylorshift(q, k, v, tau=1.7)
+        y_eff = efficient_taylorshift(q, k, v, tau=1.7)
+        np.testing.assert_allclose(y_dir, y_eff, rtol=2e-4, atol=2e-4)
+
+    def test_equivalence_no_output_scale(self):
+        q, k, v = rand_qkv(jax.random.PRNGKey(7), 1, 2, 64, 16)
+        y_dir = direct_taylorshift(q, k, v, output_scale=False)
+        y_eff = efficient_taylorshift(q, k, v, output_scale=False)
+        np.testing.assert_allclose(y_dir, y_eff, rtol=2e-4, atol=2e-4)
+
+    def test_cross_attention_shapes(self):
+        key = jax.random.PRNGKey(3)
+        kq, kk, kv = jax.random.split(key, 3)
+        q = jax.random.normal(kq, (2, 4, 32, 16))
+        k = jax.random.normal(kk, (2, 4, 80, 16))
+        v = jax.random.normal(kv, (2, 4, 80, 16))
+        y_dir = direct_taylorshift(q, k, v)
+        y_eff = efficient_taylorshift(q, k, v)
+        assert y_dir.shape == (2, 4, 32, 16)
+        np.testing.assert_allclose(y_dir, y_eff, rtol=2e-4, atol=2e-4)
+
+    def test_per_head_tau_vector(self):
+        q, k, v = rand_qkv(jax.random.PRNGKey(9), 2, 4, 32, 8)
+        tau = jnp.array([0.5, 1.0, 2.0, 4.0]).reshape(1, 4, 1, 1)
+        y_dir = direct_taylorshift(q, k, v, tau=tau)
+        y_eff = efficient_taylorshift(q, k, v, tau=tau)
+        np.testing.assert_allclose(y_dir, y_eff, rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(4, 96),
+        d=st.sampled_from([2, 4, 8, 16]),
+        tau=st.floats(0.25, 4.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_equivalence_property(self, n, d, tau, seed):
+        q, k, v = rand_qkv(jax.random.PRNGKey(seed), 1, 1, n, d)
+        y_dir = direct_taylorshift(q, k, v, tau=tau)
+        y_eff = efficient_taylorshift(q, k, v, tau=tau)
+        np.testing.assert_allclose(y_dir, y_eff, rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# Causal extensions (beyond paper): chunked == masked direct == decode
+# ---------------------------------------------------------------------------
+
+class TestCausal:
+    @pytest.mark.parametrize("chunk", [8, 16, 64])
+    def test_chunked_matches_direct(self, chunk):
+        q, k, v = rand_qkv(jax.random.PRNGKey(11), 2, 2, 64, 16)
+        y_ref = causal_direct_taylorshift(q, k, v, tau=1.3)
+        y_chk = causal_taylorshift(q, k, v, tau=1.3, chunk=chunk)
+        np.testing.assert_allclose(y_ref, y_chk, rtol=2e-4, atol=2e-4)
+
+    def test_chunk_size_equals_n(self):
+        q, k, v = rand_qkv(jax.random.PRNGKey(12), 1, 1, 32, 8)
+        y_ref = causal_direct_taylorshift(q, k, v)
+        y_chk = causal_taylorshift(q, k, v, chunk=32)
+        np.testing.assert_allclose(y_ref, y_chk, rtol=2e-4, atol=2e-4)
+
+    def test_decode_matches_prefill(self):
+        """Token-by-token recurrent decode == full causal attention."""
+        b, h, n, d = 1, 2, 24, 8
+        q, k, v = rand_qkv(jax.random.PRNGKey(13), b, h, n, d)
+        y_full = causal_direct_taylorshift(q, k, v, tau=0.9)
+        state = TaylorState.zeros((b, h), d)
+        ys = []
+        for t in range(n):
+            y_t, state = taylor_decode_step(
+                state, q[:, :, t:t+1], k[:, :, t:t+1], v[:, :, t:t+1], tau=0.9)
+            ys.append(y_t)
+        y_dec = jnp.concatenate(ys, axis=2)
+        np.testing.assert_allclose(y_full, y_dec, rtol=5e-4, atol=5e-4)
+
+    def test_prefill_state_then_decode(self):
+        """Chunked prefill state hands off exactly to the decode step."""
+        b, h, n, d = 1, 2, 32, 8
+        q, k, v = rand_qkv(jax.random.PRNGKey(14), b, h, n + 1, d)
+        y_full = causal_direct_taylorshift(q, k, v, tau=1.1)
+        _, state = causal_taylorshift(
+            q[:, :, :n], k[:, :, :n], v[:, :, :n], tau=1.1, chunk=8,
+            return_state=True)
+        y_last, _ = taylor_decode_step(
+            state, q[:, :, n:], k[:, :, n:], v[:, :, n:], tau=1.1)
+        np.testing.assert_allclose(
+            y_full[:, :, -1:], y_last, rtol=5e-4, atol=5e-4)
+        assert int(state.n) == n
+
+    def test_chunked_prefill_continuation(self):
+        """Two chunked calls chained via state == one big call."""
+        b, h, d = 2, 1, 8
+        q, k, v = rand_qkv(jax.random.PRNGKey(15), b, h, 48, d)
+        y_full = causal_taylorshift(q, k, v, chunk=8)
+        y1, st = causal_taylorshift(q[:, :, :16], k[:, :, :16], v[:, :, :16],
+                                    chunk=8, return_state=True)
+        y2 = causal_taylorshift(q[:, :, 16:], k[:, :, 16:], v[:, :, 16:],
+                                chunk=8, initial_state=st)
+        np.testing.assert_allclose(
+            y_full, jnp.concatenate([y1, y2], 2), rtol=5e-4, atol=5e-4)
+
+    def test_causality(self):
+        """Perturbing future tokens must not change past outputs."""
+        q, k, v = rand_qkv(jax.random.PRNGKey(16), 1, 1, 32, 8)
+        y1 = causal_taylorshift(q, k, v, chunk=8)
+        k2 = k.at[:, :, 20:].set(jax.random.normal(jax.random.PRNGKey(1),
+                                                   k[:, :, 20:].shape))
+        y2 = causal_taylorshift(q, k2, v, chunk=8)
+        np.testing.assert_allclose(y1[:, :, :20], y2[:, :, :20],
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Paper §4: crossover formulas (Table 2 values) and auto dispatch
+# ---------------------------------------------------------------------------
+
+class TestCrossover:
+    def test_table2_values_d128(self):
+        # Paper Table 2 prints N0=16513, N1=8446 for d=128.
+        assert round(crossover_n0(128)) == 16513
+        assert round(crossover_n1(128)) == 8446
+
+    @pytest.mark.parametrize("d", [8, 16, 32, 64, 128])
+    def test_bounds(self, d):
+        assert crossover_n0(d) <= d * d + d + 0.75            # Eq. (7)
+        assert crossover_n1(d) <= 0.5 * d * d + 2 * d + 0.5   # Eq. (9)
+        assert crossover_n1(d) < crossover_n0(d)              # §4.2 remark
+
+    @pytest.mark.parametrize("d", [8, 16, 32, 64, 128])
+    def test_flop_model_consistency(self, d):
+        n0 = crossover_n0(d)
+        lo, hi = int(n0 * 0.9), int(n0 * 1.1)
+        assert ops_direct(lo, d) < ops_efficient(lo, d)
+        assert ops_direct(hi, d) > ops_efficient(hi, d)
+        n1 = crossover_n1(d)
+        lo, hi = int(n1 * 0.9), int(n1 * 1.1) + 2
+        assert entries_direct(lo, d) < entries_efficient(lo, d)
+        assert entries_direct(hi, d) > entries_efficient(hi, d)
+
+    def test_pick_mode(self):
+        assert pick_mode(512, 64) == "direct"
+        assert pick_mode(8192, 64) == "efficient"
+        assert pick_mode(4096, 64, optimize_for="memory") == "efficient"
+
+    def test_auto_dispatch_matches_both(self):
+        q, k, v = rand_qkv(jax.random.PRNGKey(17), 1, 1, 32, 4)
+        y_auto = taylorshift_attention(q, k, v, mode="auto")
+        y_dir = taylorshift_attention(q, k, v, mode="direct")
+        np.testing.assert_allclose(y_auto, y_dir, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Numerical stability (paper §3.3 / App. B.1)
+# ---------------------------------------------------------------------------
+
+class TestStability:
+    def test_large_inputs_stable_with_normalization(self):
+        q, k, v = rand_qkv(jax.random.PRNGKey(18), 1, 1, 256, 16)
+        q, k = q * 1e3, k * 1e3  # would overflow the naive formulation
+        y = efficient_taylorshift(q, k, v, tau=1.0)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_bf16_inputs_fp32_internals(self):
+        q, k, v = rand_qkv(jax.random.PRNGKey(19), 1, 2, 128, 16,
+                           dtype=jnp.bfloat16)
+        y_eff = efficient_taylorshift(q, k, v)
+        y_dir = direct_taylorshift(q, k, v)
+        assert y_eff.dtype == jnp.bfloat16
+        assert bool(jnp.all(jnp.isfinite(y_eff.astype(jnp.float32))))
+        np.testing.assert_allclose(
+            y_eff.astype(jnp.float32), y_dir.astype(jnp.float32),
+            rtol=0.1, atol=0.1)
+
+    def test_long_sequence_decode_state_fp32(self):
+        """State sums stay finite after many tokens (raw-sum convention)."""
+        b, h, d = 1, 1, 8
+        state = TaylorState.zeros((b, h), d)
+        key = jax.random.PRNGKey(20)
+
+        @jax.jit
+        def step(state, key):
+            q, k, v = rand_qkv(key, b, h, 1, d)
+            y, state = taylor_decode_step(state, q, k, v)
+            return state, y
+
+        for i in range(50):
+            state, y = step(state, jax.random.fold_in(key, i))
+        assert bool(jnp.all(jnp.isfinite(state.s2)))
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+
+# ---------------------------------------------------------------------------
+# boxtimes algebra
+# ---------------------------------------------------------------------------
+
+class TestBoxtimes:
+    def test_identity(self):
+        """[A^⊠2]_{n,π(k,l)} = A_{nk} A_{nl} (paper §3.2)."""
+        a = jax.random.normal(jax.random.PRNGKey(21), (5, 3))
+        b2 = boxtimes(a, a)
+        for n in range(5):
+            np.testing.assert_allclose(
+                b2[n].reshape(3, 3), jnp.outer(a[n], a[n]), rtol=1e-6)
+
+    def test_linearization_identity(self):
+        """(QKᵀ)^⊙2 == Q^⊠2 (K^⊠2)ᵀ — the paper's key algebraic step."""
+        q = jax.random.normal(jax.random.PRNGKey(22), (7, 4))
+        k = jax.random.normal(jax.random.PRNGKey(23), (9, 4))
+        lhs = (q @ k.T) ** 2
+        rhs = boxtimes(q, q) @ boxtimes(k, k).T
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-5)
+
+
+class TestGQABroadcast:
+    """GQA passes k/v with broadcastable lead dims: (B, KV, 1, N, d) vs
+    q (B, KV, G, N, d) — the chunked causal path must handle it."""
+
+    def test_causal_chunked_gqa(self):
+        b, kv, g, n, d = 2, 2, 3, 32, 8
+        key = jax.random.PRNGKey(31)
+        q = jax.random.normal(key, (b, kv, g, n, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, kv, 1, n, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, kv, 1, n, d))
+        y = causal_taylorshift(q, k, v, chunk=8)
+        assert y.shape == (b, kv, g, n, d)
+        y_ref = causal_direct_taylorshift(
+            q, jnp.broadcast_to(k, q.shape), jnp.broadcast_to(v, q.shape))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=5e-4, atol=5e-4)
+
+    def test_efficient_gqa(self):
+        b, kv, g, n, d = 1, 2, 4, 64, 8
+        key = jax.random.PRNGKey(33)
+        q = jax.random.normal(key, (b, kv, g, n, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, kv, 1, n, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, kv, 1, n, d))
+        y = efficient_taylorshift(q, k, v)
+        y_ref = direct_taylorshift(q, jnp.broadcast_to(k, q.shape),
+                                   jnp.broadcast_to(v, q.shape))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=5e-4, atol=5e-4)
