@@ -1,0 +1,157 @@
+"""Serving throughput: continuous-batching engine vs the naive loop.
+
+Sweeps (batch, prompt_len, gen_len) over three serving paths:
+
+  * ``naive``      — the old token-by-token loop (prefill AND decode
+                     through single-token ``decode_step`` calls);
+  * ``engine``     — chunked prefill + pooled decode, Taylor state;
+  * ``engine_kv``  — same engine over a classic KV cache pool.
+
+plus a prefill-only microbench at prompt length 512 (the chunked-prefill
+headline: one full-intensity forward per chunk instead of P dispatches).
+
+Emits the repo-standard ``name,us_per_call,derived`` rows (see
+benchmarks/common.py) and a final JSON document on stdout; ``--json
+PATH`` also writes the document to a file for the perf trajectory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve import Engine, EngineConfig, Request
+
+from benchmarks.common import emit
+
+
+def _cfg(d_model=64, n_layers=2):
+    return get_config("stablelm-1.6b").reduced().with_(
+        d_model=d_model, n_layers=n_layers)
+
+
+def _prompts(cfg, batch, plen, seed=0):
+    p = jax.random.randint(jax.random.PRNGKey(seed), (batch, plen),
+                           0, cfg.vocab)
+    return [[int(t) for t in row] for row in p]
+
+
+def time_naive(cfg, params, prompts, gen, step_fn, cache_kind="taylor"):
+    """Token-by-token loop with a pre-jitted step (compile excluded)."""
+    B, P = len(prompts), len(prompts[0])
+    toks = jnp.asarray(prompts, jnp.int32)
+
+    def run():
+        cache = M.init_decode_state(cfg, B, cache_len=P + gen + 1,
+                                    cache_kind=cache_kind,
+                                    dtype=jnp.float32)
+        logits = None
+        t_pref = time.perf_counter()
+        for t in range(P):
+            logits, cache = step_fn({"tokens": toks[:, t:t+1]}, cache)
+        jax.block_until_ready(logits)
+        t_pref = time.perf_counter() - t_pref
+        for _ in range(gen):
+            cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            logits, cache = step_fn({"tokens": cur}, cache)
+        jax.block_until_ready(logits)
+        return t_pref
+
+    run()                                   # warmup/compile
+    t0 = time.perf_counter()
+    t_pref = run()
+    return time.perf_counter() - t0, t_pref
+
+
+def time_engine(cfg, params, prompts, gen, cache_kind):
+    B, P = len(prompts), len(prompts[0])
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=B, prefill_chunk=128, token_budget=128 + B,
+        max_seq_len=P + gen + 1, cache_kind=cache_kind))
+
+    def run(tag):
+        from repro.serve.scheduler import EngineStats
+        eng.stats = EngineStats()
+        for i, p in enumerate(prompts):
+            eng.submit(Request(f"{tag}{i}", p, max_new_tokens=gen))
+        t0 = time.perf_counter()
+        for _ in eng.run():
+            pass
+        dt = time.perf_counter() - t0
+        s = eng.stats.summary()
+        return dt, s
+
+    run("warm")                             # warmup/compile
+    return run("timed")
+
+
+def run(cells=((2, 64, 16), (4, 64, 16), (4, 128, 16), (2, 128, 32)),
+        prefill_len=512, d_model=64, n_layers=2):
+    cfg = _cfg(d_model, n_layers)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(lambda b, c: M.decode_step(params, cfg, b, c))
+    doc = {"name": "serving_throughput",
+           "config": {"d_model": d_model, "n_layers": n_layers,
+                      "backend": jax.default_backend()},
+           "cells": [], "prefill": {}}
+
+    for B, P, G in cells:
+        prompts = _prompts(cfg, B, P)
+        total = B * (P + G)
+        t_naive, _ = time_naive(cfg, params, prompts, G, step_fn)
+        row = {"batch": B, "prompt_len": P, "gen_len": G,
+               "naive_tok_s": total / t_naive}
+        for kind in ("taylor", "kv"):
+            dt, s = time_engine(cfg, params, prompts, G, kind)
+            key = "engine_tok_s" if kind == "taylor" else "engine_kv_tok_s"
+            row[key] = total / dt
+            if kind == "taylor":
+                row["ttft_mean_s"] = s["ttft_mean_s"]
+        row["speedup_vs_naive"] = row["engine_tok_s"] / row["naive_tok_s"]
+        doc["cells"].append(row)
+        emit(f"serve_b{B}_p{P}_g{G}", t_naive * 1e6,
+             f"naive_tok_s={row['naive_tok_s']:.1f};"
+             f"engine_tok_s={row['engine_tok_s']:.1f};"
+             f"engine_kv_tok_s={row['engine_kv_tok_s']:.1f};"
+             f"speedup={row['speedup_vs_naive']:.2f}")
+
+    # prefill-only: P=512 prompt, 1 generated token
+    prompts = _prompts(cfg, 1, prefill_len, seed=7)
+    _, t_pref_naive = time_naive(cfg, params, prompts, 1, step_fn)
+    dt, s = time_engine(cfg, params, prompts, 1, "taylor")
+    pref_naive = prefill_len / t_pref_naive
+    pref_engine = s["prefill_tokens"] / dt if dt else 0.0
+    doc["prefill"] = {
+        "prompt_len": prefill_len,
+        "naive_prefill_tok_s": pref_naive,
+        "engine_prefill_tok_s": pref_engine,
+        "speedup": pref_engine / pref_naive,
+    }
+    emit(f"serve_prefill_p{prefill_len}", t_pref_naive * 1e6,
+         f"naive_tok_s={pref_naive:.1f};engine_tok_s={pref_engine:.1f};"
+         f"speedup={pref_engine / pref_naive:.2f}")
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default=None, help="also write JSON here")
+    args = ap.parse_args()
+    cells = ((2, 64, 8),) if args.fast else \
+        ((2, 64, 16), (4, 64, 16), (4, 128, 16), (2, 128, 32))
+    doc = run(cells=cells, prefill_len=512)
+    print(json.dumps(doc, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

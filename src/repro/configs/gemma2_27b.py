@@ -1,7 +1,7 @@
 """gemma2-27b — local/global alternating, logit softcaps [arXiv:2408.00118].
 
 46L, d_model=4608, 32 heads (GQA kv=16, head_dim=128), d_ff=36864,
-vocab=256000, window 4096, pre+post RMSNorm. NOTE (DESIGN.md
+vocab=256000, window 4096, pre+post RMSNorm. NOTE (docs/design.md
 §Arch-applicability): attention-logit softcapping is incompatible with
 the TaylorShift factorization — the learnable temperature tau takes its
 role on Taylor layers; softcap_attn applies on the softmax baseline path.

@@ -2,7 +2,7 @@
 
 12L alternating (mLSTM, sLSTM), d_model=768, 4 heads, d_ff=0 (blocks
 carry their own projections), vocab=50304. TaylorShift INAPPLICABLE:
-attention-free (DESIGN.md §Arch-applicability); the mLSTM matrix memory
+attention-free (docs/design.md §Arch-applicability); the mLSTM matrix memory
 is itself the nearest linear-attention cousin of the Taylor state.
 """
 

@@ -3,7 +3,7 @@
 81 layers, d_model=3584, ssm_state=64; a SHARED transformer-attention
 block (single weight set) is applied every 6th layer. TaylorShift applies
 to the shared attention; the Mamba2 SSD blocks are already linear-time
-(DESIGN.md §Arch-applicability). Simplifications: one shared block (not
+(docs/design.md §Arch-applicability). Simplifications: one shared block (not
 two alternating), no per-invocation LoRA, shared block has no MLP.
 """
 

@@ -225,7 +225,10 @@ class TaylorState(NamedTuple):
     """Recurrent decode state — replaces the KV cache.
 
     s2: (..., d²,  d+1) fp32     s1: (..., d, d+1) fp32
-    s0: (..., 1,   d+1) fp32     n:  () int32 — tokens absorbed so far
+    s0: (..., 1,   d+1) fp32     n:  tokens absorbed so far, int32 —
+    scalar () for a single shared context length, or (B,) for per-sequence
+    counts (continuous-batching slot pools, where every slot sits at a
+    different position).
     """
     s2: jnp.ndarray
     s1: jnp.ndarray
@@ -233,13 +236,21 @@ class TaylorState(NamedTuple):
     n: jnp.ndarray
 
     @staticmethod
-    def zeros(batch_dims: tuple, d: int, dtype=jnp.float32) -> "TaylorState":
+    def zeros(batch_dims: tuple, d: int, dtype=jnp.float32,
+              n_dims: tuple = ()) -> "TaylorState":
         return TaylorState(
             s2=jnp.zeros((*batch_dims, d * d, d + 1), dtype),
             s1=jnp.zeros((*batch_dims, d, d + 1), dtype),
             s0=jnp.zeros((*batch_dims, 1, d + 1), dtype),
-            n=jnp.zeros((), jnp.int32),
+            n=jnp.zeros(n_dims, jnp.int32),
         )
+
+
+def _nb(n: jnp.ndarray, ndim: int) -> jnp.ndarray:
+    """Broadcast a token count — scalar () or per-sequence (B,) — against
+    an (B, ..., T, d)-shaped tensor of rank ``ndim`` (B leading)."""
+    n = jnp.asarray(n, jnp.float32)
+    return n.reshape(n.shape + (1,) * (ndim - n.ndim))
 
 
 def _chunk_sums(k, vh):
@@ -345,9 +356,9 @@ def causal_taylorshift(
     denom, nom = y_hat[..., :1], y_hat[..., 1:]
     y = nom / denom
     if output_scale:
-        counts = n_prev.astype(jnp.float32) + jnp.arange(1, N + 1,
-                                                         dtype=jnp.float32)
-        y = y * jnp.sqrt(counts / d)[..., :, None]
+        counts = _nb(n_prev, y.ndim - 1) + jnp.arange(1, N + 1,
+                                                      dtype=jnp.float32)
+        y = y * jnp.sqrt(counts / d)[..., None]
     y = y.astype(v.dtype)
     if not return_state:
         return y
@@ -395,7 +406,7 @@ def taylor_decode_step(
     denom, nom = y_hat[..., :1], y_hat[..., 1:]
     y = nom / denom
     if output_scale:
-        y = y * jnp.sqrt(n.astype(jnp.float32) / d)
+        y = y * jnp.sqrt(_nb(n, y.ndim) / d)
     return y.astype(v.dtype), TaylorState(s2=s2, s1=s1, s0=s0, n=n)
 
 
@@ -446,7 +457,7 @@ def taylor_readout(
     denom, nom = y_hat[..., :1], y_hat[..., 1:]
     y = nom / denom
     if output_scale:
-        y = y * jnp.sqrt(state.n.astype(jnp.float32) / d)
+        y = y * jnp.sqrt(_nb(state.n, y.ndim) / d)
     return y
 
 

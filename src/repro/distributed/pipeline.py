@@ -1,6 +1,6 @@
 """Pipeline parallelism: GPipe-style schedule over a stage-sharded mesh.
 
-First-class PP option (DESIGN.md §5): layers are partitioned into S
+First-class PP option (docs/design.md §5): layers are partitioned into S
 stages along a ``stage`` mesh axis; microbatches flow through stages
 with `shard_map` + `ppermute` rotation. With M microbatches and S
 stages the bubble fraction is (S-1)/(M+S-1) — the driver picks M ≥ 4·S.

@@ -73,7 +73,7 @@ def _fits(dim: int, mesh: Mesh, axes) -> bool:
 def _spec_for_param(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
     # --- MoE expert weights: EP when E divides 'model', else FSDP-style
     # 2D weight sharding with just-in-time all-gather over 'data'
-    # (DESIGN.md §5; grok-1 has 8 experts on 16-way model axes). ---
+    # (docs/design.md §5; grok-1 has 8 experts on 16-way model axes). ---
     m = re.search(r"w_(up|gate|down)$", path)
     if m and len(shape) >= 3:
         E = shape[-3]

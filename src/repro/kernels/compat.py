@@ -1,0 +1,11 @@
+"""Pallas-TPU API compatibility across jax versions."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # fail here, not inside a pallas_call site
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; install jax within requirements-dev.txt's range")

@@ -47,6 +47,7 @@ def taylor_attention_kernel(q, k, v, *, tau=1.0, causal: bool = False,
     """
     interp = (not _on_tpu()) if interpret is None else interpret
     b, h, n, d = q.shape
+    m = k.shape[2]
     if mode == "auto":
         mode = T.pick_mode(n, d)
     if causal:
@@ -55,23 +56,38 @@ def taylor_attention_kernel(q, k, v, *, tau=1.0, causal: bool = False,
     qf = _flatten_heads(qs)
     kf = _flatten_heads(ks)
     vf = _flatten_heads(v)
-    bq = _good_block(n, block_q)
-    bk = _good_block(k.shape[2], block_k)
+    bq, n_pad = _good_block(n, block_q)
+    bk, m_pad = _good_block(m, block_k)
+    qf = _pad_rows(qf, n_pad)
+    kf = _pad_rows(kf, m_pad)
+    vf = _pad_rows(vf, m_pad)
+    mv = m if m_pad != m else None
     if mode == "direct":
         y = taylor_direct_attention(qf, kf, vf, causal=causal, block_q=bq,
                                     block_k=bk, out_scale=out_scale,
-                                    interpret=interp)
+                                    interpret=interp, m_valid=mv)
     else:
         y = taylor_efficient_attention(qf, kf, vf, block_q=bq, block_k=bk,
-                                       out_scale=out_scale, interpret=interp)
-    return y.reshape(b, h, n, d)
+                                       out_scale=out_scale, interpret=interp,
+                                       m_valid=mv)
+    return y[:, :n].reshape(b, h, n, d)
 
 
-def _good_block(n: int, want: int) -> int:
-    b = min(want, n)
-    while n % b:
-        b -= 1
-    return max(b, 1)
+def _good_block(n: int, want: int) -> tuple[int, int]:
+    """(block, padded_n): keep the wanted block size and pad n up to the
+    next multiple, rather than shrinking the block until it divides n
+    (which degrades to block=1 — a catastrophic grid — for prime n).
+    Padded keys are masked out via ``m_valid``; padded query rows are
+    sliced off the output."""
+    b = min(want, max(n, 1))
+    return b, -(-n // b) * b
+
+
+def _pad_rows(x, n_pad: int):
+    n = x.shape[1]
+    if n_pad == n:
+        return x
+    return jnp.pad(x, ((0, 0), (0, n_pad - n), (0, 0)))
 
 
 __all__ = ["taylor_attention_kernel", "taylor_direct_attention",

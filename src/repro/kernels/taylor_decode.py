@@ -2,7 +2,7 @@
 
 One generated token per call: absorb (k, v) into the S2 state and read
 out with q — the O(d²(d+1)) inner loop that replaces KV-cache attention
-(DESIGN.md §4.2). Fusing update+readout halves state HBM traffic vs the
+(docs/design.md §4.2). Fusing update+readout halves state HBM traffic vs the
 two-pass jnp form: S2 is read once, updated in VMEM, written once, and
 the readout contraction happens on the already-resident tile.
 
@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams as _CompilerParams
 
 from repro.core import taylor as T
 from repro.kernels.taylor_efficient import _pick_chunk_factor
@@ -47,7 +49,8 @@ def _decode_kernel(q_ref, qc_ref, k_ref, kc_ref, vh_ref, s2_ref, s2_out,
                                     preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("normalize_inputs",
+                                             "output_scale", "interpret"))
 def taylor_decode_kernel(state: T.TaylorState, q, k, v, *, tau=1.0,
                          normalize_inputs: bool = True,
                          output_scale: bool = True,
@@ -89,7 +92,7 @@ def taylor_decode_kernel(state: T.TaylorState, q, k, v, *, tau=1.0,
             jax.ShapeDtypeStruct((bh, d * d, d + 1), jnp.float32),
             jax.ShapeDtypeStruct((bh, nchunks, d + 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(qs, qs, ks, ks, vh, state.s2)
@@ -103,5 +106,5 @@ def taylor_decode_kernel(state: T.TaylorState, q, k, v, *, tau=1.0,
     y_hat += (alpha**4) * s0
     y = y_hat[..., 1:] / y_hat[..., :1]
     if output_scale:
-        y = y * jnp.sqrt(n.astype(jnp.float32) / d)
+        y = y * jnp.sqrt(T._nb(n, y.ndim) / d)   # n: scalar or per-row (BH,)
     return y.astype(v.dtype), T.TaylorState(s2=s2_new, s1=s1, s0=s0, n=n)

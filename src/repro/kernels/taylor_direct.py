@@ -23,10 +23,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, acc_nom, acc_den, *,
             alpha: float, causal: bool, block_q: int, block_k: int,
-            n_seq: int, out_scale: bool, d: int):
+            n_seq: int, out_scale: bool, d: int, m_valid: int):
     iq = pl.program_id(1)
     ik = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -43,12 +45,15 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_nom, acc_den, *,
     x = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
     a = 0.5 * x * x + (alpha ** 2) * x + alpha ** 4     # Taylor numerator
-    if causal:
-        qi = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
-                                                     (block_q, block_k), 0)
+    if causal or m_valid < n_seq:
         kj = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
                                                      (block_q, block_k), 1)
-        a = jnp.where(qi >= kj, a, 0.0)
+        if causal:
+            qi = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            a = jnp.where(qi >= kj, a, 0.0)
+        if m_valid < n_seq:     # keys beyond m_valid are padding
+            a = jnp.where(kj < m_valid, a, 0.0)
 
     acc_nom[...] += jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
                                         preferred_element_type=jnp.float32)
@@ -63,19 +68,27 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_nom, acc_den, *,
                       + jax.lax.broadcasted_iota(jnp.int32, (block_q,), 0))
                 counts = (qi + 1).astype(jnp.float32)
             else:
-                counts = jnp.full((block_q,), float(n_seq), jnp.float32)
+                counts = jnp.full((block_q,), float(m_valid), jnp.float32)
             y = y * jnp.sqrt(counts / d)[:, None]
         o_ref[0] = y.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
-                                             "out_scale", "interpret"))
+                                             "out_scale", "interpret",
+                                             "m_valid"))
 def taylor_direct_attention(q, k, v, *, causal: bool = False,
                             block_q: int = 128, block_k: int = 128,
-                            out_scale: bool = True, interpret: bool = False):
-    """q, k, v: (BH, N, d) — q, k pre-normalized and α-scaled."""
+                            out_scale: bool = True, interpret: bool = False,
+                            m_valid: int | None = None):
+    """q, k, v: (BH, N, d) — q, k pre-normalized and α-scaled.
+
+    ``m_valid``: number of real keys when k/v are zero-padded up to a
+    block multiple (ops.py pad-and-mask path); keys ≥ m_valid are masked
+    out of both nominator and denominator.
+    """
     bh, n, d = q.shape
     m = k.shape[1]
+    m_valid = m if m_valid is None else m_valid
     block_q = min(block_q, n)
     block_k = min(block_k, m)
     assert n % block_q == 0 and m % block_k == 0
@@ -84,7 +97,7 @@ def taylor_direct_attention(q, k, v, *, causal: bool = False,
 
     kernel = functools.partial(
         _kernel, alpha=alpha, causal=causal, block_q=block_q,
-        block_k=block_k, n_seq=m, out_scale=out_scale, d=d)
+        block_k=block_k, n_seq=m, out_scale=out_scale, d=d, m_valid=m_valid)
 
     return pl.pallas_call(
         kernel,
@@ -100,7 +113,7 @@ def taylor_direct_attention(q, k, v, *, causal: bool = False,
             pltpu.VMEM((block_q, d), jnp.float32),
             pltpu.VMEM((block_q,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 
 def _pick_chunk_factor(d: int, vmem_budget: int = 8 * 1024 * 1024) -> int:
     """How many d-row groups of A_mod to hold per VMEM tile."""
@@ -85,7 +87,7 @@ def _amod_call(k, vh, *, cf: int, block_k: int, interpret: bool):
         out_specs=pl.BlockSpec((1, cf * d, d + 1), lambda b, c, j: (b, c, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, d * d, d + 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((cf * d, d + 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(k, k, vh)
@@ -147,7 +149,7 @@ def _readout_call(q, a_mod, kv, s0, *, cf: int, block_q: int, n_keys: int,
         out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, c: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, n, d), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_q, d + 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, q, a_mod, kv, s0)
@@ -158,14 +160,24 @@ def _readout_call(q, a_mod, kv, s0, *, cf: int, block_q: int, n_keys: int,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_k",
-                                             "out_scale", "interpret"))
+                                             "out_scale", "interpret",
+                                             "m_valid"))
 def taylor_efficient_attention(q, k, v, *, block_q: int = 128,
                                block_k: int = 128, out_scale: bool = True,
-                               interpret: bool = False):
+                               interpret: bool = False,
+                               m_valid: int | None = None):
     """Non-causal efficient-TaylorShift, fused. q,k: α-scaled normalized
-    (BH, N, d); v: (BH, M, d) raw values."""
+    (BH, N, d); v: (BH, M, d) raw values.
+
+    ``m_valid``: number of real keys when inputs are zero-padded up to a
+    block multiple (ops.py pad-and-mask path). A padded key only enters
+    the computation through V̂ (the state sums are linear in V̂), so
+    zeroing its V̂ row — including the denominator ones-column — removes
+    it from nominator and denominator alike.
+    """
     bh, n, d = q.shape
     m = k.shape[1]
+    m_valid = m if m_valid is None else m_valid
     block_q = min(block_q, n)
     block_k = min(block_k, m)
     assert n % block_q == 0 and m % block_k == 0
@@ -174,11 +186,13 @@ def taylor_efficient_attention(q, k, v, *, block_q: int = 128,
 
     ones = jnp.ones((bh, m, 1), jnp.float32)
     vh = jnp.concatenate([ones, v.astype(jnp.float32)], axis=-1)
+    if m_valid < m:
+        vh = vh * (jnp.arange(m) < m_valid)[None, :, None]
 
     a_mod = _amod_call(k, vh, cf=cf, block_k=block_k, interpret=interpret)
     # small summaries — plain XLA ops (negligible traffic)
     kv = jnp.einsum("bnd,bnf->bdf", k.astype(jnp.float32), vh)
     s0 = jnp.sum(vh, axis=1, keepdims=True)
     return _readout_call(q, a_mod, kv, s0, cf=cf, block_q=block_q,
-                         n_keys=m, out_scale=out_scale, out_dtype=v.dtype,
-                         interpret=interpret)
+                         n_keys=m_valid, out_scale=out_scale,
+                         out_dtype=v.dtype, interpret=interpret)

@@ -1,44 +1,50 @@
-"""Serving driver: batched autoregressive decode with TaylorShift state.
+"""Serving CLI — thin front end over the continuous-batching engine.
 
-Demonstrates the paper-derived serving win: the per-layer decode cache is
-a constant-size Taylor state, so context length never grows memory. The
-driver prefills via the chunked-causal form (teacher-forced loop here for
-simplicity at smoke scale), then decodes token-by-token.
+Runs a mixed-arrival workload: requests with different prompt lengths
+are submitted on a staggered schedule, share decode batches mid-flight,
+and every prompt is absorbed through chunked prefill (state handoff via
+``causal_taylorshift(initial_state=...)``) — no token-by-token prefill
+loop remains in the serving path. With ``--check`` (default) each
+request is re-run alone through the naive single-sequence baseline and
+the tokens must match exactly at temperature 0.
 
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
-      --d-model 128 --n-layers 2 --batch 4 --prompt-len 32 --gen 16
+      --d-model 128 --n-layers 2 --requests 4 --prompt-len 32 --gen 16
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import model as M
+from repro.serve import Engine, EngineConfig, Request
 
 
-def generate(cfg, params, prompts: jnp.ndarray, *, gen_tokens: int,
-             cache_kind: str = "taylor", temperature: float = 0.0,
-             rng=None):
-    """prompts: (B, P) int32. Returns (B, P+gen_tokens)."""
+def naive_generate(cfg, params, prompts: jnp.ndarray, *, gen_tokens: int,
+                   cache_kind: str = "taylor", temperature: float = 0.0,
+                   rng=None):
+    """Token-by-token baseline (prefill AND decode through decode_step).
+
+    Kept as the correctness oracle and the benchmark strawman; the
+    engine's chunked prefill replaces this in the serving path.
+    prompts: (B, P) int32. Returns (B, P + gen_tokens).
+    """
     B, P = prompts.shape
     cache = M.init_decode_state(cfg, B, cache_len=P + gen_tokens + 1,
                                 cache_kind=cache_kind, dtype=jnp.float32)
     step = jax.jit(lambda b, c: M.decode_step(params, cfg, b, c))
 
-    # prefill (token-by-token teacher forcing; production would use the
-    # chunked prefill kernel + state handoff, see core/taylor.py)
     logits = None
     for t in range(P):
         logits, cache = step({"tokens": prompts[:, t:t+1]}, cache)
 
     toks = [prompts]
     rng = rng if rng is not None else jax.random.PRNGKey(0)
-    cur = None
     for i in range(gen_tokens):
         if temperature > 0:
             rng, sub = jax.random.split(rng)
@@ -51,29 +57,83 @@ def generate(cfg, params, prompts: jnp.ndarray, *, gen_tokens: int,
     return jnp.concatenate(toks, axis=1)
 
 
+def mixed_arrival_workload(cfg, n_requests: int, prompt_len: int, gen: int,
+                           seed: int = 1):
+    """Requests with staggered arrival steps and varied prompt lengths."""
+    reqs, arrivals = [], []
+    for i in range(n_requests):
+        plen = max(4, prompt_len - 5 * i)
+        prompt = jax.random.randint(jax.random.PRNGKey(seed + i),
+                                    (plen,), 0, cfg.vocab)
+        reqs.append(Request(request_id=f"req{i}",
+                            prompt=[int(t) for t in prompt],
+                            max_new_tokens=gen))
+        # ~half the requests arrive mid-flight, while earlier ones decode
+        arrivals.append(0 if i < (n_requests + 1) // 2 else 2 * i)
+    return reqs, arrivals
+
+
+def run_workload(engine: Engine, reqs, arrivals):
+    """Drive the engine with an arrival schedule keyed on step index."""
+    pending = sorted(zip(arrivals, reqs), key=lambda p: p[0])
+    while pending or not engine.idle:
+        while pending and pending[0][0] <= engine.step_idx:
+            engine.submit(pending.pop(0)[1])
+        engine.step()
+    return {r.request_id: engine.results[r.request_id] for r in reqs}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--n-layers", type=int, default=2)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--token-budget", type=int, default=64)
     ap.add_argument("--cache", default="taylor", choices=["taylor", "kv"])
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--no-check", dest="check", action="store_false",
+                    help="skip the per-request naive-baseline comparison")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced().with_(
         d_model=args.d_model, n_layers=args.n_layers)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0, cfg.vocab)
-    t0 = time.time()
-    out = generate(cfg, params, prompts, gen_tokens=args.gen,
-                   cache_kind=args.cache)
-    dt = time.time() - t0
-    print(f"generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s) cache={args.cache}")
-    print("sample:", out[0, -args.gen:].tolist())
+
+    engine = Engine(cfg, params, EngineConfig(
+        n_slots=args.slots, prefill_chunk=args.prefill_chunk,
+        token_budget=args.token_budget, cache_kind=args.cache,
+        max_seq_len=args.prompt_len + args.gen + 1,
+        temperature=args.temperature))
+    reqs, arrivals = mixed_arrival_workload(
+        cfg, args.requests, args.prompt_len, args.gen)
+    results = run_workload(engine, reqs, arrivals)
+
+    summary = engine.stats.summary()
+    print(json.dumps(summary, indent=2))
+    shared = max((m.active_decoding for m in engine.stats.steps), default=0)
+    print(f"max sequences sharing a decode batch: {shared}")
+
+    if args.check and args.temperature == 0.0:
+        ok = True
+        for r in reqs:
+            prompts = jnp.asarray([r.prompt], jnp.int32)
+            ref = naive_generate(cfg, params, prompts,
+                                 gen_tokens=r.max_new_tokens,
+                                 cache_kind=args.cache)
+            ref_toks = [int(t) for t in ref[0, len(r.prompt):]]
+            got = results[r.request_id].out_tokens
+            match = got == ref_toks
+            ok &= match
+            print(f"{r.request_id}: P={len(r.prompt)} "
+                  f"{'MATCH' if match else f'MISMATCH {got} != {ref_toks}'}")
+        if not ok:
+            raise SystemExit("engine output differs from naive baseline")
+        print("all requests match the naive per-request baseline exactly")
 
 
 if __name__ == "__main__":

@@ -8,10 +8,10 @@ Four cells per architecture (40 total):
   long_500k    seq_len=524288  global_batch=1     -> serve_step
 
 ``long_500k`` runs for ALL archs here: efficient-TaylorShift gives every
-attention architecture a constant-size decode state (DESIGN.md §6), and
+attention architecture a constant-size decode state (docs/design.md §6), and
 the SSM/xLSTM archs use their native states.
 
-Per-family interpretation (DESIGN.md):
+Per-family interpretation (docs/design.md):
   encdec  — seq_len = encoder frames (train/prefill, mel-stub features) or
             decoder cache length (decode shapes; encoder fixed at 1500).
   vlm     — n_patches stub embeddings + (seq_len - n_patches) text tokens.

@@ -23,7 +23,7 @@ from repro.optim import OptConfig, make_optimizer
 
 
 def default_opt_config(cfg: ModelConfig) -> OptConfig:
-    """Memory policy scales with model size (DESIGN.md §5)."""
+    """Memory policy scales with model size (docs/design.md §5)."""
     n = M.count_params_analytic(cfg)
     if n > 100e9:
         return OptConfig(moment_dtype="bfloat16", master=False,

@@ -280,23 +280,38 @@ def project_cross_kv(params: Params, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, batch: int, *, kind: str, cache_len: int,
-               cache_kind: str = "taylor", dtype=jnp.bfloat16):
-    """Cache pytree for one attention layer."""
+               cache_kind: str = "taylor", dtype=jnp.bfloat16,
+               per_slot: bool = False):
+    """Cache pytree for one attention layer.
+
+    ``per_slot=True`` gives every batch row its own position counter
+    (shape (batch,) instead of scalar) so rows can sit at different
+    context lengths — the layout the continuous-batching slot pool in
+    ``repro.serve`` decodes over.
+    """
     dh, KV = cfg.dim_head, cfg.kv_heads
+    n_dims = (batch,) if per_slot else ()
     if kind == "local":
         w = cfg.window
         return {
             "k": jnp.zeros((batch, KV, w, dh), dtype),
             "v": jnp.zeros((batch, KV, w, dh), dtype),
-            "pos": jnp.zeros((), jnp.int32),
+            "pos": jnp.zeros(n_dims, jnp.int32),
         }
     if cache_kind == "taylor":
-        return T.TaylorState.zeros((batch, KV, 1), dh)
+        return T.TaylorState.zeros((batch, KV, 1), dh, n_dims=n_dims)
     return {
         "k": jnp.zeros((batch, KV, cache_len, dh), dtype),
         "v": jnp.zeros((batch, KV, cache_len, dh), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros(n_dims, jnp.int32),
     }
+
+
+def _decode_positions(pos: jnp.ndarray) -> jnp.ndarray:
+    """Rope-broadcastable positions for a one-token step: scalar shared
+    position -> (1,); per-slot (B,) -> (B, 1, 1) so the angle table
+    broadcasts over heads."""
+    return pos[None] if pos.ndim == 0 else pos[:, None, None]
 
 
 def attn_decode(params: Params, cfg: ModelConfig, x: jnp.ndarray, cache,
@@ -318,42 +333,168 @@ def attn_decode(params: Params, cfg: ModelConfig, x: jnp.ndarray, cache,
 
     is_taylor_state = isinstance(cache, T.TaylorState)
     pos = cache.n if is_taylor_state else cache["pos"]
-    positions = pos[None]  # (1,)
-    q, k, v = _project_qkv(params, cfg, x, positions)
+    q, k, v = _project_qkv(params, cfg, x, _decode_positions(pos))
 
     if is_taylor_state:
-        qg, kg, vg = _group_q(q, cfg.kv_heads), k[:, :, None], v[:, :, None]
-        y, cache = T.taylor_decode_step(
-            cache, qg, kg, vg, tau=_tau(params, cfg, True),
-            normalize_inputs=cfg.taylor.normalize_inputs,
-            output_scale=cfg.taylor.output_scale)
-        y = y.reshape(q.shape)
+        if cfg.taylor.use_kernel and cfg.n_heads == cfg.kv_heads:
+            y, cache = _fused_taylor_decode(params, cfg, cache, q, k, v)
+        else:
+            qg = _group_q(q, cfg.kv_heads)
+            kg, vg = k[:, :, None], v[:, :, None]
+            y, cache = T.taylor_decode_step(
+                cache, qg, kg, vg, tau=_tau(params, cfg, True),
+                normalize_inputs=cfg.taylor.normalize_inputs,
+                output_scale=cfg.taylor.output_scale)
+            y = y.reshape(q.shape)
     else:
         w = cache["k"].shape[2]
         slot = jnp.mod(pos, w) if kind == "local" else pos
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 2)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 2)
+        kc = k.astype(cache["k"].dtype)
+        vc = v.astype(cache["v"].dtype)
+        if pos.ndim:   # per-slot cache: every sequence writes its own index
+            upd = jax.vmap(
+                lambda c, u, s: jax.lax.dynamic_update_slice_in_dim(c, u, s, 1))
+            ck, cv = upd(cache["k"], kc, slot), upd(cache["v"], vc, slot)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kc, slot, 2)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vc, slot, 2)
         cache = {"k": ck, "v": cv, "pos": pos + 1}
         n_valid = jnp.minimum(pos + 1, w) if kind == "local" else pos + 1
         y = _decode_attend(cfg, params, q, ck, cv, n_valid, w)
     return L.dense(params["wo"], _merge_heads(y).astype(x.dtype)), cache
 
 
-def _decode_attend(cfg, params, q, ck, cv, n_valid, cache_len):
-    """Masked single-query attention over a (possibly ring) cache."""
+def _fused_taylor_decode(params: Params, cfg: ModelConfig,
+                         cache: T.TaylorState, q, k, v):
+    """Route the one-token update+readout through the fused Pallas
+    decode kernel (kernels/taylor_decode.py). MHA only (H == KV): the
+    kernel works on flattened (B·H, ...) states with no GQA grouping."""
+    from repro.kernels.taylor_decode import taylor_decode_kernel
+
+    B, H, _, dh = q.shape
+    interp = jax.default_backend() != "tpu"
+    flat3 = lambda t: t.reshape(B * H, *t.shape[3:])   # (B,H,1,X,Y)->(BH,X,Y)
+    n_flat = cache.n if cache.n.ndim == 0 else jnp.repeat(cache.n, H)
+    st = T.TaylorState(s2=flat3(cache.s2), s1=flat3(cache.s1),
+                       s0=flat3(cache.s0), n=n_flat)
+    tau = jnp.tile(params["tau"].astype(jnp.float32).reshape(H, 1, 1),
+                   (B, 1, 1))
+    yf, stn = taylor_decode_kernel(
+        st, q.reshape(B * H, 1, dh), k.reshape(B * H, 1, dh),
+        v.reshape(B * H, 1, dh), tau=tau,
+        normalize_inputs=cfg.taylor.normalize_inputs,
+        output_scale=cfg.taylor.output_scale, interpret=interp)
+    unflat = lambda t: t.reshape(B, H, 1, *t.shape[1:])
+    new = T.TaylorState(s2=unflat(stn.s2), s1=unflat(stn.s1),
+                        s0=unflat(stn.s0), n=cache.n + 1)
+    return yf.reshape(B, H, 1, dh), new
+
+
+def attn_prefill(params: Params, cfg: ModelConfig, x: jnp.ndarray, cache,
+                 *, kind: str = "global"):
+    """Chunked-prefill attention with state handoff.
+
+    Attends causally over (cached context + this chunk) and absorbs the
+    chunk into the cache in one shot — the multi-token replacement for
+    looping :func:`attn_decode` over prompt tokens. For a TaylorState
+    cache this drives ``core.taylor.causal_taylorshift(initial_state=...,
+    return_state=True)``; the resulting state is then consumed by the
+    decode path (``taylor_decode_step`` / the fused decode kernel).
+
+    x: (B, C, d_model); cache: TaylorState or kv dict with a *scalar*
+    position counter (prefill is per-sequence — the serve engine scatters
+    the finished state into its slot pool). Returns (y, new_cache).
+    """
+    if kind != "global":
+        raise NotImplementedError(
+            "chunked prefill supports global attention only "
+            f"(got kind={kind!r}); local ring-buffer windows would need "
+            "windowed chunk logic")
+    is_taylor_state = isinstance(cache, T.TaylorState)
+    pos = cache.n if is_taylor_state else cache["pos"]
+    if pos.ndim:
+        raise ValueError("attn_prefill is per-sequence (scalar position); "
+                         "got a per-slot cache")
+    C = x.shape[1]
+    positions = pos + jnp.arange(C)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+
+    if is_taylor_state:
+        qg = _group_q(q, cfg.kv_heads)
+        kg, vg = k[:, :, None], v[:, :, None]
+        y, cache = T.causal_taylorshift(
+            qg, kg, vg, tau=_tau(params, cfg, True), chunk=C,
+            normalize_inputs=cfg.taylor.normalize_inputs,
+            output_scale=cfg.taylor.output_scale,
+            initial_state=cache, return_state=True)
+        y = y.reshape(q.shape)
+    else:
+        cache_len = cache["k"].shape[2]
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), pos, 2)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), pos, 2)
+        cache = {"k": ck, "v": cv, "pos": pos + C}
+        qpos = pos + jnp.arange(C)
+        # row i sees keys at absolute index <= pos+i; unwritten cache
+        # slots sit beyond pos+C-1 and are excluded by the same mask
+        mask = jnp.arange(cache_len)[None, :] <= qpos[:, None]      # (C, L)
+        y = _prefill_attend(cfg, params, q, ck, cv, mask, counts=qpos + 1)
+    return L.dense(params["wo"], _merge_heads(y).astype(x.dtype)), cache
+
+
+def _prefill_attend(cfg, params, q, ck, cv, mask, counts):
+    """Masked multi-query attention over a kv cache during chunked
+    prefill. q: (B,H,C,d); ck/cv: (B,KV,L,d); mask: (C, L); counts: (C,)
+    true per-row context lengths."""
     b, h, _, d = q.shape
     kv = ck.shape[1]
     if kv != h:
         rep = h // kv
         ck = jnp.repeat(ck, rep, axis=1)
         cv = jnp.repeat(cv, rep, axis=1)
-    valid = jnp.arange(cache_len) < n_valid                    # ring buffers
+    if cfg.attn_backend == "softmax":
+        x = jnp.einsum("bhcd,bhmd->bhcm", q, ck,
+                       preferred_element_type=jnp.float32) / math.sqrt(d)
+        if cfg.softcap_attn:
+            x = L.softcap(x, cfg.softcap_attn)
+        x = jnp.where(mask[None, None], x, -1e30)
+        a = jax.nn.softmax(x, -1)
+        return jnp.einsum("bhcm,bhmd->bhcd", a.astype(cv.dtype), cv)
+    tc = cfg.taylor
+    tau = _tau(params, cfg, False)
+    if tc.normalize_inputs:
+        q, ck = T.normalize_qk(q, ck, tau)
+    x = jnp.einsum("bhcd,bhmd->bhcm", q, ck,
+                   preferred_element_type=jnp.float32)
+    a = jnp.where(mask[None, None], T.taylor_exp(x), 0.0)
+    y = jnp.einsum("bhcm,bhmd->bhcd", a / jnp.sum(a, -1, keepdims=True),
+                   cv.astype(a.dtype))
+    if tc.output_scale:
+        y = y * jnp.sqrt(counts.astype(jnp.float32) / d)[None, None, :, None]
+    return y.astype(cv.dtype)
+
+
+def _decode_attend(cfg, params, q, ck, cv, n_valid, cache_len):
+    """Masked single-query attention over a (possibly ring) cache.
+
+    ``n_valid`` is scalar (shared context length) or (B,) per-slot.
+    """
+    b, h, _, d = q.shape
+    kv = ck.shape[1]
+    if kv != h:
+        rep = h // kv
+        ck = jnp.repeat(ck, rep, axis=1)
+        cv = jnp.repeat(cv, rep, axis=1)
+    # (1 or B, cache_len) validity, broadcast over heads and the 1 query
+    valid = (jnp.arange(cache_len)[None]
+             < jnp.reshape(n_valid, (-1, 1)))[:, None, None, :]
     if cfg.attn_backend == "softmax":
         x = jnp.einsum("bhqd,bhmd->bhqm", q, ck,
                        preferred_element_type=jnp.float32) / math.sqrt(d)
         if cfg.softcap_attn:
             x = L.softcap(x, cfg.softcap_attn)
-        x = jnp.where(valid[None, None, None], x, -1e30)
+        x = jnp.where(valid, x, -1e30)
         a = jax.nn.softmax(x, -1)
         return jnp.einsum("bhqm,bhmd->bhqd", a.astype(cv.dtype), cv)
     tc = cfg.taylor
@@ -362,9 +503,9 @@ def _decode_attend(cfg, params, q, ck, cv, n_valid, cache_len):
         q, ck = T.normalize_qk(q, ck, tau)
     x = jnp.einsum("bhqd,bhmd->bhqm", q, ck,
                    preferred_element_type=jnp.float32)
-    a = jnp.where(valid[None, None, None], T.taylor_exp(x), 0.0)
+    a = jnp.where(valid, T.taylor_exp(x), 0.0)
     y = jnp.einsum("bhqm,bhmd->bhqd", a / jnp.sum(a, -1, keepdims=True),
                    cv.astype(a.dtype))
     if tc.output_scale:
-        y = y * jnp.sqrt(n_valid.astype(jnp.float32) / d)
+        y = y * jnp.sqrt(T._nb(n_valid, y.ndim) / d)
     return y.astype(cv.dtype)

@@ -4,7 +4,7 @@ Chunked "state-space dual" algorithm (Dao & Gu, 2024) in pure JAX:
 intra-chunk quadratic term + inter-chunk recurrent state carried with a
 ``lax.scan`` over chunks. TaylorShift is *inapplicable* here (no
 attention); the block is implemented faithfully as the substrate the
-hybrid architecture needs (DESIGN.md §Arch-applicability).
+hybrid architecture needs (docs/design.md §Arch-applicability).
 
 Decode: constant-size per-layer state — causal-conv tail (width-1 window)
 plus the SSM state h ∈ (B, H, P, S).

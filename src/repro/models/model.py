@@ -135,10 +135,11 @@ def _block_apply(kind: str, p: Params, cfg: ModelConfig, x, *, positions,
 
 
 def _block_init_cache(kind: str, cfg: ModelConfig, batch: int, cache_len: int,
-                      cache_kind: str, dtype):
+                      cache_kind: str, dtype, per_slot: bool = False):
     if kind in ATTN_KINDS:
         return A.init_cache(cfg, batch, kind="global", cache_len=cache_len,
-                            cache_kind=cache_kind, dtype=dtype)
+                            cache_kind=cache_kind, dtype=dtype,
+                            per_slot=per_slot)
     if kind == "local":  # pragma: no cover — kind handled above
         raise AssertionError
     if kind == "mamba":
@@ -146,7 +147,8 @@ def _block_init_cache(kind: str, cfg: ModelConfig, batch: int, cache_len: int,
     if kind == "mamba_shared":
         return {"attn": A.init_cache(cfg, batch, kind="global",
                                      cache_len=cache_len,
-                                     cache_kind=cache_kind, dtype=dtype),
+                                     cache_kind=cache_kind, dtype=dtype,
+                                     per_slot=per_slot),
                 "mamba": M2.mamba2_init_cache(cfg, batch)}
     if kind == "mlstm":
         return XL.mlstm_init_cache(cfg, batch)
@@ -156,11 +158,12 @@ def _block_init_cache(kind: str, cfg: ModelConfig, batch: int, cache_len: int,
 
 
 def _cache_kind_for(kind: str, cfg: ModelConfig, cache_kind: str, batch: int,
-                    cache_len: int, dtype):
+                    cache_len: int, dtype, per_slot: bool = False):
     if kind == "local":
         return A.init_cache(cfg, batch, kind="local", cache_len=cache_len,
-                            cache_kind="kv", dtype=dtype)
-    return _block_init_cache(kind, cfg, batch, cache_len, cache_kind, dtype)
+                            cache_kind="kv", dtype=dtype, per_slot=per_slot)
+    return _block_init_cache(kind, cfg, batch, cache_len, cache_kind, dtype,
+                             per_slot)
 
 
 def _block_decode(kind: str, p: Params, cfg: ModelConfig, x, cache, *,
@@ -209,6 +212,34 @@ def _block_decode(kind: str, p: Params, cfg: ModelConfig, x, cache, *,
     elif kind == "slstm":
         y, cache = XL.slstm_decode(p["slstm"], cfg, norm(p["norm1"], x), cache)
         x = x + y
+    return x, cache
+
+
+PREFILL_KINDS = ("global", "global_moe")
+
+
+def _block_prefill(kind: str, p: Params, cfg: ModelConfig, x, cache):
+    """One residual block over a whole prompt chunk, consuming and
+    returning the decode cache (chunked prefill). Global-attention kinds
+    only: local ring-buffer windows and SSM/xLSTM blocks would need
+    their own chunkwise state handoff."""
+    if kind not in PREFILL_KINDS:
+        raise NotImplementedError(
+            f"chunked prefill: unsupported block kind {kind!r}")
+    _, norm = L.make_norm(cfg.norm)
+    h, cache = A.attn_prefill(p["attn"], cfg, norm(p["norm1"], x), cache)
+    if cfg.post_norm:
+        h = norm(p["norm1_post"], h)
+    x = x + h
+    if cfg.d_ff:
+        z = norm(p["norm2"], x)
+        if kind == "global_moe":
+            h, _ = MOE.moe_apply(p["moe"], cfg, z)
+        else:
+            h = L.mlp(p["mlp"], z, act=cfg.act)
+        if cfg.post_norm:
+            h = norm(p["norm2_post"], h)
+        x = x + h
     return x, cache
 
 
@@ -420,9 +451,19 @@ def loss_fn(params, cfg: ModelConfig, batch):
 # ---------------------------------------------------------------------------
 
 def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
-                      cache_kind: str = "taylor", dtype=jnp.bfloat16):
-    """Cache pytree mirroring the params' group/remainder structure."""
+                      cache_kind: str = "taylor", dtype=jnp.bfloat16,
+                      per_slot: bool = False):
+    """Cache pytree mirroring the params' group/remainder structure.
+
+    ``per_slot=True`` builds a continuous-batching slot pool: every batch
+    row ("slot") carries its own position counter (``pos``/TaylorState
+    ``n`` get shape (batch,)), so sequences at different context lengths
+    decode in one fixed-shape batch. Slots are populated / recycled with
+    :func:`cache_scatter_slot` / :func:`cache_reset_slot`.
+    """
     pattern, n_groups, rem = _pattern_layout(cfg)
+    if per_slot and cfg.family == "encdec":
+        raise NotImplementedError("per-slot pools: decoder-only families")
     if cfg.family == "encdec":
         blk = A.init_cache(cfg, batch, kind="global", cache_len=cache_len,
                            cache_kind=cache_kind, dtype=dtype)
@@ -442,14 +483,17 @@ def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
                 "pos": jnp.zeros((), jnp.int32)}
 
     def stack(kind):
-        one = _cache_kind_for(kind, cfg, cache_kind, batch, cache_len, dtype)
+        one = _cache_kind_for(kind, cfg, cache_kind, batch, cache_len, dtype,
+                              per_slot)
         return jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_groups, *a.shape)).copy(), one)
 
     groups = [stack(kind) for kind in pattern] if n_groups else []
-    remc = [_cache_kind_for(kind, cfg, cache_kind, batch, cache_len, dtype)
+    remc = [_cache_kind_for(kind, cfg, cache_kind, batch, cache_len, dtype,
+                            per_slot)
             for kind in rem]
-    return {"groups": groups, "rem": remc, "pos": jnp.zeros((), jnp.int32)}
+    pos = jnp.zeros((batch,) if per_slot else (), jnp.int32)
+    return {"groups": groups, "rem": remc, "pos": pos}
 
 
 def encode_for_decode(params, cfg: ModelConfig, frames, cache):
@@ -475,7 +519,9 @@ def decode_step(params, cfg: ModelConfig, batch, cache):
     x = L.embed(params["embed"], tokens) * jnp.asarray(
         jnp.sqrt(cfg.d_model), cfg.param_dtype)
     if cfg.pos_embed == "learned":
-        x = L.add_learned_pos(params["pos"], x, cache["pos"][None])
+        p = cache["pos"]
+        x = L.add_learned_pos(params["pos"], x,
+                              p[None] if p.ndim == 0 else p[:, None])
     pattern, n_groups, rem = _pattern_layout(cfg)
     shared = params.get("shared_attn")
     is_encdec = cfg.family == "encdec"
@@ -519,6 +565,109 @@ def decode_step(params, cfg: ModelConfig, batch, cache):
     if is_encdec:
         out["cross"] = cache["cross"]
     return lg, out
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill — the serving prefill path (repro.serve)
+# ---------------------------------------------------------------------------
+
+def prefill_chunk(params, cfg: ModelConfig, batch, cache):
+    """Teacher-forced forward over a (B, C) prompt chunk that consumes
+    and returns the decode cache — the state-handoff path that replaces
+    looping :func:`decode_step` over prompt tokens.
+
+    Each attention layer runs ``causal_taylorshift(initial_state=...,
+    return_state=True)`` (or a masked cache attend for kv caches), so a
+    prompt is absorbed chunk by chunk at full-sequence arithmetic
+    intensity and the final state drops straight into the recurrent
+    decode step. Cache must carry a scalar position (per-sequence
+    prefill); the serve engine scatters the result into its slot pool.
+
+    Returns (logits (B, C, vocab), new_cache).
+    """
+    if cfg.family == "encdec":
+        raise NotImplementedError("chunked prefill: decoder families only")
+    _, norm = L.make_norm(cfg.norm)
+    tokens = batch["tokens"]
+    C = tokens.shape[1]
+    x = L.embed(params["embed"], tokens) * jnp.asarray(
+        jnp.sqrt(cfg.d_model), cfg.param_dtype)
+    if cfg.pos_embed == "learned":
+        x = L.add_learned_pos(params["pos"], x,
+                              cache["pos"] + jnp.arange(C))
+    pattern, n_groups, rem = _pattern_layout(cfg)
+
+    new_groups = []
+    if n_groups:
+        def body(x, sliced):
+            new_caches = []
+            for kind, bp, bc in zip(pattern, sliced[0], sliced[1]):
+                x, nc = _block_prefill(kind, bp, cfg, x, bc)
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        x, ncaches = jax.lax.scan(
+            body, x, (tuple(params["groups"]), tuple(cache["groups"])))
+        new_groups = list(ncaches)
+
+    new_rem = []
+    for kind, bp, bc in zip(rem, params["rem"], cache["rem"]):
+        x, nc = _block_prefill(kind, bp, cfg, x, bc)
+        new_rem.append(nc)
+
+    x = norm(params["final_norm"], x)
+    lg = logits_from_hidden(params, cfg, x)
+    return lg, {"groups": new_groups, "rem": new_rem,
+                "pos": cache["pos"] + C}
+
+
+# ---------------------------------------------------------------------------
+# Slot-indexed cache pools (continuous batching, repro.serve)
+# ---------------------------------------------------------------------------
+#
+# A pool is an ``init_decode_state(..., per_slot=True)`` cache over
+# ``slots`` batch rows. Group-stacked leaves carry layers on axis 0 and
+# the slot on axis 1; remainder leaves and the position counters carry
+# the slot on axis 0. Counter leaves (``pos``, TaylorState ``n``) have
+# one fewer dim in a per-sequence cache than in the pool — the update
+# helpers expand them on the slot axis.
+
+def _slot_tree_update(pool_leaf, src_leaf, slot, axis: int):
+    if src_leaf.ndim < pool_leaf.ndim:          # scalar counters
+        src_leaf = jnp.expand_dims(src_leaf, axis)
+    return jax.lax.dynamic_update_slice_in_dim(
+        pool_leaf, src_leaf.astype(pool_leaf.dtype), slot, axis)
+
+
+def cache_gather_slot(cache, slot):
+    """Slice one slot out of a pool (slot dims kept, size 1)."""
+    g = lambda axis: lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis)
+    return {
+        "groups": [jax.tree.map(g(1), gr) for gr in cache["groups"]],
+        "rem": [jax.tree.map(g(0), r) for r in cache["rem"]],
+        "pos": jax.lax.dynamic_slice_in_dim(cache["pos"], slot, 1, 0),
+    }
+
+
+def cache_scatter_slot(cache, src, slot):
+    """Write a single-sequence cache (batch=1, scalar or size-1 counters
+    — e.g. a finished :func:`prefill_chunk` state) into pool slot
+    ``slot``. Overwrites every leaf of the slot, so a recycled slot
+    carries no trace of its previous occupant."""
+    u = lambda axis: (lambda p, s: _slot_tree_update(p, s, slot, axis))
+    return {
+        "groups": [jax.tree.map(u(1), gr, sr)
+                   for gr, sr in zip(cache["groups"], src["groups"])],
+        "rem": [jax.tree.map(u(0), r, s)
+                for r, s in zip(cache["rem"], src["rem"])],
+        "pos": _slot_tree_update(cache["pos"], src["pos"], slot, 0),
+    }
+
+
+def cache_reset_slot(cache, slot):
+    """Zero every leaf of one slot (sequence released)."""
+    sub = cache_gather_slot(cache, slot)
+    return cache_scatter_slot(cache, jax.tree.map(jnp.zeros_like, sub), slot)
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,6 @@
 """xLSTM blocks (sLSTM + mLSTM) — xlstm-125m.
 
-TaylorShift is inapplicable (attention-free; DESIGN.md
+TaylorShift is inapplicable (attention-free; docs/design.md
 §Arch-applicability). Notably the mLSTM matrix memory C_t ∈ R^{d×d} is
 the closest structural cousin of efficient-TaylorShift's S1 state — both
 are outer-product accumulators read out by the query — so the chunked

@@ -1,6 +1,6 @@
 """Optimizers: AdamW and LAMB (the paper trains with "fused LAMB").
 
-Large-scale memory policy (DESIGN.md §5):
+Large-scale memory policy (docs/design.md §5):
   * ZeRO-1 — moments/master sharded over the ``data`` axis (sharding
     rules live in distributed/sharding.py; this module is layout-free).
   * ``moment_dtype=bfloat16`` halves optimizer memory for the ≥300B MoE

@@ -1,0 +1,28 @@
+"""Continuous-batching serving engine on constant-size Taylor state.
+
+The paper's serving win — decode state that never grows with context —
+makes an inference engine unusually simple: no paged KV-block allocator
+(vLLM) is needed because every sequence's per-layer attention state is a
+fixed-size ``TaylorState``. The engine therefore reduces to
+
+  * a slot pool of preallocated per-layer states (``pool.StatePool``),
+  * chunked prefill through ``causal_taylorshift(initial_state=...)``
+    with power-of-two chunk planning (``prefill``),
+  * a token-budget scheduler interleaving prefill chunks with batched
+    decode steps (``scheduler``),
+  * request lifecycle + admission queue with backpressure (``request``),
+
+tied together by ``engine.Engine``. See docs/serving.md.
+"""
+
+from repro.serve.engine import Engine, EngineConfig
+from repro.serve.request import (AdmissionQueue, QueueFullError, Request,
+                                 Sequence, SequenceStatus, TokenEvent)
+from repro.serve.scheduler import EngineStats, Scheduler, StepMetrics
+
+__all__ = [
+    "Engine", "EngineConfig",
+    "AdmissionQueue", "QueueFullError", "Request", "Sequence",
+    "SequenceStatus", "TokenEvent",
+    "EngineStats", "Scheduler", "StepMetrics",
+]

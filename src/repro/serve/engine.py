@@ -1,0 +1,242 @@
+"""The continuous-batching inference engine.
+
+Fixed shapes everywhere: decode always runs the full slot batch
+(inactive slots compute on throwaway state and are ignored), prefill
+runs per-sequence at a bounded set of chunk lengths — so after warmup
+no step ever recompiles. Sequences at different context lengths share
+decode batches thanks to the per-slot position counters
+(``init_decode_state(per_slot=True)``).
+
+Typical use::
+
+    eng = Engine(cfg, params, EngineConfig(n_slots=4))
+    eng.submit(Request("a", prompt, max_new_tokens=16))
+    for ev in eng.run():            # streams TokenEvents
+        ...
+    eng.results["a"].out_tokens
+"""
+
+from __future__ import annotations
+
+import time
+import zlib
+from dataclasses import dataclass
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.model import PREFILL_KINDS
+from repro.serve import prefill as PF
+from repro.serve.pool import StatePool
+from repro.serve.request import (AdmissionQueue, Request, Sequence,
+                                 SequenceStatus, TokenEvent)
+from repro.serve.scheduler import EngineStats, Scheduler, StepMetrics
+
+
+@dataclass
+class EngineConfig:
+    n_slots: int = 4             # max sequences decoding concurrently
+    max_queue: int = 64          # admission backpressure threshold
+    prefill_chunk: int = 128     # target prompt tokens per prefill call
+    token_budget: int = 256      # scheduled tokens per engine step
+    max_seq_len: int = 2048      # pool cache_len (kv caches only grow to this)
+    cache_kind: str = "taylor"   # taylor | kv
+    temperature: float = 0.0
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, econf: EngineConfig | None = None):
+        econf = econf or EngineConfig()
+        bad = [k for k in cfg.layer_pattern if k not in PREFILL_KINDS]
+        if bad or cfg.family == "encdec":
+            raise NotImplementedError(
+                "serve engine: chunked prefill supports global-attention "
+                f"decoder architectures (pattern {tuple(cfg.layer_pattern)})")
+        self.cfg = cfg
+        self.econf = econf
+        self.pool = StatePool(cfg, econf.n_slots,
+                              cache_len=econf.max_seq_len,
+                              cache_kind=econf.cache_kind)
+        self.queue = AdmissionQueue(econf.max_queue)
+        self.scheduler = Scheduler(econf.token_budget)
+        self.stats = EngineStats()
+        self.sequences: dict[str, Sequence] = {}
+        self.results: dict[str, Sequence] = {}
+        self._slots: list[Sequence | None] = [None] * econf.n_slots
+        self._step_idx = 0
+        self._rng = jax.random.PRNGKey(econf.seed)
+        # params travel as a jit *argument* (not a closure capture) so
+        # the weights aren't baked into the jaxpr as constants
+        self._params = params
+        prefill_jit = jax.jit(
+            lambda p, toks, cache: M.prefill_chunk(p, cfg,
+                                                   {"tokens": toks}, cache))
+        decode_jit = jax.jit(
+            lambda p, toks, cache: M.decode_step(p, cfg,
+                                                 {"tokens": toks}, cache))
+        self._prefill_fn = lambda toks, cache: prefill_jit(
+            self._params, toks, cache)
+        self._decode_fn = lambda toks, cache: decode_jit(
+            self._params, toks, cache)
+
+    # ------------------------------------------------------------------
+    # Submission
+    # ------------------------------------------------------------------
+
+    def submit(self, request: Request) -> Sequence:
+        """Enqueue a request. Raises QueueFullError under backpressure."""
+        if (request.request_id in self.sequences
+                or request.request_id in self.results):
+            raise ValueError(f"duplicate request_id {request.request_id!r}")
+        if len(request.prompt) + request.max_new_tokens > self.econf.max_seq_len:
+            raise ValueError("prompt + max_new_tokens exceeds max_seq_len")
+        seq = Sequence(request=request)
+        self.queue.push(seq)
+        self.sequences[request.request_id] = seq
+        return seq
+
+    @property
+    def idle(self) -> bool:
+        return self.queue.depth == 0 and all(s is None for s in self._slots)
+
+    @property
+    def step_idx(self) -> int:
+        """Number of scheduler steps taken (public: arrival schedules and
+        tests key on this)."""
+        return self._step_idx
+
+    def pop_result(self, request_id: str) -> Sequence:
+        """Drain one finished sequence. ``results`` retains finished
+        sequences until popped — long-running callers must drain (and may
+        then reuse the request_id), or memory grows with requests served."""
+        return self.results.pop(request_id)
+
+    # ------------------------------------------------------------------
+    # One scheduler step
+    # ------------------------------------------------------------------
+
+    def step(self) -> tuple[StepMetrics, list[TokenEvent]]:
+        t0 = time.perf_counter()
+        events: list[TokenEvent] = []
+
+        # 1. admit — waiting sequences take free slots
+        while self.pool.free_slots and self.queue.depth:
+            seq = self.queue.pop()
+            seq.slot = self.pool.alloc()
+            seq.status = SequenceStatus.PREFILLING
+            self._slots[seq.slot] = seq
+            PF.start_prefill(seq, self.pool, self.econf.prefill_chunk)
+
+        plan = self.scheduler.plan([s for s in self._slots if s is not None])
+        budget = self.scheduler.token_budget
+
+        # 2. one batched decode step for every running sequence
+        decode_tokens = 0
+        if plan.decode:
+            tokens = np.zeros((self.pool.n_slots, 1), np.int32)
+            for s in plan.decode:
+                tokens[s.slot, 0] = s.next_token
+            logits, self.pool.cache = self._decode_fn(
+                jnp.asarray(tokens), self.pool.cache)
+            last = logits[:, -1]
+            if self.econf.temperature <= 0.0:
+                # one batched argmax + one device sync for the whole step
+                greedy = np.asarray(jnp.argmax(last, axis=-1))
+                for s in plan.decode:
+                    events.append(self._emit(s, int(greedy[s.slot])))
+            else:
+                for s in plan.decode:
+                    events.append(self._emit(s, self._sample(s, last[s.slot])))
+            decode_tokens = len(plan.decode)
+            budget -= decode_tokens
+
+        # 3. chunked prefill under the remaining budget
+        prefill_tokens = 0
+        first = True
+        for s in plan.prefill:
+            while not s.prefill_done:
+                c = s.next_chunk
+                if not first and c > budget:
+                    break
+                prefill_tokens += PF.advance_prefill(s, self._prefill_fn)
+                budget -= c
+                first = False
+            if not s.prefill_done:
+                break
+            # prompt fully absorbed: hand the state to the decode path
+            # and sample the first token from the last chunk's logits
+            self.pool.scatter(s.cache, s.slot)
+            s.cache = None
+            s.status = SequenceStatus.DECODING
+            s.t_first_token = time.perf_counter()
+            self.stats.record_first_token(s.ttft)
+            events.append(self._emit(s, self._sample(s, s.last_logits[0, -1]),
+                                     first=True))
+            s.last_logits = None
+
+        m = StepMetrics(
+            step=self._step_idx, wall_s=time.perf_counter() - t0,
+            decode_tokens=decode_tokens, prefill_tokens=prefill_tokens,
+            queue_depth=self.queue.depth, occupancy=self.pool.occupancy,
+            active_decoding=len(plan.decode))
+        self.stats.record_step(m)
+        self._step_idx += 1
+        return m, events
+
+    def run(self) -> Iterator[TokenEvent]:
+        """Drive steps until idle, streaming TokenEvents."""
+        while not self.idle:
+            _, events = self.step()
+            yield from events
+
+    def generate(self, requests: list[Request]) -> dict[str, list[int]]:
+        """Convenience batch API: submit everything, run to completion,
+        return request_id -> generated tokens."""
+        for r in requests:
+            self.submit(r)
+        for _ in self.run():
+            pass
+        return {r.request_id: self.results[r.request_id].out_tokens
+                for r in requests}
+
+    # ------------------------------------------------------------------
+    # Sampling / lifecycle internals
+    # ------------------------------------------------------------------
+
+    def _sample(self, seq: Sequence, logits_row) -> int:
+        if self.econf.temperature <= 0.0:
+            return int(jnp.argmax(logits_row))
+        # per-(request, index) keys: sampling is independent of how the
+        # request was batched, so staggered arrivals stay reproducible;
+        # crc32, not hash() — str hashing is salted per interpreter
+        rid = zlib.crc32(seq.request_id.encode()) & 0x7FFFFFFF
+        key = jax.random.fold_in(jax.random.fold_in(self._rng, rid),
+                                 len(seq.out_tokens))
+        return int(jax.random.categorical(
+            key, logits_row / self.econf.temperature))
+
+    def _emit(self, seq: Sequence, token: int, *, first: bool = False
+              ) -> TokenEvent:
+        seq.out_tokens.append(token)
+        done = (len(seq.out_tokens) >= seq.request.max_new_tokens
+                or token == seq.request.eos_id)
+        if done:
+            self._finish(seq)
+        return TokenEvent(request_id=seq.request_id, token=token,
+                          index=len(seq.out_tokens) - 1, first=first,
+                          finished=done)
+
+    def _finish(self, seq: Sequence) -> None:
+        seq.status = SequenceStatus.FINISHED
+        seq.t_finish = time.perf_counter()
+        self._slots[seq.slot] = None
+        self.pool.release(seq.slot)
+        seq.slot = None
+        del self.sequences[seq.request_id]   # live bookkeeping only
+        self.results[seq.request_id] = seq
+        self.stats.record_finish()

@@ -1,0 +1,83 @@
+"""Slot-based TaylorState cache pool.
+
+Preallocates the model's whole decode cache with a leading slot
+dimension — for a TaylorShift model that is
+``(layers, slots, kv_heads, 1, d², d+1)`` per layer group — plus
+per-slot position counters. Because every slot is constant-size,
+sequences join and leave the running batch by gather/scatter on the
+pytree: no paged blocks, no reallocation, no recompilation, and decode
+memory that never grows with context length.
+
+Slot lifecycle: ``alloc`` (admission) → ``scatter`` (prefill finished,
+single-sequence state dropped into the slot) → ``release`` (zero-reset,
+back on the free list).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+class StatePool:
+    def __init__(self, cfg: ModelConfig, n_slots: int, *, cache_len: int,
+                 cache_kind: str = "taylor", dtype=jnp.float32):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.cache_kind = cache_kind
+        self.dtype = dtype
+        self.cache = M.init_decode_state(cfg, n_slots, cache_len=cache_len,
+                                         cache_kind=cache_kind, dtype=dtype,
+                                         per_slot=True)
+        self._free = list(range(n_slots - 1, -1, -1))
+        self._scatter = jax.jit(M.cache_scatter_slot)
+        self._reset = jax.jit(M.cache_reset_slot)
+        self._gather = jax.jit(M.cache_gather_slot)
+
+    # -- slot bookkeeping ---------------------------------------------------
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - len(self._free) / self.n_slots
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("no free slot")
+        return self._free.pop()
+
+    def release(self, slot: int) -> None:
+        """Zero the slot's state and return it to the free list. The
+        zero-reset is hygiene, not correctness: a later ``scatter``
+        overwrites every leaf of the slot anyway."""
+        self.cache = self._reset(self.cache, slot)
+        self._free.append(slot)
+
+    # -- state movement -----------------------------------------------------
+
+    def new_sequence_cache(self):
+        """Private batch=1 cache a sequence prefills into before joining
+        the pool (same cache_len so leaves scatter shape-exactly)."""
+        return M.init_decode_state(self.cfg, 1, cache_len=self.cache_len,
+                                   cache_kind=self.cache_kind,
+                                   dtype=self.dtype)
+
+    def scatter(self, src_cache, slot: int) -> None:
+        self.cache = self._scatter(self.cache, src_cache, slot)
+
+    def gather(self, slot: int):
+        return self._gather(self.cache, slot)
+
+    def nbytes(self) -> int:
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(self.cache)
+                   if hasattr(x, "size"))

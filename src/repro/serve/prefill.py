@@ -1,0 +1,60 @@
+"""Chunked prefill planning and execution.
+
+Prompts are absorbed through ``models.model.prefill_chunk`` — one
+full-sequence forward per chunk with TaylorState handoff
+(``causal_taylorshift(initial_state=..., return_state=True)``) — instead
+of the old token-by-token teacher-forced loop. A prompt of length P
+costs ceil(P / chunk) jitted calls at full arithmetic intensity rather
+than P single-token calls.
+
+Chunk planning: fixed-size chunks while the remainder allows, then a
+*power-of-two decomposition* of the tail. jax retraces per distinct
+chunk length, so this bounds the number of compiled prefill shapes to
+log2(chunk) + 1 across every prompt length ever seen.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.serve.request import Sequence
+
+
+def plan_chunks(prompt_len: int, chunk: int) -> list[int]:
+    """Split ``prompt_len`` into jit-friendly chunk sizes."""
+    if prompt_len < 1:
+        raise ValueError("prompt_len must be >= 1")
+    chunk = max(1, chunk)
+    out = [chunk] * (prompt_len // chunk)
+    rest = prompt_len % chunk
+    bit = 1 << max(rest.bit_length() - 1, 0)
+    while rest:
+        if rest >= bit:
+            out.append(bit)
+            rest -= bit
+        bit >>= 1
+    return out
+
+
+def start_prefill(seq: Sequence, pool, prefill_chunk: int) -> None:
+    """Attach a private cache and a chunk plan to a just-admitted
+    sequence."""
+    seq.cache = pool.new_sequence_cache()
+    seq.chunks = plan_chunks(len(seq.request.prompt), prefill_chunk)
+    seq.chunk_idx = 0
+    seq.consumed = 0
+
+
+def advance_prefill(seq: Sequence, prefill_fn) -> int:
+    """Run the sequence's next prompt chunk. Returns tokens consumed.
+
+    ``prefill_fn(tokens (1, C) int32, cache) -> (logits, cache)`` — the
+    engine's jitted closure over ``model.prefill_chunk``.
+    """
+    c = seq.next_chunk
+    lo = seq.consumed
+    toks = jnp.asarray([seq.request.prompt[lo:lo + c]], jnp.int32)
+    seq.last_logits, seq.cache = prefill_fn(toks, seq.cache)
+    seq.chunk_idx += 1
+    seq.consumed += c
+    return c

@@ -1,0 +1,121 @@
+"""Request / sequence lifecycle types and the admission queue.
+
+A ``Request`` is what a client submits; a ``Sequence`` is the engine's
+mutable bookkeeping around it (status, slot, private prefill cache,
+generated tokens, timing). The ``AdmissionQueue`` is the front door:
+bounded, FIFO, and it *rejects* on overflow (backpressure surfaces to
+the caller instead of growing memory unboundedly).
+"""
+
+from __future__ import annotations
+
+import enum
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Sequence as Seq
+
+
+class QueueFullError(RuntimeError):
+    """Admission queue at capacity — caller must retry or shed load."""
+
+
+class SequenceStatus(enum.Enum):
+    WAITING = "waiting"          # in the admission queue
+    PREFILLING = "prefilling"    # absorbing prompt chunks
+    DECODING = "decoding"        # in the batched decode loop
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    """One generation request. ``prompt``: token ids."""
+    request_id: str
+    prompt: Seq[int]
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+
+    def __post_init__(self):
+        if len(self.prompt) < 1:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+@dataclass
+class TokenEvent:
+    """One streamed token. ``first`` marks the TTFT token."""
+    request_id: str
+    token: int
+    index: int                   # 0-based position in the generation
+    first: bool = False
+    finished: bool = False
+
+
+@dataclass
+class Sequence:
+    """Engine-side state of one request."""
+    request: Request
+    status: SequenceStatus = SequenceStatus.WAITING
+    slot: int | None = None
+    out_tokens: list[int] = field(default_factory=list)
+    # chunked-prefill bookkeeping (set on admission)
+    cache: object = None         # private batch=1 cache during prefill
+    chunks: list[int] = field(default_factory=list)
+    chunk_idx: int = 0
+    consumed: int = 0            # prompt tokens absorbed so far
+    last_logits: object = None   # (1, C, V) logits of the latest chunk
+    # timing
+    t_submit: float = field(default_factory=time.perf_counter)
+    t_first_token: float | None = None
+    t_finish: float | None = None
+
+    @property
+    def request_id(self) -> str:
+        return self.request.request_id
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.consumed >= len(self.request.prompt)
+
+    @property
+    def next_chunk(self) -> int:
+        return self.chunks[self.chunk_idx]
+
+    @property
+    def next_token(self) -> int:
+        """Token to feed the next decode step (last generated)."""
+        return self.out_tokens[-1]
+
+    @property
+    def ttft(self) -> float | None:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_submit
+
+
+class AdmissionQueue:
+    """Bounded FIFO of submitted-but-unscheduled sequences."""
+
+    def __init__(self, max_size: int):
+        if max_size < 1:
+            raise ValueError("max_size must be >= 1")
+        self.max_size = max_size
+        self._q: deque[Sequence] = deque()
+
+    @property
+    def depth(self) -> int:
+        return len(self._q)
+
+    @property
+    def full(self) -> bool:
+        return len(self._q) >= self.max_size
+
+    def push(self, seq: Sequence) -> None:
+        if self.full:
+            raise QueueFullError(
+                f"admission queue full ({self.max_size}); retry later")
+        self._q.append(seq)
+
+    def pop(self) -> Sequence:
+        return self._q.popleft()

@@ -1,0 +1,91 @@
+"""Scheduling policy and per-step metrics.
+
+Policy (one engine step under a token budget):
+
+  1. every DECODING sequence gets one token — decode latency (ITL) is
+     kept flat by never starving the running batch;
+  2. the remaining budget goes to chunked prefill of the *oldest*
+     PREFILLING sequence (FIFO keeps TTFT fair); further prefilling
+     sequences are advanced only if budget remains, and at least one
+     chunk per step is always allowed so tiny budgets still progress.
+
+Decode cost is one token per active slot; a prefill chunk costs its
+length. This is the standard continuous-batching compromise: decode
+steps amortize the weight reads over the whole batch while prefill
+chunks keep the MXU busy between them.
+"""
+
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+
+from repro.serve.request import Sequence, SequenceStatus
+
+
+@dataclass
+class StepPlan:
+    decode: list[Sequence]
+    prefill: list[Sequence]      # in service order; engine stops on budget
+
+
+@dataclass
+class StepMetrics:
+    step: int
+    wall_s: float
+    decode_tokens: int
+    prefill_tokens: int
+    queue_depth: int
+    occupancy: float             # fraction of slots held
+    active_decoding: int
+
+
+@dataclass
+class EngineStats:
+    """Aggregated over a run; ``summary()`` gives the JSON-able dict."""
+    steps: list[StepMetrics] = field(default_factory=list)
+    ttfts: list[float] = field(default_factory=list)
+    completed: int = 0
+
+    def record_step(self, m: StepMetrics) -> None:
+        self.steps.append(m)
+
+    def record_first_token(self, ttft: float) -> None:
+        self.ttfts.append(ttft)
+
+    def record_finish(self) -> None:
+        self.completed += 1
+
+    def summary(self) -> dict:
+        wall = sum(m.wall_s for m in self.steps)
+        dec = sum(m.decode_tokens for m in self.steps)
+        pre = sum(m.prefill_tokens for m in self.steps)
+        return {
+            "steps": len(self.steps),
+            "completed_requests": self.completed,
+            "wall_s": wall,
+            "decode_tokens": dec,
+            "prefill_tokens": pre,
+            "decode_tok_s": dec / wall if wall else 0.0,
+            "prefill_tok_s": pre / wall if wall else 0.0,
+            "ttft_mean_s": statistics.mean(self.ttfts) if self.ttfts else 0.0,
+            "ttft_max_s": max(self.ttfts) if self.ttfts else 0.0,
+            "mean_occupancy": (statistics.mean(m.occupancy
+                                               for m in self.steps)
+                               if self.steps else 0.0),
+        }
+
+
+class Scheduler:
+    def __init__(self, token_budget: int):
+        if token_budget < 1:
+            raise ValueError("token_budget must be >= 1")
+        self.token_budget = token_budget
+
+    def plan(self, sequences: list[Sequence]) -> StepPlan:
+        decode = [s for s in sequences
+                  if s.status is SequenceStatus.DECODING]
+        prefill = sorted((s for s in sequences
+                          if s.status is SequenceStatus.PREFILLING),
+                         key=lambda s: s.t_submit)
+        return StepPlan(decode=decode, prefill=prefill)

@@ -71,6 +71,24 @@ class TestEfficientKernel:
         np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                    rtol=3e-4, atol=3e-4)
 
+    @pytest.mark.parametrize("mode,causal", [("direct", False),
+                                             ("direct", True),
+                                             ("efficient", False)])
+    def test_prime_n_pads_instead_of_block1(self, mode, causal):
+        """Prime N must not degrade the grid to block size 1: ops pads N
+        up to the block multiple and masks the padded keys."""
+        from repro.kernels.ops import _good_block
+        n, d = 61, 8
+        assert _good_block(n, 16) == (16, 64)
+        assert _good_block(1021, 128) == (128, 1024)
+        q, k, v = rand(jax.random.PRNGKey(61), 1, 2, n, d)
+        y = ops.taylor_attention_kernel(q, k, v, mode=mode, causal=causal,
+                                        block_q=16, block_k=16,
+                                        interpret=True)
+        y_ref = ref.direct_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=3e-4, atol=3e-4)
+
     def test_direct_equals_efficient_kernels(self):
         """The paper's core identity, at the kernel level."""
         q, k, v = rand(jax.random.PRNGKey(3), 1, 2, 128, 16)
