@@ -1,0 +1,102 @@
+"""Backward peak memory vs sequence length: the training-side version of
+the paper's §4.2 memory claim.
+
+Measures XLA's compiled temp-buffer allocation (``memory_analysis()`` of
+the lowered grad function — buffer-assignment bytes, not a simulator)
+for one attention-backward at growing N:
+
+  * ``reference direct``  — jax.grad through the O(N²) jnp oracle: the
+    backward keeps N×N score/cotangent buffers alive, so temp bytes grow
+    quadratically;
+  * ``efficient custom-VJP`` — the fused kernel path
+    (kernels/taylor_grad.py): residuals are O(N·d), A_mod/KV̂ are
+    recomputed, gradients stream through (cf·d, d+1) chunks — temp bytes
+    grow linearly;
+  * ``causal chunked custom-VJP`` — the two-scan recompute backward in
+    core/taylor.py: O(N·d + d³).
+
+Prints per-N temp bytes and the fitted log-log slope over the top half
+of the sweep. The efficient/causal slopes must be sub-quadratic (~1);
+the reference slope ~2 beyond the crossover.
+
+Run:  PYTHONPATH=src python -m benchmarks.train_step_memory [--fast]
+"""
+
+from __future__ import annotations
+
+import math
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taylor as T
+from repro.kernels import ops
+
+from benchmarks.common import emit
+
+
+def _bwd_temp_bytes(loss_fn, *shapes) -> int:
+    """Temp-buffer bytes of the compiled gradient of ``loss_fn``."""
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    compiled = jax.jit(jax.grad(loss_fn, argnums=(0, 1, 2))) \
+        .lower(*args).compile()
+    return int(compiled.memory_analysis().temp_size_in_bytes)
+
+
+def _slope(ns, bys) -> float:
+    """log-log slope over the top half of the sweep (asymptotic regime)."""
+    pts = [(math.log(n), math.log(max(b, 1))) for n, b in zip(ns, bys)]
+    pts = pts[len(pts) // 2 - 1:]
+    n = len(pts)
+    mx = sum(p[0] for p in pts) / n
+    my = sum(p[1] for p in pts) / n
+    num = sum((p[0] - mx) * (p[1] - my) for p in pts)
+    den = sum((p[0] - mx) ** 2 for p in pts)
+    return num / den
+
+
+def run(d: int = 16, n_values=(128, 256, 512, 1024), heads: int = 2):
+    interp = jax.default_backend() != "tpu"
+
+    def loss_ref(q, k, v):
+        return jnp.sum(T.direct_taylorshift(q, k, v) ** 2)
+
+    def loss_eff(q, k, v):
+        return jnp.sum(ops.taylor_attention_kernel(
+            q, k, v, mode="efficient", interpret=interp) ** 2)
+
+    def loss_causal(q, k, v):
+        return jnp.sum(T.causal_taylorshift(q, k, v, chunk=64) ** 2)
+
+    rows = {"ref_direct": [], "eff_vjp": [], "causal_vjp": []}
+    for n in n_values:
+        shape = (1, heads, n, d)
+        b_ref = _bwd_temp_bytes(loss_ref, shape, shape, shape)
+        b_eff = _bwd_temp_bytes(loss_eff, shape, shape, shape)
+        b_cau = _bwd_temp_bytes(loss_causal, shape, shape, shape)
+        rows["ref_direct"].append(b_ref)
+        rows["eff_vjp"].append(b_eff)
+        rows["causal_vjp"].append(b_cau)
+        emit(f"bwd_temp_d{d}_n{n}", 0.0,
+             f"ref_direct_B={b_ref};efficient_vjp_B={b_eff};"
+             f"causal_vjp_B={b_cau}")
+
+    slopes = {name: _slope(n_values, bys) for name, bys in rows.items()}
+    for name, s in slopes.items():
+        growth = ("quadratic" if s > 1.7
+                  else "sub-quadratic" if s > 1.2 else "~linear")
+        emit(f"bwd_temp_slope_{name}", 0.0,
+             f"loglog_slope={s:.2f};growth={growth}")
+    print(f"# backward peak-memory growth (temp bytes, d={d}): "
+          f"reference direct slope {slopes['ref_direct']:.2f} vs "
+          f"efficient custom-VJP slope {slopes['eff_vjp']:.2f} "
+          f"(sub-quadratic: {slopes['eff_vjp'] < 1.7}), "
+          f"causal custom-VJP slope {slopes['causal_vjp']:.2f}",
+          flush=True)
+    return slopes
+
+
+if __name__ == "__main__":
+    fast = "--fast" in sys.argv
+    run(n_values=(128, 256, 512) if fast else (128, 256, 512, 1024))

@@ -33,6 +33,12 @@ def main():
     ap.add_argument("--scale", default="smoke", choices=["smoke", "paper"])
     ap.add_argument("--backend", default="taylor",
                     choices=["taylor", "softmax"])
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="use the pure-jnp reference attention instead of "
+                         "the fused Pallas kernels (custom-VJP training)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless every loss is finite and the "
+                         "trend decreases (CI training-smoke gate)")
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
 
@@ -40,9 +46,11 @@ def main():
     if args.scale == "smoke":
         cfg = cfg.with_(d_model=64, n_layers=2, n_heads=4, n_kv_heads=4,
                         d_ff=128)
+    use_kernel = args.backend == "taylor" and not args.no_kernels
     cfg = cfg.with_(attn_backend=args.backend, vocab=16,
                     max_seq_len=args.seq + 1, remat=False, dtype="float32",
-                    taylor=dataclasses.replace(cfg.taylor, tau_init=1.414))
+                    taylor=dataclasses.replace(cfg.taylor, tau_init=1.414,
+                                               use_kernel=use_kernel))
 
     data_cfg = DataConfig(vocab=16, global_batch=args.batch,
                           seq_len=args.seq, kind="listops")
@@ -61,15 +69,27 @@ def main():
         params, opt_state, m = update(params, grads, opt_state)
         return params, opt_state, loss
 
+    losses = []
     for s in range(args.steps):
         t0 = time.time()
         b = {k: jnp.asarray(v) for k, v in listops_like(data_cfg, s).items()}
         params, opt_state, loss = step_fn(params, opt_state, b)
         det.observe(time.time() - t0)
+        losses.append(float(loss))
         if s % 25 == 0:
             print(f"step {s:4d} loss {float(loss):.4f}")
         if mgr and s and s % 100 == 0:
             mgr.save(s, (params, opt_state))
+
+    if args.check:
+        third = max(len(losses) // 3, 1)
+        head, tail = np.mean(losses[:third]), np.mean(losses[-third:])
+        ok = np.all(np.isfinite(losses)) and tail < head
+        print(f"check: finite={bool(np.all(np.isfinite(losses)))} "
+              f"trend {head:.4f} -> {tail:.4f} "
+              f"({'decreasing' if tail < head else 'NOT decreasing'})")
+        if not ok:
+            raise SystemExit("training smoke check failed")
 
     accs = [float(C.classifier_accuracy(
         params, cfg, {k: jnp.asarray(v)

@@ -96,10 +96,23 @@ def taylor_softmax(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
 
 
 def l2_normalize(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
-    """Row-wise l2 normalization in fp32 (paper §3.3)."""
+    """Row-wise l2 normalization in fp32 (paper §3.3).
+
+    Safe-norm formulation: the naive ``x / (||x|| + eps)`` family gives a
+    spurious O(1/sqrt(eps)) gradient (or NaN, with eps outside the sqrt)
+    for an all-zero row, because autodiff differentiates through the sqrt
+    near 0. The double-``where`` below keeps sqrt's argument strictly
+    positive on *both* autodiff branches, so a zero row returns zero with
+    an exactly-zero gradient.
+    """
     x32 = x.astype(jnp.float32)
-    n = jnp.sqrt(jnp.sum(x32 * x32, axis=axis, keepdims=True) + EPS)
-    return (x32 / n).astype(x.dtype)
+    sq = jnp.sum(x32 * x32, axis=axis, keepdims=True)
+    # threshold at EPS² (‖x‖ ≤ 1e-6 counts as zero): below it the
+    # quotient-rule term x_i·x_j/‖x‖³ overflows fp32 even though the
+    # true gradient is finite
+    nonzero = sq > EPS * EPS
+    inv = jax.lax.rsqrt(jnp.where(nonzero, sq, 1.0))
+    return jnp.where(nonzero, x32 * inv, 0.0).astype(x.dtype)
 
 
 def normalize_qk(q, k, tau):
@@ -261,6 +274,149 @@ def _chunk_sums(k, vh):
     return s2, s1, s0
 
 
+def _reduce_to(x: jnp.ndarray, shape) -> jnp.ndarray:
+    """Sum ``x`` down to ``shape`` along broadcast axes (GQA lead dims)."""
+    if x.shape == tuple(shape):
+        return x
+    axes = tuple(i for i, (a, b) in enumerate(zip(x.shape, shape))
+                 if b == 1 and a != 1)
+    return jnp.sum(x, axis=axes, keepdims=True)
+
+
+# -- chunkwise scan core with a recompute-based custom VJP -------------------
+#
+# jax.grad through a lax.scan saves every per-chunk carry — here the
+# (d², d+1) prefix state, i.e. O((N/C)·d³) residual bytes, which defeats
+# the linear-memory claim for training. The custom VJP below keeps only
+# the *inputs* as residuals and recomputes the states in the backward:
+#
+#   pass 1 (forward scan):  re-derive the exclusive prefix state S_g and
+#     produce dQ_g (readout is quadratic in q, linear in S) plus the
+#     intra-chunk dK/dV (masked direct form inside the chunk);
+#   pass 2 (reverse scan):  carry the state cotangent D_g = Σ_{g'>g}
+#     ∂readout_{g'}/∂S (+ the final-state cotangent) and produce the
+#     inter-chunk dK/dV through each chunk's state contribution.
+#
+# Both scans have O(1) carries, so backward peak memory is O(N·d + d³).
+
+def _causal_scan_impl(sharder, qm, km, vm, s2_0, s1_0, s0_0):
+    """Primal chunked scan. qm: (G, *lead, C, d); km/vm may have
+    broadcastable lead dims (GQA). Returns (ys, s2, s1, s0)."""
+    C, d = qm.shape[-2], qm.shape[-1]
+    alpha = d ** 0.25
+    cm = jnp.tril(jnp.ones((C, C), dtype=bool))
+
+    def chunk_body(carry, inp):
+        """One chunk: inter-chunk readout from the running state + masked
+        intra-chunk direct term; then absorb this chunk into the state.
+        Streaming (lax.scan) keeps exactly ONE (d², d+1) state live —
+        materializing all N/C prefix states costs O(B·KV·(N/C)·d³) bytes,
+        which at d=128 dominated HBM (§Perf iteration 5)."""
+        s2, s1, s0 = carry
+        qc, kc, vc = inp                       # (*lead, chunk, d/d+1)
+        y = 0.5 * jnp.einsum("...ce,...ef->...cf", boxtimes(qc, qc), s2)
+        y += (alpha**2) * jnp.einsum("...cd,...df->...cf", qc, s1)
+        y += (alpha**4) * s0
+        # intra-chunk: q,k are alpha-scaled, so the Taylor numerator
+        # alpha^4*(1 + x_u + x_u^2/2) becomes x^2/2 + alpha^2 x + alpha^4
+        # (Alg. 1 line 9 coefficients).
+        x = jnp.einsum("...cd,...ed->...ce", qc, kc)
+        a = 0.5 * x * x + (alpha**2) * x + alpha**4
+        a = jnp.where(cm, a, 0.0)
+        y += jnp.einsum("...ce,...ef->...cf", a, vc)
+        s2 = s2 + jnp.einsum("...ce,...cf->...ef", boxtimes(kc, kc), vc)
+        s1 = s1 + jnp.einsum("...cd,...cf->...df", kc, vc)
+        s0 = s0 + jnp.sum(vc, axis=-2, keepdims=True)
+        if sharder is not None:
+            s2 = sharder(s2)
+        return (s2, s1, s0), y
+
+    (s2, s1, s0), ys = jax.lax.scan(chunk_body, (s2_0, s1_0, s0_0),
+                                    (qm, km, vm))
+    return ys, s2, s1, s0
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _causal_scan(sharder, qm, km, vm, s2_0, s1_0, s0_0):
+    return _causal_scan_impl(sharder, qm, km, vm, s2_0, s1_0, s0_0)
+
+
+def _causal_scan_fwd(sharder, qm, km, vm, s2_0, s1_0, s0_0):
+    out = _causal_scan_impl(sharder, qm, km, vm, s2_0, s1_0, s0_0)
+    return out, (qm, km, vm, s2_0, s1_0, s0_0)
+
+
+def _causal_scan_bwd(sharder, res, cot):
+    qm, km, vm, s2_0, s1_0, s0_0 = res
+    yb_all, dS2_f, dS1_f, dS0_f = cot          # yb: (G, *lead, C, d+1)
+    d = qm.shape[-1]
+    C = qm.shape[-2]
+    alpha = d ** 0.25
+    cm = jnp.tril(jnp.ones((C, C), dtype=bool))
+
+    def mat(r):                                 # (..., C, d²) -> (..., C, d, d)
+        return r.reshape(*r.shape[:-1], d, d)
+
+    def fwd_body(carry, inp):
+        """Recompute the exclusive prefix state; emit dQ and the
+        intra-chunk dK/dV parts."""
+        s2, s1, s0 = carry
+        qc, kc, vc, yb = inp
+        M = mat(jnp.einsum("...ef,...cf->...ce", s2, yb))
+        dq = 0.5 * (jnp.einsum("...cab,...cb->...ca", M, qc)
+                    + jnp.einsum("...cba,...cb->...ca", M, qc))
+        dq += (alpha**2) * jnp.einsum("...df,...cf->...cd", s1, yb)
+        x = jnp.einsum("...cd,...ed->...ce", qc, kc)
+        da = jnp.where(cm, jnp.einsum("...cf,...ef->...ce", yb, vc), 0.0)
+        dx = da * (x + alpha**2)
+        dq += jnp.einsum("...ce,...ed->...cd", dx, kc)
+        dk_i = jnp.einsum("...ce,...cd->...ed", dx, qc)
+        a = jnp.where(cm, 0.5 * x * x + (alpha**2) * x + alpha**4, 0.0)
+        dv_i = jnp.einsum("...ce,...cf->...ef", a, yb)
+        s2n = s2 + jnp.einsum("...ce,...cf->...ef", boxtimes(kc, kc), vc)
+        s1n = s1 + jnp.einsum("...cd,...cf->...df", kc, vc)
+        s0n = s0 + jnp.sum(vc, axis=-2, keepdims=True)
+        if sharder is not None:
+            s2n = sharder(s2n)
+        return (s2n, s1n, s0n), (dq, dk_i, dv_i)
+
+    _, (dq, dk_i, dv_i) = jax.lax.scan(
+        fwd_body, (s2_0, s1_0, s0_0), (qm, km, vm, yb_all))
+
+    def rev_body(carry, inp):
+        """Carry D = cotangent of the state *after* this chunk's
+        contribution; emit the inter-chunk dK/dV, then fold this chunk's
+        readout cotangent into D (its own readout saw the state *before*
+        the contribution)."""
+        D2, D1, D0 = carry
+        qc, kc, vc, yb = inp
+        W = mat(jnp.einsum("...ef,...cf->...ce", D2, vc))
+        dk_s = (jnp.einsum("...cab,...cb->...ca", W, kc)
+                + jnp.einsum("...cba,...cb->...ca", W, kc))
+        dk_s += jnp.einsum("...df,...cf->...cd", D1, vc)
+        dv_s = jnp.einsum("...ce,...ef->...cf", boxtimes(kc, kc), D2)
+        dv_s += jnp.einsum("...cd,...df->...cf", kc, D1)
+        dv_s = dv_s + D0
+        D2n = D2 + _reduce_to(
+            0.5 * jnp.einsum("...ce,...cf->...ef", boxtimes(qc, qc), yb),
+            D2.shape)
+        D1n = D1 + _reduce_to(
+            (alpha**2) * jnp.einsum("...cd,...cf->...df", qc, yb), D1.shape)
+        D0n = D0 + _reduce_to(
+            (alpha**4) * jnp.sum(yb, axis=-2, keepdims=True), D0.shape)
+        return (D2n, D1n, D0n), (dk_s, dv_s)
+
+    (dS2_0, dS1_0, dS0_0), (dk_s, dv_s) = jax.lax.scan(
+        rev_body, (dS2_f, dS1_f, dS0_f), (qm, km, vm, yb_all), reverse=True)
+
+    dk = _reduce_to(dk_i, km.shape) + _reduce_to(dk_s, km.shape)
+    dv = _reduce_to(dv_i, vm.shape) + _reduce_to(dv_s, vm.shape)
+    return dq, dk, dv, dS2_0, dS1_0, dS0_0
+
+
+_causal_scan.defvjp(_causal_scan_fwd, _causal_scan_bwd)
+
+
 def causal_taylorshift(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -319,38 +475,13 @@ def causal_taylorshift(
         s1_0 = jnp.zeros((*slead, d, d + 1), jnp.float32)
         s0_0 = jnp.zeros((*slead, 1, d + 1), jnp.float32)
 
-    cm = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
     gax = len(lead)
-
-    def chunk_body(carry, inp):
-        """One chunk: inter-chunk readout from the running state + masked
-        intra-chunk direct term; then absorb this chunk into the state.
-        Streaming (lax.scan) keeps exactly ONE (d², d+1) state live —
-        materializing all N/C prefix states costs O(B·KV·(N/C)·d³) bytes,
-        which at d=128 dominated HBM (§Perf iteration 5)."""
-        s2, s1, s0 = carry
-        qc, kc, vc = inp                       # (*lead, chunk, d/d+1)
-        y = 0.5 * jnp.einsum("...ce,...ef->...cf", boxtimes(qc, qc), s2)
-        y += (alpha**2) * jnp.einsum("...cd,...df->...cf", qc, s1)
-        y += (alpha**4) * s0
-        # intra-chunk: q,k are alpha-scaled, so the Taylor numerator
-        # alpha^4*(1 + x_u + x_u^2/2) becomes x^2/2 + alpha^2 x + alpha^4
-        # (Alg. 1 line 9 coefficients).
-        x = jnp.einsum("...cd,...ed->...ce", qc, kc)
-        a = 0.5 * x * x + (alpha**2) * x + alpha**4
-        a = jnp.where(cm, a, 0.0)
-        y += jnp.einsum("...ce,...ef->...cf", a, vc)
-        s2 = s2 + jnp.einsum("...ce,...cf->...ef", boxtimes(kc, kc), vc)
-        s1 = s1 + jnp.einsum("...cd,...cf->...df", kc, vc)
-        s0 = s0 + jnp.sum(vc, axis=-2, keepdims=True)
-        if state_sharder is not None:
-            s2 = state_sharder(s2)
-        return (s2, s1, s0), y
-
     move = lambda t: jnp.moveaxis(t, gax, 0)
-    (s2, s1, s0), ys = jax.lax.scan(
-        chunk_body, (s2_0, s1_0, s0_0),
-        (move(qg), move(kg), move(vg)))
+    # Chunkwise scan with a recompute-based custom VJP (see _causal_scan):
+    # training through this path keeps backward memory O(N·d + d³) instead
+    # of the O((N/C)·d³) a plain autodiff-of-scan would checkpoint.
+    ys, s2, s1, s0 = _causal_scan(state_sharder, move(qg), move(kg),
+                                  move(vg), s2_0, s1_0, s0_0)
     y_hat = jnp.moveaxis(ys, 0, gax).reshape(*lead, N, d + 1)
 
     denom, nom = y_hat[..., :1], y_hat[..., 1:]

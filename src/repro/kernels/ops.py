@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from repro.core import taylor as T
 from repro.kernels.taylor_direct import taylor_direct_attention
 from repro.kernels.taylor_efficient import taylor_efficient_attention
+from repro.kernels.taylor_grad import (taylor_direct_attention_vjp,
+                                       taylor_efficient_attention_vjp)
 
 
 def _on_tpu() -> bool:
@@ -62,14 +64,18 @@ def taylor_attention_kernel(q, k, v, *, tau=1.0, causal: bool = False,
     kf = _pad_rows(kf, m_pad)
     vf = _pad_rows(vf, m_pad)
     mv = m if m_pad != m else None
+    # Dispatch through the custom-VJP entries (kernels/taylor_grad.py):
+    # undifferentiated calls execute the plain forward kernels, while
+    # jax.grad gets the hand-written Pallas backward — so this one entry
+    # serves inference and training alike.
     if mode == "direct":
-        y = taylor_direct_attention(qf, kf, vf, causal=causal, block_q=bq,
-                                    block_k=bk, out_scale=out_scale,
-                                    interpret=interp, m_valid=mv)
+        y = taylor_direct_attention_vjp(qf, kf, vf, causal=causal, block_q=bq,
+                                        block_k=bk, out_scale=out_scale,
+                                        interpret=interp, m_valid=mv)
     else:
-        y = taylor_efficient_attention(qf, kf, vf, block_q=bq, block_k=bk,
-                                       out_scale=out_scale, interpret=interp,
-                                       m_valid=mv)
+        y = taylor_efficient_attention_vjp(qf, kf, vf, block_q=bq, block_k=bk,
+                                           out_scale=out_scale,
+                                           interpret=interp, m_valid=mv)
     return y[:, :n].reshape(b, h, n, d)
 
 
@@ -91,4 +97,5 @@ def _pad_rows(x, n_pad: int):
 
 
 __all__ = ["taylor_attention_kernel", "taylor_direct_attention",
-           "taylor_efficient_attention"]
+           "taylor_efficient_attention", "taylor_direct_attention_vjp",
+           "taylor_efficient_attention_vjp"]

@@ -28,7 +28,8 @@ from repro.kernels.compat import CompilerParams as _CompilerParams
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, acc_nom, acc_den, *,
             alpha: float, causal: bool, block_q: int, block_k: int,
-            n_seq: int, out_scale: bool, d: int, m_valid: int):
+            n_seq: int, out_scale: bool, d: int, m_valid: int,
+            raw: bool = False):
     iq = pl.program_id(1)
     ik = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -61,6 +62,13 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_nom, acc_den, *,
 
     @pl.when(ik == nk - 1)
     def _finish():
+        if raw:
+            # VJP path: emit (denominator, nominator) unscaled — the
+            # wrapper divides in jnp and keeps den as a residual.
+            o_ref[0] = jnp.concatenate(
+                [acc_den[...][:, None], acc_nom[...]], axis=1
+            ).astype(o_ref.dtype)
+            return
         y = acc_nom[...] / acc_den[...][:, None]
         if out_scale:
             if causal:
@@ -75,16 +83,20 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_nom, acc_den, *,
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "out_scale", "interpret",
-                                             "m_valid"))
+                                             "m_valid", "raw"))
 def taylor_direct_attention(q, k, v, *, causal: bool = False,
                             block_q: int = 128, block_k: int = 128,
                             out_scale: bool = True, interpret: bool = False,
-                            m_valid: int | None = None):
+                            m_valid: int | None = None, raw: bool = False):
     """q, k, v: (BH, N, d) — q, k pre-normalized and α-scaled.
 
     ``m_valid``: number of real keys when k/v are zero-padded up to a
     block multiple (ops.py pad-and-mask path); keys ≥ m_valid are masked
     out of both nominator and denominator.
+
+    ``raw``: emit (BH, N, d+1) fp32 ``concat(den, nom)`` without the
+    division or output scaling — the custom-VJP forward uses this to keep
+    the row denominators as residuals for the backward kernels.
     """
     bh, n, d = q.shape
     m = k.shape[1]
@@ -97,8 +109,11 @@ def taylor_direct_attention(q, k, v, *, causal: bool = False,
 
     kernel = functools.partial(
         _kernel, alpha=alpha, causal=causal, block_q=block_q,
-        block_k=block_k, n_seq=m, out_scale=out_scale, d=d, m_valid=m_valid)
+        block_k=block_k, n_seq=m, out_scale=out_scale, d=d, m_valid=m_valid,
+        raw=raw)
 
+    d_out = d + 1 if raw else d
+    out_dtype = jnp.float32 if raw else v.dtype
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -107,8 +122,8 @@ def taylor_direct_attention(q, k, v, *, causal: bool = False,
             pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, n, d), v.dtype),
+        out_specs=pl.BlockSpec((1, block_q, d_out), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, d_out), out_dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, d), jnp.float32),
             pltpu.VMEM((block_q,), jnp.float32),

@@ -98,8 +98,9 @@ def _amod_call(k, vh, *, cf: int, block_k: int, interpret: bool):
 # ---------------------------------------------------------------------------
 
 def _readout_kernel(q_ref, qc_ref, a_ref, kv_ref, s0_ref, o_ref, acc, *,
-                    cf: int, d: int, alpha: float, n_keys: int,
-                    out_scale: bool):
+                    cf: int, d: int, coef2: float, coef1: float,
+                    coef0: float, n_keys: int, out_scale: bool,
+                    divide: bool):
     ic = pl.program_id(2)
     nc = pl.num_programs(2)
 
@@ -111,7 +112,7 @@ def _readout_kernel(q_ref, qc_ref, a_ref, kv_ref, s0_ref, o_ref, acc, *,
     qc = qc_ref[0].astype(jnp.float32)                   # (bq, cf)
     a = a_ref[0]                                         # (cf·d, d+1) fp32
     q2 = (qc[:, :, None] * q[:, None, :]).reshape(q.shape[0], cf * d)
-    acc[...] += 0.5 * jax.lax.dot_general(
+    acc[...] += coef2 * jax.lax.dot_general(
         q2, a, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
     @pl.when(ic == nc - 1)
@@ -119,9 +120,15 @@ def _readout_kernel(q_ref, qc_ref, a_ref, kv_ref, s0_ref, o_ref, acc, *,
         kv = kv_ref[0]                                   # (d, d+1) fp32
         s0 = s0_ref[0]                                   # (1, d+1) fp32
         y = acc[...]
-        y += (alpha ** 2) * jax.lax.dot_general(
+        y += coef1 * jax.lax.dot_general(
             q, kv, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-        y += (alpha ** 4) * s0
+        y += coef0 * s0
+        if not divide:
+            # raw ŷ = (den, nom): shared by the custom-VJP forward (den is
+            # a backward residual) and by the dV̂ backward contraction
+            # (coefs 1,1,1), which is this same bilinear readout.
+            o_ref[0] = y.astype(o_ref.dtype)
+            return
         out = y[:, 1:] / y[:, :1]
         if out_scale:
             out = out * (float(n_keys) / d) ** 0.5
@@ -129,13 +136,18 @@ def _readout_kernel(q_ref, qc_ref, a_ref, kv_ref, s0_ref, o_ref, acc, *,
 
 
 def _readout_call(q, a_mod, kv, s0, *, cf: int, block_q: int, n_keys: int,
-                  out_scale: bool, out_dtype, interpret: bool):
+                  out_scale: bool, out_dtype, interpret: bool,
+                  coefs: tuple | None = None, divide: bool = True):
     bh, n, d = q.shape
     alpha = float(d) ** 0.25
+    coef2, coef1, coef0 = (0.5, alpha ** 2, alpha ** 4) if coefs is None \
+        else coefs
     nchunks = d // cf
     grid = (bh, n // block_q, nchunks)
-    kernel = functools.partial(_readout_kernel, cf=cf, d=d, alpha=alpha,
-                               n_keys=n_keys, out_scale=out_scale)
+    kernel = functools.partial(_readout_kernel, cf=cf, d=d, coef2=coef2,
+                               coef1=coef1, coef0=coef0, n_keys=n_keys,
+                               out_scale=out_scale, divide=divide)
+    d_out = d if divide else d + 1
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -146,8 +158,8 @@ def _readout_call(q, a_mod, kv, s0, *, cf: int, block_q: int, n_keys: int,
             pl.BlockSpec((1, d, d + 1), lambda b, i, c: (b, 0, 0)),
             pl.BlockSpec((1, 1, d + 1), lambda b, i, c: (b, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, c: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, n, d), out_dtype),
+        out_specs=pl.BlockSpec((1, block_q, d_out), lambda b, i, c: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, d_out), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_q, d + 1), jnp.float32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
@@ -158,6 +170,18 @@ def _readout_call(q, a_mod, kv, s0, *, cf: int, block_q: int, n_keys: int,
 # ---------------------------------------------------------------------------
 # Public entry
 # ---------------------------------------------------------------------------
+
+def build_vhat(v, m_valid: int) -> jnp.ndarray:
+    """V̂ = concat(1, v) fp32 with padded keys (≥ m_valid) zeroed — the
+    ones column included, which is what removes a padded key from both
+    nominator and denominator. Single home for the padding convention:
+    the forward here and the backward (taylor_grad.py) must agree."""
+    bh, m, _ = v.shape
+    ones = jnp.ones((bh, m, 1), jnp.float32)
+    vh = jnp.concatenate([ones, v.astype(jnp.float32)], axis=-1)
+    if m_valid < m:
+        vh = vh * (jnp.arange(m) < m_valid)[None, :, None]
+    return vh
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_k",
                                              "out_scale", "interpret",
@@ -184,10 +208,7 @@ def taylor_efficient_attention(q, k, v, *, block_q: int = 128,
     alpha = float(d) ** 0.25
     cf = _pick_chunk_factor(d)
 
-    ones = jnp.ones((bh, m, 1), jnp.float32)
-    vh = jnp.concatenate([ones, v.astype(jnp.float32)], axis=-1)
-    if m_valid < m:
-        vh = vh * (jnp.arange(m) < m_valid)[None, :, None]
+    vh = build_vhat(v, m_valid)
 
     a_mod = _amod_call(k, vh, cf=cf, block_k=block_k, interpret=interpret)
     # small summaries — plain XLA ops (negligible traffic)

@@ -14,6 +14,7 @@ Scales from CPU smoke runs to the production mesh unchanged:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import logging
 import time
 
@@ -122,6 +123,9 @@ def main():
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--restartable", action="store_true",
                     help="wrap in the fault-tolerant supervision loop")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="train through the pure-jnp reference attention "
+                         "instead of the fused Pallas kernels (custom VJP)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -130,6 +134,12 @@ def main():
     if args.n_layers:
         cfg = cfg.with_(n_layers=args.n_layers)
     cfg = cfg.with_(max_seq_len=max(cfg.max_seq_len, args.seq))
+    if not args.no_kernels and cfg.attn_backend == "taylor":
+        # Training routes through the fused kernels (differentiable via
+        # the custom-VJP backward kernels, docs/training.md); causal
+        # beyond-crossover sites keep the chunked-scan core path.
+        cfg = cfg.with_(taylor=dataclasses.replace(cfg.taylor,
+                                                   use_kernel=True))
 
     mesh = (make_local_mesh() if args.mesh == "local"
             else make_production_mesh(multi_pod=args.mesh == "multi"))

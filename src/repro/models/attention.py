@@ -149,6 +149,11 @@ def _taylor_global(cfg: ModelConfig, params, q, k, v, *, causal):
         # said win, measurement said regression — reverted for causal).
         mode = (_sharding_aware_mode(cfg, N, d) if not causal
                 else T.pick_mode(N, d))
+    if tc.use_kernel and tc.normalize_inputs:
+        y = _taylor_global_kernel(cfg, params, q, k, v, causal=causal,
+                                  mode=mode)
+        if y is not None:
+            return y
     kv_heads = cfg.kv_heads
     if mode == "direct":
         # direct handles GQA by repeating K/V (it materializes NxN anyway).
@@ -184,6 +189,47 @@ def _taylor_global(cfg: ModelConfig, params, q, k, v, *, causal):
             normalize_inputs=tc.normalize_inputs,
             output_scale=tc.output_scale)
     return y.reshape(q.shape)
+
+
+def _taylor_global_kernel(cfg: ModelConfig, params, q, k, v, *, causal,
+                          mode):
+    """Fused-kernel route for full-sequence attention (train *and*
+    prefill): the Pallas kernels carry custom VJPs
+    (kernels/taylor_grad.py), so jax.grad through this path runs the
+    hand-written backward kernels instead of falling back to the jnp
+    reference. ``mode`` arrives already resolved by _taylor_global.
+
+    Returns None when the fused path doesn't apply and the caller should
+    use the core jnp forms:
+      * multi-device mesh — pallas_call has no partitioning rule, so
+        inside pjit it would replicate the full (B·H, N, d) arrays; the
+        jnp einsum path keeps the mesh-aware sharding (and the causal
+        state_sharder). A single-device mesh (launch/train.py always
+        enters ctx.use(mesh), even locally) is harmless: nothing is
+        partitioned, so the kernels stay in play;
+      * causal + efficient — the chunked-scan core path, whose
+        recompute-based custom VJP already trains in linear memory;
+      * GQA + efficient — the flat kernels would recompute the
+        per-kv-head A_mod/KV̂ sums rep× via repeated K/V; the grouped
+        core path shares one state per kv-head.
+    """
+    from repro.kernels import ops as K
+
+    tc = cfg.taylor
+    c = ctx.get()
+    if c.enabled and (c.mesh is None or c.mesh.devices.size > 1):
+        return None
+    if causal and mode != "direct":
+        return None
+    if cfg.kv_heads != cfg.n_heads:
+        if mode == "efficient":
+            return None
+        rep = cfg.n_heads // cfg.kv_heads
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    return K.taylor_attention_kernel(
+        q, k, v, tau=_tau(params, cfg, False), causal=causal, mode=mode,
+        out_scale=tc.output_scale)
 
 
 def _local_taylor(cfg: ModelConfig, params, q, k, v):

@@ -48,6 +48,7 @@ class TestArchSmoke:
         assert bool(jnp.all(jnp.isfinite(hidden.astype(jnp.float32)))), arch
         assert bool(jnp.isfinite(aux))
 
+    @pytest.mark.slow
     def test_loss_and_grad_step(self, arch_setup):
         arch, cfg, params = arch_setup
         batch = make_batch(cfg)
@@ -59,6 +60,7 @@ class TestArchSmoke:
         assert bool(jnp.isfinite(gnorm)), arch
         assert float(gnorm) > 0, f"{arch}: zero gradient"
 
+    @pytest.mark.slow
     def test_decode_step(self, arch_setup):
         arch, cfg, params = arch_setup
         cache = M.init_decode_state(cfg, BATCH, cache_len=SEQ,

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.kernels
+
 from repro.core import taylor as T
 from repro.kernels import ops
 from repro.kernels import ref

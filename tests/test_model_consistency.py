@@ -35,9 +35,10 @@ def _logits_decode(cfg, params, tokens, cache_kind):
 @pytest.mark.parametrize("arch,cache_kind", [
     ("stablelm-1.6b", "taylor"),
     ("stablelm-1.6b", "kv"),
-    ("gemma3-1b", "taylor"),
-    ("zamba2-7b", "taylor"),
-    ("xlstm-125m", "taylor"),   # cache_kind ignored: state blocks
+    pytest.param("gemma3-1b", "taylor", marks=pytest.mark.slow),
+    pytest.param("zamba2-7b", "taylor", marks=pytest.mark.slow),
+    # cache_kind ignored for xlstm: state blocks
+    pytest.param("xlstm-125m", "taylor", marks=pytest.mark.slow),
 ])
 def test_decode_matches_forward(arch, cache_kind):
     cfg = get_config(arch).reduced()
@@ -50,6 +51,7 @@ def test_decode_matches_forward(arch, cache_kind):
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_whisper_decode_matches_forward():
     cfg = get_config("whisper-large-v3").reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -112,6 +114,7 @@ def test_ssd_chunked_matches_sequential(chunk):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_mamba2_decode_matches_prefill():
     cfg = get_config("zamba2-7b").reduced()
     params = M2.mamba2_init(jax.random.PRNGKey(4), cfg)
@@ -127,6 +130,7 @@ def test_mamba2_decode_matches_prefill():
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_mlstm_decode_matches_prefill():
     cfg = get_config("xlstm-125m").reduced()
     params = XL.mlstm_init(jax.random.PRNGKey(6), cfg)

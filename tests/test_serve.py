@@ -37,6 +37,7 @@ def _prompt(cfg, n, seed):
 # Chunked prefill ≡ token-by-token
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("cache_kind", ["taylor", "kv"])
 @pytest.mark.parametrize("chunks", [(SEQ,), (16, 8), (8, 8, 8), (13, 11)])
 def test_prefill_chunk_logit_equivalent(setup, cache_kind, chunks):
@@ -76,6 +77,7 @@ def test_prefill_chunk_logit_equivalent(setup, cache_kind, chunks):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_engine_matches_naive_baseline(setup):
     """Engine generation (chunked prefill + pooled decode) == naive
     token-by-token generation, exactly, at temperature 0."""
@@ -93,6 +95,7 @@ def test_engine_matches_naive_baseline(setup):
 # Continuous batching
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_staggered_arrivals_match_solo_runs(setup):
     """Requests admitted mid-flight share decode batches with running
     sequences yet produce exactly the solo-run tokens."""
@@ -147,6 +150,7 @@ def test_admission_backpressure(setup):
 # Slot pool hygiene
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_slot_reuse_does_not_leak_state(setup):
     """A slot that served a long request must serve a later request
     identically to a fresh engine — and is zeroed right at release."""
@@ -165,6 +169,94 @@ def test_slot_reuse_does_not_leak_state(setup):
         n_slots=1, prefill_chunk=8, token_budget=16, max_seq_len=64))
     fresh = fresh_eng.generate([Request("b", p2, max_new_tokens=5)])["b"]
     assert reused == fresh
+
+
+@pytest.mark.slow
+def test_engine_restart_mid_stream(setup):
+    """Kill an engine mid-generation and restart from scratch: the fresh
+    engine must produce exactly the clean-run tokens (no state survives
+    outside the engine), and the abandoned engine's partial output must
+    be a prefix of the clean run (greedy decode is deterministic)."""
+    cfg, params = setup
+    prompts = {"r0": _prompt(cfg, 17, seed=50), "r1": _prompt(cfg, 9, seed=51)}
+    mk = lambda: Engine(cfg, params, EngineConfig(
+        n_slots=2, prefill_chunk=8, token_budget=24, max_seq_len=64))
+
+    clean = mk().generate(
+        [Request(rid, p, max_new_tokens=8) for rid, p in prompts.items()])
+
+    crashed = mk()
+    for rid, p in prompts.items():
+        crashed.submit(Request(rid, p, max_new_tokens=8))
+    for _ in range(4):           # mid-stream: prefill done, decode underway
+        crashed.step()
+    partial = {rid: list(s.out_tokens)
+               for rid, s in crashed.sequences.items()}
+    assert any(partial.values()), "restart happened before any token"
+    for rid, toks in partial.items():
+        assert toks == clean[rid][:len(toks)], rid
+
+    restarted = mk()             # the old engine is simply dropped
+    out = restarted.generate(
+        [Request(rid, p, max_new_tokens=8) for rid, p in prompts.items()])
+    assert out == clean
+
+
+def test_restart_released_slots_are_reset(setup):
+    """After a mid-stream abandon, finishing the remaining work through
+    the same pool must leave every slot zeroed once drained — the
+    release path, not scatter, is what guarantees a clean slot."""
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=2, prefill_chunk=8, token_budget=24, max_seq_len=64))
+    eng.submit(Request("a", _prompt(cfg, 12, seed=60), max_new_tokens=4))
+    eng.submit(Request("b", _prompt(cfg, 7, seed=61), max_new_tokens=4))
+    for _ in range(3):
+        eng.step()
+    for _ in eng.run():          # drain to idle
+        pass
+    assert eng.idle
+    for slot in range(eng.pool.n_slots):
+        leftovers = sum(float(jnp.sum(jnp.abs(x)))
+                        for x in jax.tree.leaves(eng.pool.gather(slot)))
+        assert leftovers == 0.0, f"slot {slot} not zero-reset"
+
+
+def test_long_prefill_does_not_starve_decode(setup):
+    """Scheduler starvation: while a long prompt prefills, every
+    DECODING sequence still gets exactly one token per step, and prefill
+    work per step stays within the token budget (modulo the one-chunk
+    minimum that guarantees progress)."""
+    cfg, params = setup
+    budget, chunk = 12, 4
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=2, prefill_chunk=chunk, token_budget=budget, max_seq_len=64))
+
+    # short request reaches DECODING first
+    eng.submit(Request("short", _prompt(cfg, 4, seed=70), max_new_tokens=24))
+    eng.step()
+    assert eng.sequences["short"].out_tokens, "short prompt not prefilled"
+
+    # long prompt needs many chunked-prefill steps under this budget
+    eng.submit(Request("long", _prompt(cfg, 40, seed=71), max_new_tokens=2))
+    decode_starved = []
+    while ("long" in eng.sequences
+           and not eng.sequences["long"].prefill_done
+           and "short" in eng.sequences):
+        before = len(eng.sequences["short"].out_tokens)
+        m, _ = eng.step()
+        after = len(eng.sequences["short"].out_tokens) \
+            if "short" in eng.sequences else before + 1
+        decode_starved.append(after - before == 0)
+        # decode goes first; prefill spends at most the leftover budget,
+        # except the guaranteed first chunk
+        assert m.prefill_tokens <= max(budget - m.decode_tokens, chunk)
+    assert decode_starved, "long prefill finished before any shared step"
+    assert not any(decode_starved), \
+        "a decoding sequence was starved during a long prefill"
+    for _ in eng.run():
+        pass
+    assert eng.results["short"].out_tokens and eng.results["long"].out_tokens
 
 
 def test_plan_chunks():

@@ -239,6 +239,7 @@ class TestFaultTolerance:
 # ---------------------------------------------------------------------------
 
 class TestTrainLoop:
+    @pytest.mark.slow
     def test_loss_decreases_and_restart_resumes(self, tmp_path):
         from repro.configs import get_config
         from repro.launch.train import train
@@ -257,6 +258,7 @@ class TestTrainLoop:
 
 
 class TestGradAccumulation:
+    @pytest.mark.slow
     def test_microbatched_grads_match_full_batch(self):
         """M-way gradient accumulation == single big batch (same math)."""
         import jax
