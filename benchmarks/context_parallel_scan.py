@@ -1,0 +1,100 @@
+"""Sequence-parallel causal-scan wall-clock vs number of `seq` shards.
+
+Measures the chunked causal TaylorShift scan at N ∈ {4k, 16k, 64k} on a
+host-platform device mesh (XLA_FLAGS is set *before* the jax import, the
+same trick launch/dryrun.py uses), sweeping the size of the `seq` axis:
+S=1 is the streaming single-device `lax.scan`; S>1 runs the associative
+scan with the shard_map chunk-boundary state exchange
+(distributed/seqscan.py). Reports forward and grad wall-clock per call.
+
+CPU host-platform "devices" share the same silicon, so absolute speedups
+understate a real mesh — the point of the sweep is (a) the exchange
+costs O(S·d³) regardless of N and (b) wall-clock does not *grow* with S
+the way a sequential scan's chunk count does.
+
+  PYTHONPATH=src python -m benchmarks.context_parallel_scan \
+      --devices 8 --shards 1 2 4 8
+"""
+
+import argparse
+import os
+import sys
+
+if __name__ == "__main__":
+    _ap = argparse.ArgumentParser()
+    _ap.add_argument("--devices", type=int, default=8)
+    _ap.add_argument("--shards", type=int, nargs="+", default=[1, 2, 4, 8])
+    _ap.add_argument("--seq-lens", type=int, nargs="+",
+                     default=[4096, 16384, 65536])
+    _ap.add_argument("--d", type=int, default=32)
+    _ap.add_argument("--heads", type=int, default=2)
+    _ap.add_argument("--chunk", type=int, default=256)
+    _ap.add_argument("--grad", action="store_true",
+                     help="also time the backward (custom-VJP recompute)")
+    ARGS = _ap.parse_args()
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={ARGS.devices} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import jax                                                  # noqa: E402
+import jax.numpy as jnp                                     # noqa: E402
+
+from repro.core import taylor as T                          # noqa: E402
+from repro.distributed import seqscan                       # noqa: E402
+from repro.launch.mesh import make_seq_mesh                 # noqa: E402
+from repro.models import backend as B                       # noqa: E402
+
+from benchmarks.common import emit, timeit                  # noqa: E402
+
+
+def scan_call(n, d, heads, chunk, shards, mesh, grad=False):
+    key = jax.random.PRNGKey(n + shards)
+    q, k, v = (jax.random.normal(kk, (1, heads, n, d))
+               for kk in jax.random.split(key, 3))
+    kwargs = {"chunk": B.plan_chunk(n, chunk, seq_shards=shards)}
+    if shards > 1:
+        kwargs["scan_fn"] = seqscan.make_seq_scan(mesh)
+
+    def fwd(q, k, v):
+        return T.causal_taylorshift(q, k, v, **kwargs)
+
+    fn = (jax.jit(jax.grad(lambda *a: jnp.sum(fwd(*a) ** 2),
+                           argnums=(0, 1, 2)))
+          if grad else jax.jit(fwd))
+    return fn, (q, k, v)
+
+
+def run(seq_lens, shards_list, *, d, heads, chunk, grad=False):
+    results = {}
+    for n in seq_lens:
+        base = None                      # the measured s=1 timing, if any
+        for s in shards_list:
+            if n % s:
+                continue
+            mesh = make_seq_mesh(s) if s > 1 else None
+            fn, args = scan_call(n, d, heads, chunk, s, mesh, grad=grad)
+            if mesh is not None:
+                with mesh:
+                    dt, _ = timeit(fn, *args, warmup=1, iters=3)
+            else:
+                dt, _ = timeit(fn, *args, warmup=1, iters=3)
+            if s == 1:
+                base = dt
+            tag = "grad" if grad else "fwd"
+            derived = (f"speedup_vs_s1={base / dt:.2f}" if base is not None
+                       else "speedup_vs_s1=n/a")
+            emit(f"ctx_scan_{tag}_n{n}_s{s}", dt * 1e6, derived)
+            results[(n, s, grad)] = dt
+    return results
+
+
+if __name__ == "__main__":
+    shards = [s for s in ARGS.shards if s <= len(jax.devices())]
+    if shards != ARGS.shards:
+        print(f"# clipped shard list to device count: {shards}",
+              file=sys.stderr)
+    run(ARGS.seq_lens, shards, d=ARGS.d, heads=ARGS.heads,
+        chunk=ARGS.chunk)
+    if ARGS.grad:
+        run(ARGS.seq_lens, shards, d=ARGS.d, heads=ARGS.heads,
+            chunk=ARGS.chunk, grad=True)

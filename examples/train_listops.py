@@ -21,6 +21,7 @@ from repro.configs import get_config
 from repro.data.pipeline import DataConfig, listops_like
 from repro.distributed.ft import StragglerDetector
 from repro.checkpoint.manager import CheckpointManager
+from repro.models import backend as B
 from repro.models import classifier as C
 from repro.optim import OptConfig, make_optimizer
 
@@ -46,11 +47,11 @@ def main():
     if args.scale == "smoke":
         cfg = cfg.with_(d_model=64, n_layers=2, n_heads=4, n_kv_heads=4,
                         d_ff=128)
-    use_kernel = args.backend == "taylor" and not args.no_kernels
     cfg = cfg.with_(attn_backend=args.backend, vocab=16,
                     max_seq_len=args.seq + 1, remat=False, dtype="float32",
-                    taylor=dataclasses.replace(cfg.taylor, tau_init=1.414,
-                                               use_kernel=use_kernel))
+                    taylor=dataclasses.replace(cfg.taylor, tau_init=1.414))
+    # kernel/mode routing resolves through models/backend.py:select_backend
+    cfg = B.configure_for_training(cfg, use_kernels=not args.no_kernels)
 
     data_cfg = DataConfig(vocab=16, global_batch=args.batch,
                           seq_len=args.seq, kind="listops")

@@ -42,14 +42,20 @@ class SSMConfig:
 
 @dataclass(frozen=True)
 class TaylorConfig:
-    """Paper knobs."""
+    """Paper knobs. Backend routing (which implementation serves which
+    attention site under which mesh) is resolved from these by
+    ``models/backend.py:select_backend`` — the single dispatch layer."""
     enabled: bool = True
     mode: str = "auto"            # auto | direct | efficient
+    optimize_for: str = "speed"   # crossover flavor: speed (N0) | memory (N1)
     chunk: int = 128              # causal chunk size
     tau_init: float = 1.0         # learnable per-head temperature init
     normalize_inputs: bool = True
     output_scale: bool = True
     use_kernel: bool = False      # route through the Pallas kernels
+    scan: str = "auto"            # causal chunk-scan core: auto | sequential
+    #   | parallel — auto streams one state (lax.scan) on a single seq
+    #   shard and switches to the associative form under a `seq` mesh axis
 
 
 @dataclass(frozen=True)

@@ -417,6 +417,239 @@ def _causal_scan_bwd(sharder, res, cot):
 _causal_scan.defvjp(_causal_scan_fwd, _causal_scan_bwd)
 
 
+# -- sequence-parallel chunk scan (associative formulation) ------------------
+#
+# The prefix states S2/S1/S0 are plain sums of per-chunk contributions, so
+# they compose *associatively*: combine(a, b) of two segment partials is the
+# partial of the concatenated segment ("Transformers are RNNs", but with a
+# trivially associative ⊕). That licenses
+#
+#   1. within a device: jax.lax.associative_scan over the chunk axis — the
+#      G chunk states materialize at once (O(G·d³) memory, vs the O(d³)
+#      streaming scan) but every chunk's readout runs in parallel;
+#   2. across devices: a chunk-boundary exchange over a `seq` mesh axis —
+#      each shard all-gathers the *totals* of the other shards and adds the
+#      ones before (forward) / after (backward) its own index. The exchange
+#      lives in distributed/seqscan.py (shard_map); the impl functions here
+#      take an ``axis_name`` so the same math serves both layers.
+#
+# The backward is the same recompute strategy as _causal_scan_bwd, but with
+# both passes parallel: pass 1 re-derives the exclusive prefix states with
+# the associative scan; pass 2 turns the per-chunk readout cotangents into
+# suffix sums (a reverse associative scan + the cross-shard suffix
+# exchange) instead of a reverse lax.scan.
+
+def combine_states(a: TaylorState, b: TaylorState) -> TaylorState:
+    """Associative combine: state of segment A ++ segment B.
+
+    Elementwise sums (and token-count addition), hence associative *and*
+    commutative — the property the sequence-parallel scan rests on
+    (tests/test_seq_parallel.py pins it).
+    """
+    return TaylorState(s2=a.s2 + b.s2, s1=a.s1 + b.s1, s0=a.s0 + b.s0,
+                       n=a.n + b.n)
+
+
+def _tuple_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def _par_partials(km, vm):
+    """Per-chunk state contributions, all chunks at once.
+
+    km: (G, *klead, C, d); vm: (G, *vlead, C, d+1).
+    Returns (p2, p1, p0) with a leading chunk axis.
+    """
+    p2 = jnp.einsum("...ce,...cf->...ef", boxtimes(km, km), vm)
+    p1 = jnp.einsum("...cd,...cf->...df", km, vm)
+    p0 = jnp.sum(vm, axis=-2, keepdims=True)
+    return p2, p1, p0
+
+
+def _pshift(x, axis_name, axis_size, shift):
+    """x from the shard ``shift`` positions earlier on the axis (exact
+    zeros where no source exists — non-wrapping ppermute semantics).
+    ``shift < 0`` pulls from later shards."""
+    if shift >= 0:
+        perm = [(i, i + shift) for i in range(axis_size - shift)]
+    else:
+        perm = [(i, i + shift) for i in range(-shift, axis_size)]
+    return jax.lax.ppermute(x, axis_name, perm)
+
+
+def _shard_prefix_exchange(totals, axis_name, axis_size):
+    """Exclusive prefix over the `seq` mesh axis of per-shard totals.
+
+    Returns (incoming, global_total): the sum of every shard strictly
+    before this one, and the sum over all shards (for the final state).
+    Log-depth Hillis–Steele over ppermute + one psum — deliberately no
+    ``axis_index``: a mask built from partition-id does not lower when
+    the surrounding mesh axes are in GSPMD `auto` mode.
+    """
+    def one(t):
+        inc, shift = t, 1
+        while shift < axis_size:                 # inclusive prefix
+            inc = inc + _pshift(inc, axis_name, axis_size, shift)
+            shift *= 2
+        return (_pshift(inc, axis_name, axis_size, 1),
+                jax.lax.psum(t, axis_name))
+    pairs = [one(t) for t in totals]
+    return tuple(p[0] for p in pairs), tuple(p[1] for p in pairs)
+
+
+def _shard_suffix_exchange(totals, axis_name, axis_size):
+    """Exclusive *suffix* over the `seq` axis (backward direction)."""
+    def one(t):
+        inc, shift = t, 1
+        while shift < axis_size:                 # inclusive suffix
+            inc = inc + _pshift(inc, axis_name, axis_size, -shift)
+            shift *= 2
+        return (_pshift(inc, axis_name, axis_size, -1),
+                jax.lax.psum(t, axis_name))
+    pairs = [one(t) for t in totals]
+    return tuple(p[0] for p in pairs), tuple(p[1] for p in pairs)
+
+
+def _par_states(km, vm, s2_0, s1_0, s0_0, axis_name=None, axis_size=0):
+    """Exclusive per-chunk prefix states + the global final state.
+
+    Returns ((e2, e1, e0), (f2, f1, f0)): e* carry a leading chunk axis
+    (the state each chunk's readout sees), f* are the state after every
+    chunk — across *all* shards when ``axis_name`` is given.
+    """
+    parts = _par_partials(km, vm)
+    inc = jax.lax.associative_scan(_tuple_add, parts, axis=0)
+    tot = tuple(t[-1] for t in inc)
+    base = (s2_0, s1_0, s0_0)
+    if axis_name is not None:
+        incoming, global_tot = _shard_prefix_exchange(tot, axis_name,
+                                                      axis_size)
+        base = _tuple_add(base, incoming)
+        fin = _tuple_add((s2_0, s1_0, s0_0), global_tot)
+    else:
+        fin = _tuple_add(base, tot)
+    excl = tuple(
+        b[None] + jnp.concatenate([jnp.zeros_like(i[:1]), i[:-1]], axis=0)
+        for b, i in zip(base, inc))
+    return excl, fin
+
+
+def _par_readout(qm, km, vm, e2, e1, e0):
+    """Inter-chunk readout from per-chunk exclusive states + masked
+    intra-chunk direct term — chunk_body's math, all chunks at once."""
+    C, d = qm.shape[-2], qm.shape[-1]
+    alpha = d ** 0.25
+    cm = jnp.tril(jnp.ones((C, C), dtype=bool))
+    y = 0.5 * jnp.einsum("...ce,...ef->...cf", boxtimes(qm, qm), e2)
+    y += (alpha**2) * jnp.einsum("...cd,...df->...cf", qm, e1)
+    y += (alpha**4) * e0
+    x = jnp.einsum("...cd,...ed->...ce", qm, km)
+    a = jnp.where(cm, 0.5 * x * x + (alpha**2) * x + alpha**4, 0.0)
+    y += jnp.einsum("...ce,...ef->...cf", a, vm)
+    return y
+
+
+def _causal_scan_par_impl(qm, km, vm, s2_0, s1_0, s0_0, axis_name=None,
+                          axis_size=0):
+    """Sequence-parallel primal. Same contract as _causal_scan_impl."""
+    (e2, e1, e0), (f2, f1, f0) = _par_states(km, vm, s2_0, s1_0, s0_0,
+                                             axis_name, axis_size)
+    ys = _par_readout(qm, km, vm, e2, e1, e0)
+    return ys, f2, f1, f0
+
+
+def _causal_scan_par_bwd_impl(qm, km, vm, s2_0, s1_0, s0_0,
+                              yb, dS2_f, dS1_f, dS0_f, axis_name=None,
+                              axis_size=0):
+    """Recompute backward, both passes parallel.
+
+    Pass 1: re-derive the exclusive prefix states (associative scan) and
+    emit dQ plus the intra-chunk dK/dV — per chunk, no carry. Pass 2:
+    the state cotangent each chunk sees is the *suffix* sum of later
+    chunks' readout cotangent contributions (+ the final-state
+    cotangent); a reverse associative scan and the suffix boundary
+    exchange replace the reverse lax.scan.
+    """
+    d = qm.shape[-1]
+    C = qm.shape[-2]
+    alpha = d ** 0.25
+    cm = jnp.tril(jnp.ones((C, C), dtype=bool))
+
+    def mat(r):                                 # (..., C, d²) -> (..., C, d, d)
+        return r.reshape(*r.shape[:-1], d, d)
+
+    # pass 1: recompute exclusive states; dQ + intra-chunk dK/dV
+    (e2, e1, e0), _ = _par_states(km, vm, s2_0, s1_0, s0_0, axis_name,
+                                  axis_size)
+    M = mat(jnp.einsum("...ef,...cf->...ce", e2, yb))
+    dq = 0.5 * (jnp.einsum("...cab,...cb->...ca", M, qm)
+                + jnp.einsum("...cba,...cb->...ca", M, qm))
+    dq += (alpha**2) * jnp.einsum("...df,...cf->...cd", e1, yb)
+    x = jnp.einsum("...cd,...ed->...ce", qm, km)
+    da = jnp.where(cm, jnp.einsum("...cf,...ef->...ce", yb, vm), 0.0)
+    dx = da * (x + alpha**2)
+    dq += jnp.einsum("...ce,...ed->...cd", dx, km)
+    dk_i = jnp.einsum("...ce,...cd->...ed", dx, qm)
+    a = jnp.where(cm, 0.5 * x * x + (alpha**2) * x + alpha**4, 0.0)
+    dv_i = jnp.einsum("...ce,...cf->...ef", a, yb)
+
+    # pass 2: per-chunk readout cotangent contributions -> suffix sums
+    R2 = _reduce_to(
+        0.5 * jnp.einsum("...ce,...cf->...ef", boxtimes(qm, qm), yb),
+        (qm.shape[0], *s2_0.shape))
+    R1 = _reduce_to((alpha**2) * jnp.einsum("...cd,...cf->...df", qm, yb),
+                    (qm.shape[0], *s1_0.shape))
+    R0 = _reduce_to((alpha**4) * jnp.sum(yb, axis=-2, keepdims=True),
+                    (qm.shape[0], *s0_0.shape))
+    suf = jax.lax.associative_scan(_tuple_add, (R2, R1, R0), axis=0,
+                                   reverse=True)          # inclusive suffix
+    tot = tuple(t[0] for t in suf)                        # all local chunks
+    Dbase = (dS2_f, dS1_f, dS0_f)
+    if axis_name is not None:
+        outgoing, global_tot = _shard_suffix_exchange(tot, axis_name,
+                                                      axis_size)
+        Dbase = _tuple_add(Dbase, outgoing)
+        dS0s = _tuple_add((dS2_f, dS1_f, dS0_f), global_tot)
+    else:
+        dS0s = _tuple_add(Dbase, tot)
+    # exclusive suffix: chunk g's readout saw the state *before* its own
+    # contribution, so its own R folds in only for earlier chunks
+    Dex = tuple(
+        b[None] + jnp.concatenate([s[1:], jnp.zeros_like(s[:1])], axis=0)
+        for b, s in zip(Dbase, suf))
+    D2, D1, D0 = Dex
+
+    W = mat(jnp.einsum("...ef,...cf->...ce", D2, vm))
+    dk_s = (jnp.einsum("...cab,...cb->...ca", W, km)
+            + jnp.einsum("...cba,...cb->...ca", W, km))
+    dk_s += jnp.einsum("...df,...cf->...cd", D1, vm)
+    dv_s = jnp.einsum("...ce,...ef->...cf", boxtimes(km, km), D2)
+    dv_s += jnp.einsum("...cd,...df->...cf", km, D1)
+    dv_s = dv_s + D0
+
+    dk = _reduce_to(dk_i, km.shape) + _reduce_to(dk_s, km.shape)
+    dv = _reduce_to(dv_i, vm.shape) + _reduce_to(dv_s, vm.shape)
+    return dq, dk, dv, dS0s[0], dS0s[1], dS0s[2]
+
+
+@jax.custom_vjp
+def _causal_scan_par(qm, km, vm, s2_0, s1_0, s0_0):
+    return _causal_scan_par_impl(qm, km, vm, s2_0, s1_0, s0_0)
+
+
+def _causal_scan_par_fwd(qm, km, vm, s2_0, s1_0, s0_0):
+    out = _causal_scan_par_impl(qm, km, vm, s2_0, s1_0, s0_0)
+    return out, (qm, km, vm, s2_0, s1_0, s0_0)
+
+
+def _causal_scan_par_bwd(res, cot):
+    yb, dS2_f, dS1_f, dS0_f = cot
+    return _causal_scan_par_bwd_impl(*res, yb, dS2_f, dS1_f, dS0_f)
+
+
+_causal_scan_par.defvjp(_causal_scan_par_fwd, _causal_scan_par_bwd)
+
+
 def causal_taylorshift(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -429,11 +662,22 @@ def causal_taylorshift(
     initial_state: TaylorState | None = None,
     return_state: bool = False,
     state_sharder=None,
+    scan_impl: str = "sequential",
+    scan_fn=None,
 ):
     """Chunkwise-parallel causal efficient-TaylorShift.
 
     q, k, v: (..., N, d) with N divisible by ``chunk`` (pad upstream).
     ``initial_state`` continues from previous context (chunked prefill).
+
+    ``scan_impl`` selects the chunk-scan core: ``"sequential"`` streams
+    one state through ``lax.scan`` (O(d³) live state — the training
+    default, §Perf iteration 5); ``"parallel"`` runs the associative
+    formulation (all chunk states live, every readout parallel — the
+    per-shard body of the sequence-parallel path). ``scan_fn``, when
+    given, overrides both: it must match ``_causal_scan``'s
+    ``(qm, km, vm, s2_0, s1_0, s0_0) -> (ys, s2, s1, s0)`` contract —
+    this is how ``distributed.seqscan`` injects the mesh-level scan.
 
     State convention (shared with :func:`taylor_decode_step`): raw,
     *unnormalized* prefix sums in fp32 with ones-column = 1. Algorithm 1's
@@ -477,11 +721,19 @@ def causal_taylorshift(
 
     gax = len(lead)
     move = lambda t: jnp.moveaxis(t, gax, 0)
-    # Chunkwise scan with a recompute-based custom VJP (see _causal_scan):
-    # training through this path keeps backward memory O(N·d + d³) instead
-    # of the O((N/C)·d³) a plain autodiff-of-scan would checkpoint.
-    ys, s2, s1, s0 = _causal_scan(state_sharder, move(qg), move(kg),
-                                  move(vg), s2_0, s1_0, s0_0)
+    # Chunkwise scan with a recompute-based custom VJP (see _causal_scan /
+    # _causal_scan_par): training through either path keeps backward
+    # memory free of the O((N/C)·d³) per-chunk-state checkpoints a plain
+    # autodiff-of-scan would save.
+    if scan_fn is not None:
+        ys, s2, s1, s0 = scan_fn(move(qg), move(kg), move(vg),
+                                 s2_0, s1_0, s0_0)
+    elif scan_impl == "parallel":
+        ys, s2, s1, s0 = _causal_scan_par(move(qg), move(kg), move(vg),
+                                          s2_0, s1_0, s0_0)
+    else:
+        ys, s2, s1, s0 = _causal_scan(state_sharder, move(qg), move(kg),
+                                      move(vg), s2_0, s1_0, s0_0)
     y_hat = jnp.moveaxis(ys, 0, gax).reshape(*lead, N, d + 1)
 
     denom, nom = y_hat[..., :1], y_hat[..., 1:]

@@ -19,12 +19,34 @@ class ShardCtx:
     enabled: bool = False
     dp: tuple[str, ...] = ("data",)
     model_axis: str = "model"
+    seq_axis: str = "seq"     # sequence-parallel (context) axis, if meshed
     mesh: object | None = None
     sp_carry: bool = True     # Megatron-SP carry sharding (d_model@model)
 
     @property
     def dp_spec(self):
         return tuple(self.dp) if len(self.dp) > 1 else self.dp[0]
+
+    @property
+    def seq_size(self) -> int:
+        """Size of the `seq` mesh axis (1 = no sequence parallelism)."""
+        if self.mesh is None or self.seq_axis not in getattr(
+                self.mesh, "axis_names", ()):
+            return 1
+        return self.mesh.shape[self.seq_axis]
+
+    @property
+    def seq_spec(self):
+        """Token-axis spec: 'seq' when the mesh carries the axis."""
+        return self.seq_axis if self.seq_size > 1 else None
+
+    @property
+    def multi_device(self) -> bool:
+        """True when constraints are active on a >1-device mesh — the
+        regime where un-partitionable paths (pallas_call) must not be
+        selected (models/backend.py)."""
+        return self.enabled and (self.mesh is None
+                                 or self.mesh.devices.size > 1)
 
 
 _CTX = ShardCtx()
@@ -84,9 +106,10 @@ def activations(x):
     if not _CTX.enabled:
         return x
     carry = "model" if _CTX.sp_carry else None
+    seq = _CTX.seq_spec   # token axis stays seq-sharded in both directions
     f = _boundary_fwd_bwd(
-        lambda t: _spec_or_none(t, _CTX.dp_spec, None, carry),
-        lambda t: _spec_or_none(t, _CTX.dp_spec, None, None),
+        lambda t: _spec_or_none(t, _CTX.dp_spec, seq, carry),
+        lambda t: _spec_or_none(t, _CTX.dp_spec, seq, None),
     )(x.dtype)
     return f(x)
 
@@ -137,8 +160,9 @@ def gathered(x):
     if not _CTX.enabled:
         return x
     carry = "model" if _CTX.sp_carry else None
+    seq = _CTX.seq_spec
     f = _boundary_fwd_bwd(
-        lambda t: _spec_or_none(t, _CTX.dp_spec, None, None),
-        lambda t: _spec_or_none(t, _CTX.dp_spec, None, carry),
+        lambda t: _spec_or_none(t, _CTX.dp_spec, seq, None),
+        lambda t: _spec_or_none(t, _CTX.dp_spec, seq, carry),
     )(x.dtype)
     return f(x)

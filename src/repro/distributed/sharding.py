@@ -168,14 +168,22 @@ def cache_shardings(cache_tree, mesh: Mesh, *, stacked: bool = True):
 
 
 def batch_shardings(batch_tree, mesh: Mesh):
-    """Input batches: dim 0 over dp axes, rest replicated."""
+    """Input batches: dim 0 over dp axes, token dim over `seq` (when the
+    mesh carries a sequence-parallel axis and the length divides), rest
+    replicated."""
     dp = dp_axes(mesh)
     dpspec = tuple(dp) if len(dp) > 1 else dp[0]
+    seq = ("seq" if "seq" in mesh.axis_names and mesh.shape["seq"] > 1
+           else None)
 
     def one(leaf):
         if leaf.shape and leaf.shape[0] > 1 and _fits(leaf.shape[0], mesh,
                                                       tuple(dp)):
-            return NamedSharding(mesh, P(dpspec, *([None] * (len(leaf.shape) - 1))))
+            spec = [dpspec] + [None] * (len(leaf.shape) - 1)
+            if (seq and len(leaf.shape) > 1
+                    and _fits(leaf.shape[1], mesh, seq)):
+                spec[1] = seq
+            return NamedSharding(mesh, P(*spec))
         return NamedSharding(mesh, P())
     return jax.tree_util.tree_map(one, batch_tree)
 

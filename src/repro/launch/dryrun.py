@@ -30,6 +30,7 @@ from repro.distributed import hlo_cost as HC
 from repro.launch import shapes as SH
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_cell
+from repro.models import backend as B
 from repro.models import model as M
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -122,6 +123,11 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, force: bool = False,
             "params_total": M.count_params_analytic(cfg_used),
             "params_active": M.count_params_analytic(cfg_used,
                                                      active_only=True),
+            # which attention implementation this cell actually measured
+            # (select_backend per site) + the paper's analytic crossovers
+            "attention": B.report(
+                cfg_used, N=SH.SHAPE_CELLS[shape].seq_len,
+                d=cfg_used.dim_head, mesh=mesh),
         })
     except Exception as e:  # noqa: BLE001 — record and continue the sweep
         record["error"] = f"{type(e).__name__}: {e}"
@@ -166,6 +172,13 @@ def main():
                             f" t_c={r['t_compute_s']:.3e}"
                             f" t_m={r['t_memory_s']:.3e}"
                             f" t_x={r['t_collective_s']:.3e}")
+                    att = rec.get("attention", {})
+                    if att:
+                        full = att.get("full", {})
+                        msg += (f" attn={full.get('backend')}"
+                                f"/{full.get('mode') or '-'}"
+                                f" N0={att.get('crossover_n0', 0):.0f}"
+                                f" N1={att.get('crossover_n1', 0):.0f}")
                 else:
                     msg += " " + rec.get("error", "")[:160]
                 print(msg, flush=True)

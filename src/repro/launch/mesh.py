@@ -11,10 +11,25 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False, seq: int = 1):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    ``seq > 1`` carves a sequence-parallel (context-parallel) axis out of
+    the data axis: long-context cells trade data parallelism for
+    sharding the token axis, so the causal Taylor scan (and the
+    activations) split over ``seq`` (distributed/seqscan.py,
+    docs/sharding.md). ``seq == 1`` keeps the historical 2-/3-axis mesh
+    so existing sweeps and their result files stay comparable.
+    """
+    if seq == 1:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        return jax.make_mesh(shape, axes)
+    if 16 % seq:
+        raise ValueError(f"seq={seq} must divide the 16-way data axis")
+    shape = (2, 16 // seq, seq, 16) if multi_pod else (16 // seq, seq, 16)
+    axes = (("pod", "data", "seq", "model") if multi_pod
+            else ("data", "seq", "model"))
     return jax.make_mesh(shape, axes)
 
 
@@ -22,6 +37,23 @@ def make_local_mesh():
     """Whatever this host has — used by tests/examples."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_seq_mesh(seq: int | None = None):
+    """A (data, seq, model) mesh with every local device on the ``seq``
+    axis — the layout the multi-device CI job
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and the
+    context-parallel benchmarks exercise."""
+    n = len(jax.devices())
+    seq = seq or n
+    if n % seq:
+        raise ValueError(f"seq={seq} must divide the device count {n}")
+    return jax.make_mesh((n // seq, seq, 1), ("data", "seq", "model"))
+
+
+def seq_size(mesh) -> int:
+    """Size of the sequence-parallel axis (1 when the mesh has none)."""
+    return mesh.shape["seq"] if "seq" in mesh.axis_names else 1
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

@@ -94,7 +94,10 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--token-budget", type=int, default=64)
-    ap.add_argument("--cache", default="taylor", choices=["taylor", "kv"])
+    ap.add_argument("--cache", default="taylor",
+                    choices=["taylor", "kv", "auto"],
+                    help="decode-cache layout; 'auto' picks via the paper's "
+                         "N1 memory crossover (select_serve_plan)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--no-check", dest="check", action="store_false",
                     help="skip the per-request naive-baseline comparison")
@@ -109,6 +112,10 @@ def main():
         token_budget=args.token_budget, cache_kind=args.cache,
         max_seq_len=args.prompt_len + args.gen + 1,
         temperature=args.temperature))
+    plan = engine.plan
+    print(f"serve plan: cache={plan.cache_kind} "
+          f"prefill={plan.prefill.name} decode={plan.decode.name} "
+          f"({plan.reason})")
     reqs, arrivals = mixed_arrival_workload(
         cfg, args.requests, args.prompt_len, args.gen)
     results = run_workload(engine, reqs, arrivals)
@@ -124,7 +131,7 @@ def main():
             prompts = jnp.asarray([r.prompt], jnp.int32)
             ref = naive_generate(cfg, params, prompts,
                                  gen_tokens=r.max_new_tokens,
-                                 cache_kind=args.cache)
+                                 cache_kind=plan.cache_kind)
             ref_toks = [int(t) for t in ref[0, len(r.prompt):]]
             got = results[r.request_id].out_tokens
             match = got == ref_toks

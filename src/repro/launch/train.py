@@ -14,7 +14,6 @@ Scales from CPU smoke runs to the production mesh unchanged:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import logging
 import time
 
@@ -28,9 +27,11 @@ from repro.distributed import ctx
 from repro.distributed import sharding as S
 from repro.distributed.ft import (PreemptionHandler, StragglerDetector,
                                   run_with_restarts)
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.mesh import (make_local_mesh, make_production_mesh,
+                               make_seq_mesh)
 from repro.launch.steps import (build_train_step, default_opt_config,
                                 opt_state_shardings, param_shapes)
+from repro.models import backend as B
 from repro.models import model as M
 from repro.optim import make_optimizer
 
@@ -49,6 +50,10 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
                           seq_len=seq_len, seed=seed)
 
     with mesh, ctx.use(mesh):
+        sel = B.select_backend(cfg, N=seq_len, d=cfg.dim_head, site="full",
+                               causal=cfg.causal)
+        log.info("attention backend: %s mode=%s seq_shards=%d (%s)",
+                 sel.name, sel.mode, sel.seq_shards, sel.reason)
         pshapes = param_shapes(cfg)
         pshard = S.param_shardings(pshapes, mesh)
         oshard = opt_state_shardings(cfg, opt_cfg, pshapes, pshard, mesh)
@@ -120,6 +125,10 @@ def main():
     ap.add_argument("--n-layers", type=int, default=0)
     ap.add_argument("--mesh", default="local",
                     choices=["local", "single", "multi"])
+    ap.add_argument("--context-parallel", type=int, default=1,
+                    help="size of the `seq` mesh axis: shards the causal "
+                         "Taylor scan (and activations) over the sequence "
+                         "(docs/sharding.md)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--restartable", action="store_true",
                     help="wrap in the fault-tolerant supervision loop")
@@ -134,15 +143,16 @@ def main():
     if args.n_layers:
         cfg = cfg.with_(n_layers=args.n_layers)
     cfg = cfg.with_(max_seq_len=max(cfg.max_seq_len, args.seq))
-    if not args.no_kernels and cfg.attn_backend == "taylor":
-        # Training routes through the fused kernels (differentiable via
-        # the custom-VJP backward kernels, docs/training.md); causal
-        # beyond-crossover sites keep the chunked-scan core path.
-        cfg = cfg.with_(taylor=dataclasses.replace(cfg.taylor,
-                                                   use_kernel=True))
+    cfg = B.configure_for_training(cfg, use_kernels=not args.no_kernels)
 
-    mesh = (make_local_mesh() if args.mesh == "local"
-            else make_production_mesh(multi_pod=args.mesh == "multi"))
+    cp = args.context_parallel
+    if cp > 1:
+        mesh = (make_seq_mesh(cp) if args.mesh == "local"
+                else make_production_mesh(multi_pod=args.mesh == "multi",
+                                          seq=cp))
+    else:
+        mesh = (make_local_mesh() if args.mesh == "local"
+                else make_production_mesh(multi_pod=args.mesh == "multi"))
 
     def go(_state=None):
         return train(cfg, steps=args.steps, global_batch=args.batch,

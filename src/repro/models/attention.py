@@ -2,9 +2,11 @@
 
 The paper's technique is integrated as a first-class backend: every
 attention site (global causal, global non-causal, sliding-window local,
-cross-attention, and single-token decode) has a TaylorShift form, and the
-direct↔efficient choice follows the paper's N0/N1 crossover unless pinned
-by config.
+cross-attention, and single-token decode) has a TaylorShift form. *Which*
+form runs — direct/efficient crossover, fused Pallas kernels,
+chunked-causal scan (sequential or sequence-parallel), fused decode — is
+resolved by ``models/backend.py:select_backend``; this module only
+implements the sites and dispatches on the returned Selection.
 
 Caches for decode:
   * ``kv``     — classic KV cache (softmax or direct-Taylor readout)
@@ -25,6 +27,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import taylor as T
 from repro.distributed import ctx
+from repro.models import backend as B
 from repro.models import layers as L
 
 Params = dict[str, Any]
@@ -116,120 +119,65 @@ def _softmax_attention(cfg, q, k, v, *, causal, window=0):
     return y
 
 
-def _sharding_aware_mode(cfg: ModelConfig, N: int, d: int) -> str:
-    """Paper crossover + a TPU-mesh twist (§Perf iteration 4).
+def _repeat_kv(cfg: ModelConfig, k, v):
+    rep = cfg.n_heads // cfg.kv_heads
+    return jnp.repeat(k, rep, axis=1), jnp.repeat(v, rep, axis=1)
 
-    The FLOP crossover N0(d) picks direct below ~d². But when the head
-    count doesn't divide the model axis, the direct form's (B,H,N,N)
-    score matrices end up partially replicated and PSUMed across the
-    mesh (~770 GB/step on llama4-maverick train_4k), while the efficient
-    form contracts over d² — always divisible by the mesh (d ≡ 0 mod 4 ⇒
-    16 | d²) — with only a (B,KV,N,d+1) psum. Wire bytes beat FLOPs at
-    256 chips, so prefer efficient whenever heads shard unevenly.
-    """
-    base = T.pick_mode(N, d)
+
+def _causal_scan_opts(sel: B.Selection) -> dict:
+    """causal_taylorshift kwargs implementing a causal-scan Selection:
+    which chunk-scan core runs and (for the sequential core) the
+    mesh-aware state sharder."""
+    if sel.scan == "seq-parallel":
+        from repro.distributed import seqscan
+        c = ctx.get()
+        return {"chunk": sel.chunk,
+                "scan_fn": seqscan.make_seq_scan(c.mesh, axis=c.seq_axis)}
+    if sel.scan == "parallel":
+        return {"chunk": sel.chunk, "scan_impl": "parallel"}
     c = ctx.get()
-    if base == "direct" and c.enabled and c.mesh is not None:
-        msize = c.mesh.shape["model"]
-        if cfg.n_heads % msize and (d * d) % msize == 0:
-            return "efficient"
-    return base
+    sharder = None
+    if c.enabled:
+        dpspec = c.dp_spec
+        sharder = lambda s2: ctx.constrain(
+            s2, dpspec, None, *([None] * (s2.ndim - 4)), "model", None)
+    return {"chunk": sel.chunk, "state_sharder": sharder}
 
 
 def _taylor_global(cfg: ModelConfig, params, q, k, v, *, causal):
-    """Dispatch to direct / efficient / chunked-causal Taylor forms."""
+    """Full-sequence TaylorShift: resolve the path through
+    models/backend.py:select_backend and dispatch on the Selection —
+    all routing heuristics (crossovers, mesh gates, kernel gates, GQA
+    constraints) live in the backend module."""
     tc = cfg.taylor
     N, d = q.shape[-2], q.shape[-1]
-    mode = tc.mode
-    if mode == "auto":
-        # The sharding-aware override applies to NON-causal sites only:
-        # measured on maverick train_4k, the causal chunked-efficient form
-        # at d=128 pays more in (d², d+1)-state HBM/wire traffic than the
-        # direct form's uneven-head psum costs (§Perf iteration 4: napkin
-        # said win, measurement said regression — reverted for causal).
-        mode = (_sharding_aware_mode(cfg, N, d) if not causal
-                else T.pick_mode(N, d))
-    if tc.use_kernel and tc.normalize_inputs:
-        y = _taylor_global_kernel(cfg, params, q, k, v, causal=causal,
-                                  mode=mode)
-        if y is not None:
-            return y
-    kv_heads = cfg.kv_heads
-    if mode == "direct":
-        # direct handles GQA by repeating K/V (it materializes NxN anyway).
-        if kv_heads != cfg.n_heads:
-            rep = cfg.n_heads // kv_heads
-            k = jnp.repeat(k, rep, axis=1)
-            v = jnp.repeat(v, rep, axis=1)
+    sel = B.select_backend(cfg, N=N, d=d, site="full", causal=causal)
+    if sel.repeat_kv:
+        k, v = _repeat_kv(cfg, k, v)
+    if sel.backend.caps.kernel:
+        from repro.kernels import ops as K
+        return K.taylor_attention_kernel(
+            q, k, v, tau=_tau(params, cfg, False), causal=causal,
+            mode=sel.mode, out_scale=tc.output_scale)
+    if sel.name == "direct":
         return T.direct_taylorshift(
             q, k, v, tau=_tau(params, cfg, False), causal=causal,
-            normalize_inputs=tc.normalize_inputs, output_scale=tc.output_scale)
-    qg = _group_q(q, kv_heads)
+            normalize_inputs=tc.normalize_inputs,
+            output_scale=tc.output_scale)
+    qg = _group_q(q, cfg.kv_heads)
     kg, vg = k[:, :, None], v[:, :, None]
     tau = _tau(params, cfg, True)
-    if causal:
-        # Cap chunk passes at 8: each pass re-reads the (d², d+1) state,
-        # so many small chunks are HBM-bound (§Perf iteration 5b).
-        chunk = min(max(tc.chunk, N // 8), N)
-        while N % chunk:
-            chunk //= 2
-        c = ctx.get()
-        sharder = None
-        if c.enabled:
-            dpspec = c.dp_spec
-            sharder = lambda s2: ctx.constrain(
-                s2, dpspec, None, *( [None] * (s2.ndim - 4) ), "model", None)
+    if sel.name == "causal-scan":
         y = T.causal_taylorshift(
-            qg, kg, vg, tau=tau, chunk=max(chunk, 1),
+            qg, kg, vg, tau=tau,
             normalize_inputs=tc.normalize_inputs,
-            output_scale=tc.output_scale, state_sharder=sharder)
+            output_scale=tc.output_scale, **_causal_scan_opts(sel))
     else:
         y = T.efficient_taylorshift(
             qg, kg, vg, tau=tau,
             normalize_inputs=tc.normalize_inputs,
             output_scale=tc.output_scale)
     return y.reshape(q.shape)
-
-
-def _taylor_global_kernel(cfg: ModelConfig, params, q, k, v, *, causal,
-                          mode):
-    """Fused-kernel route for full-sequence attention (train *and*
-    prefill): the Pallas kernels carry custom VJPs
-    (kernels/taylor_grad.py), so jax.grad through this path runs the
-    hand-written backward kernels instead of falling back to the jnp
-    reference. ``mode`` arrives already resolved by _taylor_global.
-
-    Returns None when the fused path doesn't apply and the caller should
-    use the core jnp forms:
-      * multi-device mesh — pallas_call has no partitioning rule, so
-        inside pjit it would replicate the full (B·H, N, d) arrays; the
-        jnp einsum path keeps the mesh-aware sharding (and the causal
-        state_sharder). A single-device mesh (launch/train.py always
-        enters ctx.use(mesh), even locally) is harmless: nothing is
-        partitioned, so the kernels stay in play;
-      * causal + efficient — the chunked-scan core path, whose
-        recompute-based custom VJP already trains in linear memory;
-      * GQA + efficient — the flat kernels would recompute the
-        per-kv-head A_mod/KV̂ sums rep× via repeated K/V; the grouped
-        core path shares one state per kv-head.
-    """
-    from repro.kernels import ops as K
-
-    tc = cfg.taylor
-    c = ctx.get()
-    if c.enabled and (c.mesh is None or c.mesh.devices.size > 1):
-        return None
-    if causal and mode != "direct":
-        return None
-    if cfg.kv_heads != cfg.n_heads:
-        if mode == "efficient":
-            return None
-        rep = cfg.n_heads // cfg.kv_heads
-        k = jnp.repeat(k, rep, axis=1)
-        v = jnp.repeat(v, rep, axis=1)
-    return K.taylor_attention_kernel(
-        q, k, v, tau=_tau(params, cfg, False), causal=causal, mode=mode,
-        out_scale=tc.output_scale)
 
 
 def _local_taylor(cfg: ModelConfig, params, q, k, v):
@@ -381,10 +329,15 @@ def attn_decode(params: Params, cfg: ModelConfig, x: jnp.ndarray, cache,
     pos = cache.n if is_taylor_state else cache["pos"]
     q, k, v = _project_qkv(params, cfg, x, _decode_positions(pos))
 
+    sel = B.select_backend(cfg, N=1, d=cfg.dim_head, site="decode",
+                           cache_kind="taylor" if is_taylor_state else "kv")
     if is_taylor_state:
-        if cfg.taylor.use_kernel and cfg.n_heads == cfg.kv_heads:
+        if sel.name == "fused-decode":
             y, cache = _fused_taylor_decode(params, cfg, cache, q, k, v)
         else:
+            # causal-scan's one-token limit: the recurrent decode step
+            # (grouped per-kv-head states — the GQA layout fused-decode's
+            # flat (B·H) kernel can't serve; see its capability flags)
             qg = _group_q(q, cfg.kv_heads)
             kg, vg = k[:, :, None], v[:, :, None]
             y, cache = T.taylor_decode_step(
@@ -465,14 +418,17 @@ def attn_prefill(params: Params, cfg: ModelConfig, x: jnp.ndarray, cache,
     positions = pos + jnp.arange(C)
     q, k, v = _project_qkv(params, cfg, x, positions)
 
+    sel = B.select_backend(cfg, N=C, d=cfg.dim_head, site="prefill",
+                           cache_kind="taylor" if is_taylor_state else "kv")
     if is_taylor_state:
         qg = _group_q(q, cfg.kv_heads)
         kg, vg = k[:, :, None], v[:, :, None]
         y, cache = T.causal_taylorshift(
-            qg, kg, vg, tau=_tau(params, cfg, True), chunk=C,
+            qg, kg, vg, tau=_tau(params, cfg, True),
             normalize_inputs=cfg.taylor.normalize_inputs,
             output_scale=cfg.taylor.output_scale,
-            initial_state=cache, return_state=True)
+            initial_state=cache, return_state=True,
+            **_causal_scan_opts(sel))
         y = y.reshape(q.shape)
     else:
         cache_len = cache["k"].shape[2]

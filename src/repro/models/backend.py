@@ -1,0 +1,335 @@
+"""Unified attention-backend registry and selection.
+
+Every attention entry point — ``attn_apply`` / ``attn_prefill`` /
+``attn_decode`` (models/attention.py), the serving engine
+(serve/engine.py) and the train / dry-run launchers — resolves *which*
+TaylorShift implementation runs through :func:`select_backend`, instead
+of re-deriving kernel/mode/mesh heuristics inline. The registry declares
+each backend's capabilities; selection is capability-driven plus the
+paper's analytic cost model (`core/taylor.py`: Eq. 5/6 FLOPs, Eq. 7/9
+crossovers N0/N1).
+
+Decisions folded in from their previous scattered homes:
+
+* direct↔efficient "and Back" crossover (``T.pick_mode``) plus the
+  TPU-mesh twist (§Perf iteration 4, ex-``_sharding_aware_mode``): when
+  the head count doesn't divide the model axis, the direct form's
+  (B,H,N,N) scores are partially replicated and PSUMed across the mesh,
+  while the efficient form contracts over d² (always mesh-divisible) —
+  wire bytes beat FLOPs, so non-causal sites prefer efficient. The
+  override stays **off for causal** sites (measured regression: the
+  (d², d+1)-state HBM/wire traffic outweighs the uneven-head psum).
+* the fused-kernel gate (ex-``_taylor_global_kernel``): pallas_call has
+  no partitioning rule, so kernels are capability-gated to single-device
+  meshes; causal+efficient stays on the chunked scan core (its custom
+  VJP already trains in linear memory); GQA+efficient stays on the
+  grouped core path (flat kernels would recompute per-kv-head sums
+  rep×).
+* the GQA fused-decode gap (ex-inline ``n_heads == kv_heads`` if): the
+  decode kernel works on flattened (B·H) states with no grouping, so it
+  declares ``gqa=False`` and selection falls back to the grouped
+  recurrent step — the constraint is now a capability flag, not a
+  buried conditional.
+* sequence parallelism: under a mesh with a ``seq`` axis the causal
+  chunk scan runs the associative formulation with shard_map
+  boundary-state exchange (distributed/seqscan.py, docs/sharding.md);
+  selection checks divisibility and falls back to the sequential scan
+  otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable
+
+from repro.core import taylor as T
+from repro.distributed import ctx
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Capabilities:
+    """What a backend can serve. Selection never routes around a False
+    flag implicitly — it either repeats K/V heads (``Selection.repeat_kv``)
+    or picks a different backend, with the reason recorded."""
+    causal: bool = False        # causal masking
+    non_causal: bool = False    # bidirectional / cross attention
+    gqa: bool = False           # native grouped-KV (no head repeat)
+    multi_device: bool = False  # safe under a >1-device GSPMD mesh
+    seq_parallel: bool = False  # can shard the sequence axis (`seq`)
+    differentiable: bool = False  # exact grads (custom VJP or pure jnp)
+    decode: bool = False        # one-token absorb+readout
+    kernel: bool = False        # Pallas-backed
+
+
+@dataclass(frozen=True)
+class AttentionBackend:
+    name: str
+    caps: Capabilities
+    ops: Callable | None       # analytic FLOPs fn(N, d) — paper Eq. (5)/(6)
+    entries: Callable | None   # peak tensor entries fn(N, d) — §4.2/Eq. (8)
+    doc: str = ""
+
+
+REGISTRY: dict[str, AttentionBackend] = {b.name: b for b in [
+    AttentionBackend(
+        "direct",
+        Capabilities(causal=True, non_causal=True, multi_device=True,
+                     differentiable=True, decode=True),
+        T.ops_direct, T.entries_direct,
+        "O(N²d) jnp reference; materializes the score matrix. GQA by "
+        "K/V head repeat. Also serves masked kv-cache prefill/decode "
+        "readouts (the paper's 'and Back' regime below N0/N1)."),
+    AttentionBackend(
+        "efficient",
+        Capabilities(non_causal=True, gqa=True, multi_device=True,
+                     differentiable=True),
+        T.ops_efficient, T.entries_efficient,
+        "O(N d³) ⊠-trick (Algorithm 1), grouped per-kv-head states."),
+    AttentionBackend(
+        "causal-scan",
+        Capabilities(causal=True, gqa=True, multi_device=True,
+                     seq_parallel=True, differentiable=True, decode=True),
+        T.ops_efficient, T.entries_efficient,
+        "Chunkwise prefix-state scan over TaylorState; recompute-based "
+        "custom VJP (linear-memory training). Sequential (lax.scan) or "
+        "associative/sequence-parallel core; its one-token limit is "
+        "taylor_decode_step (the recurrent decode fallback)."),
+    AttentionBackend(
+        "kernel-direct",
+        Capabilities(causal=True, non_causal=True, differentiable=True,
+                     kernel=True),
+        T.ops_direct, T.entries_direct,
+        "Fused Pallas direct kernel + flash-style recompute backward "
+        "(kernels/taylor_direct.py, taylor_grad.py)."),
+    AttentionBackend(
+        "kernel-efficient",
+        Capabilities(non_causal=True, differentiable=True, kernel=True),
+        T.ops_efficient, T.entries_efficient,
+        "Fused Pallas ⊠-trick kernel + O(N·d + d³) backward "
+        "(kernels/taylor_efficient.py, taylor_grad.py)."),
+    AttentionBackend(
+        "fused-decode",
+        Capabilities(causal=True, decode=True, kernel=True),
+        None, None,
+        "One-token update+readout fused in VMEM "
+        "(kernels/taylor_decode.py). Flat (B·H) state layout — no GQA "
+        "grouping (caps.gqa=False), single-device."),
+]}
+
+
+@dataclass(frozen=True)
+class Selection:
+    """A resolved routing decision, with the evidence that produced it."""
+    backend: AttentionBackend
+    mode: str            # resolved direct|efficient ('' where n/a)
+    repeat_kv: bool      # caller must repeat K/V heads before the call
+    seq_shards: int      # >1: run the causal scan sequence-parallel
+    scan: str            # causal-scan core: sequential|parallel|seq-parallel
+    chunk: int           # causal-scan chunk size (0 = n/a)
+    n0: float            # analytic crossovers at this head dim
+    n1: float
+    reason: str
+
+    @property
+    def name(self) -> str:
+        return self.backend.name
+
+
+# ---------------------------------------------------------------------------
+# Cost model / mode resolution
+# ---------------------------------------------------------------------------
+
+def resolved_mode(cfg, N: int, d: int, *, causal: bool, c=None) -> str:
+    """Pinned config mode, else the paper crossover with the mesh twist
+    (§Perf iteration 4) for non-causal sites."""
+    tc = cfg.taylor
+    if tc.mode != "auto":
+        return tc.mode
+    base = T.pick_mode(N, d, optimize_for=tc.optimize_for)
+    c = c or ctx.get()
+    if (base == "direct" and not causal and c.enabled
+            and c.mesh is not None):
+        msize = c.mesh.shape[c.model_axis]
+        if cfg.n_heads % msize and (d * d) % msize == 0:
+            return "efficient"
+    return base
+
+
+def plan_chunk(N: int, want: int, *, seq_shards: int = 1,
+               cap_passes: int = 8) -> int:
+    """Causal chunk size for a (possibly seq-sharded) scan: at most
+    ``cap_passes`` chunk passes per shard (§Perf iteration 5b — each
+    pass re-reads the (d², d+1) state), halved until it divides."""
+    local = max(N // max(seq_shards, 1), 1)
+    chunk = min(max(want, local // cap_passes), local)
+    while local % chunk:
+        chunk //= 2
+    return max(chunk, 1)
+
+
+def _seq_plan(cfg, N: int, c, *, chunk_want: int) -> tuple[int, str, int]:
+    """(seq_shards, scan, chunk) for a causal-scan selection."""
+    tc = cfg.taylor
+    shards = c.seq_size
+    if shards > 1 and N % shards == 0 and N // shards >= 1 \
+            and tc.scan != "sequential":
+        chunk = plan_chunk(N, chunk_want, seq_shards=shards)
+        return shards, "seq-parallel", chunk
+    scan = "parallel" if tc.scan == "parallel" else "sequential"
+    return 1, scan, plan_chunk(N, chunk_want)
+
+
+# ---------------------------------------------------------------------------
+# Selection
+# ---------------------------------------------------------------------------
+
+def select_backend(cfg, *, N: int, d: int, site: str = "full",
+                   causal: bool = True, cache_kind: str = "taylor",
+                   mesh=None) -> Selection:
+    """Resolve the implementation for one attention site.
+
+    site: ``full`` (train / whole-sequence forward), ``prefill``
+    (chunked prompt absorption into a decode cache), ``decode``
+    (one-token step). ``mesh`` defaults to the ambient sharding context
+    (distributed/ctx.py); pass a mesh explicitly for offline reports.
+    """
+    c = ctx.get()
+    if mesh is not None:
+        c = dataclasses.replace(c, enabled=True, mesh=mesh)
+    tc = cfg.taylor
+    gqa = cfg.kv_heads != cfg.n_heads
+    n0, n1 = T.crossover_n0(d), T.crossover_n1(d)
+
+    def sel(name, mode="", repeat_kv=False, seq_shards=1, scan="",
+            chunk=0, reason=""):
+        return Selection(REGISTRY[name], mode, repeat_kv, seq_shards,
+                         scan, chunk, n0, n1, reason)
+
+    if site == "decode":
+        if cache_kind == "kv":
+            return sel("direct", mode="direct", repeat_kv=gqa,
+                       reason="kv cache: masked direct readout "
+                              "('and Back' below the memory crossover)")
+        fused = REGISTRY["fused-decode"].caps
+        if tc.use_kernel and not (gqa and not fused.gqa) \
+                and not (c.multi_device and not fused.multi_device):
+            return sel("fused-decode",
+                       reason="use_kernel, MHA state layout, single device")
+        why = ("fused-decode lacks GQA grouping (caps.gqa=False)" if gqa
+               and tc.use_kernel else
+               "fused-decode is single-device (caps.multi_device=False)"
+               if tc.use_kernel else "kernels off")
+        return sel("causal-scan", scan="sequential",
+                   reason=f"recurrent taylor_decode_step — {why}")
+
+    if site == "prefill":
+        if cache_kind == "kv":
+            return sel("direct", mode="direct", repeat_kv=gqa,
+                       reason="kv cache: masked direct prefill attend")
+        shards, scan, chunk = _seq_plan(cfg, N, c, chunk_want=N)
+        return sel("causal-scan", seq_shards=shards, scan=scan, chunk=chunk,
+                   reason="TaylorState handoff "
+                          "(causal_taylorshift initial_state=…)")
+
+    # --- full-sequence -----------------------------------------------------
+    mode = resolved_mode(cfg, N, d, causal=causal, c=c)
+    kernel_ok = (tc.use_kernel and tc.normalize_inputs
+                 and not c.multi_device)
+    if kernel_ok and causal and mode != "direct":
+        kernel_ok = False          # chunked-scan core trains in linear memory
+    elif kernel_ok and gqa and mode == "efficient":
+        kernel_ok = False          # flat kernels recompute kv-head sums rep×
+    if kernel_ok:
+        name = "kernel-direct" if mode == "direct" else "kernel-efficient"
+        return sel(name, mode=mode, repeat_kv=gqa and mode == "direct",
+                   reason="use_kernel on a single-device mesh")
+
+    if causal and mode != "direct":
+        shards, scan, chunk = _seq_plan(cfg, N, c, chunk_want=tc.chunk)
+        return sel("causal-scan", mode=mode, seq_shards=shards, scan=scan,
+                   chunk=chunk,
+                   reason=f"causal beyond crossover (N0={n0:.0f})"
+                          + (f"; seq-parallel ×{shards}" if shards > 1
+                             else ""))
+    if mode == "direct":
+        why = (f"N below crossover (N0={n0:.0f})" if tc.mode == "auto"
+               else "mode pinned by config")
+        if tc.use_kernel and tc.normalize_inputs and c.multi_device:
+            why += "; kernels skipped: pallas_call has no partitioning rule"
+        return sel("direct", mode="direct", repeat_kv=gqa, reason=why)
+    return sel("efficient", mode="efficient",
+               reason=f"beyond crossover (N0={n0:.0f})"
+                      if tc.mode == "auto" else "mode pinned by config")
+
+
+# ---------------------------------------------------------------------------
+# Serving plan ("and Back" for the cache, satellite of the engine)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ServePlan:
+    cache_kind: str      # taylor | kv (resolved from 'auto')
+    prefill: Selection
+    decode: Selection
+    reason: str
+
+
+def select_serve_plan(cfg, *, max_seq_len: int, prefill_chunk: int,
+                      cache_kind: str = "auto", mesh=None) -> ServePlan:
+    """Resolve the engine's cache layout and both serving paths.
+
+    ``cache_kind='auto'`` applies the paper's memory crossover N1
+    (Eq. 9) via ``pick_mode(optimize_for='memory')``: below N1 the O(N)
+    KV cache is *smaller* than the constant (d², d+1) Taylor state, so
+    short-context engines take the direct/kv route ("and Back"); beyond
+    it the constant-size state wins and slots become fixed-size.
+    """
+    d = cfg.dim_head
+    reason = "cache_kind pinned by config"
+    if cache_kind == "auto":
+        mode = T.pick_mode(max_seq_len, d, optimize_for="memory")
+        cache_kind = "taylor" if mode == "efficient" else "kv"
+        reason = (f"memory crossover N1(d={d})={T.crossover_n1(d):.0f} vs "
+                  f"max_seq_len={max_seq_len} -> {cache_kind}")
+    return ServePlan(
+        cache_kind=cache_kind,
+        prefill=select_backend(cfg, N=prefill_chunk, d=d, site="prefill",
+                               cache_kind=cache_kind, mesh=mesh),
+        decode=select_backend(cfg, N=1, d=d, site="decode",
+                              cache_kind=cache_kind, mesh=mesh),
+        reason=reason)
+
+
+# ---------------------------------------------------------------------------
+# Launcher helpers
+# ---------------------------------------------------------------------------
+
+def configure_for_training(cfg, *, use_kernels: bool = True):
+    """Route full-sequence training attention through the fused kernels
+    (differentiable via the custom-VJP backward kernels,
+    docs/training.md). Causal beyond-crossover sites keep the chunked
+    scan core — select_backend enforces that per site."""
+    if use_kernels and cfg.attn_backend == "taylor" \
+            and not cfg.taylor.use_kernel:
+        return cfg.with_(taylor=dataclasses.replace(cfg.taylor,
+                                                    use_kernel=True))
+    return cfg
+
+
+def report(cfg, *, N: int, d: int, mesh=None) -> dict:
+    """Routing report for one (config, shape, mesh) cell — surfaced by
+    launch/dryrun.py next to the roofline so sweep results record which
+    implementation they measured."""
+    out = {"crossover_n0": T.crossover_n0(d), "crossover_n1": T.crossover_n1(d)}
+    for site, causal, n in [("full", cfg.causal, N), ("prefill", True, N),
+                            ("decode", True, 1)]:
+        s = select_backend(cfg, N=n, d=d, site=site, causal=causal,
+                           mesh=mesh)
+        out[site] = {"backend": s.name, "mode": s.mode,
+                     "seq_shards": s.seq_shards, "reason": s.reason}
+    return out

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import backend as B
 from repro.models import model as M
 from repro.models.model import PREFILL_KINDS
 from repro.serve import prefill as PF
@@ -44,7 +45,8 @@ class EngineConfig:
     prefill_chunk: int = 128     # target prompt tokens per prefill call
     token_budget: int = 256      # scheduled tokens per engine step
     max_seq_len: int = 2048      # pool cache_len (kv caches only grow to this)
-    cache_kind: str = "taylor"   # taylor | kv
+    cache_kind: str = "taylor"   # taylor | kv | auto ("and Back" via the
+    #   N1 memory crossover — models/backend.py:select_serve_plan)
     temperature: float = 0.0
     seed: int = 0
 
@@ -59,9 +61,17 @@ class Engine:
                 f"decoder architectures (pattern {tuple(cfg.layer_pattern)})")
         self.cfg = cfg
         self.econf = econf
+        # One routing decision for the whole engine: cache layout
+        # (resolving cache_kind="auto" through the paper's N1 memory
+        # crossover) plus the prefill/decode path selections the
+        # attention layers will re-derive identically at trace time.
+        self.plan = B.select_serve_plan(
+            cfg, max_seq_len=econf.max_seq_len,
+            prefill_chunk=econf.prefill_chunk,
+            cache_kind=econf.cache_kind)
         self.pool = StatePool(cfg, econf.n_slots,
                               cache_len=econf.max_seq_len,
-                              cache_kind=econf.cache_kind)
+                              cache_kind=self.plan.cache_kind)
         self.queue = AdmissionQueue(econf.max_queue)
         self.scheduler = Scheduler(econf.token_budget)
         self.stats = EngineStats()

@@ -1,0 +1,299 @@
+"""The unified attention-backend dispatch (models/backend.py).
+
+Pins the selection matrix: capability flags × mesh × (N, d) × site must
+reproduce every routing decision the old inline heuristics made —
+crossovers, the sharding-aware non-causal override, the kernel gates,
+the GQA fused-decode constraint — and the new sequence-parallel plan.
+"""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import taylor as T
+from repro.distributed import ctx
+from repro.models import backend as B
+
+
+class FakeDevices:
+    def __init__(self, size):
+        self.size = size
+
+
+class FakeMesh:
+    """Just enough mesh for selection: axis_names, shape, device count."""
+
+    def __init__(self, shape: dict, n_devices: int | None = None):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+        self.devices = FakeDevices(
+            n_devices if n_devices is not None else
+            int(jax.numpy.prod(jax.numpy.asarray(list(shape.values())))))
+
+
+def cfg_with(arch="stablelm-1.6b", **taylor_kw):
+    cfg = get_config(arch).reduced()
+    if taylor_kw:
+        cfg = cfg.with_(taylor=dataclasses.replace(cfg.taylor, **taylor_kw))
+    return cfg
+
+
+def gqa_cfg(**taylor_kw):
+    cfg = cfg_with(**taylor_kw)
+    return cfg.with_(n_heads=4, n_kv_heads=2)
+
+
+class TestRegistry:
+    def test_issue_backends_present(self):
+        for name in ("direct", "efficient", "causal-scan", "kernel-direct",
+                     "kernel-efficient", "fused-decode"):
+            assert name in B.REGISTRY, name
+
+    def test_capability_sanity(self):
+        r = B.REGISTRY
+        # kernels have no GSPMD partitioning rule
+        assert not r["kernel-direct"].caps.multi_device
+        assert not r["kernel-efficient"].caps.multi_device
+        assert not r["fused-decode"].caps.multi_device
+        # the fused decode kernel's flat (B·H) layout can't group KV heads
+        assert not r["fused-decode"].caps.gqa
+        # only the chunk scan can shard the sequence axis
+        assert [n for n, b in r.items() if b.caps.seq_parallel] \
+            == ["causal-scan"]
+        # every full-sequence backend carries the paper's cost model
+        for n in ("direct", "efficient", "causal-scan", "kernel-direct",
+                  "kernel-efficient"):
+            assert r[n].ops is not None and r[n].entries is not None
+
+    def test_cost_model_is_the_papers(self):
+        assert B.REGISTRY["direct"].ops is T.ops_direct
+        assert B.REGISTRY["efficient"].ops is T.ops_efficient
+
+
+class TestFullSite:
+    def test_crossover_auto(self):
+        cfg = cfg_with()
+        d = cfg.dim_head
+        lo = B.select_backend(cfg, N=64, d=d, site="full", causal=False)
+        hi = B.select_backend(cfg, N=int(T.crossover_n0(d)) + 64, d=d,
+                              site="full", causal=False)
+        assert lo.name == "direct" and lo.mode == "direct"
+        assert hi.name == "efficient"
+        assert lo.n0 == pytest.approx(T.crossover_n0(d))
+        assert lo.n1 == pytest.approx(T.crossover_n1(d))
+
+    def test_causal_beyond_crossover_is_scan(self):
+        cfg = cfg_with()
+        d = cfg.dim_head
+        s = B.select_backend(cfg, N=int(T.crossover_n0(d)) + 64, d=d,
+                             site="full", causal=True)
+        assert s.name == "causal-scan"
+        assert s.scan == "sequential" and s.seq_shards == 1
+        assert s.chunk >= 1
+
+    def test_chunk_plan_matches_old_heuristic(self):
+        # old inline rule: chunk = min(max(tc.chunk, N // 8), N),
+        # halved until it divides
+        for n, want in [(256, 128), (1024, 128), (96, 128), (56, 16)]:
+            chunk = min(max(want, n // 8), n)
+            while n % chunk:
+                chunk //= 2
+            assert B.plan_chunk(n, want) == max(chunk, 1), (n, want)
+
+    def test_kernel_gate_single_device(self):
+        cfg = cfg_with(use_kernel=True)
+        d = cfg.dim_head
+        s = B.select_backend(cfg, N=64, d=d, site="full", causal=True)
+        assert s.name == "kernel-direct"
+        s = B.select_backend(cfg, N=int(T.crossover_n0(d)) + 64, d=d,
+                             site="full", causal=False)
+        assert s.name == "kernel-efficient"
+
+    def test_kernel_gate_multi_device(self):
+        """pallas_call has no partitioning rule: a >1-device mesh must
+        fall back to the jnp paths (the old _taylor_global_kernel gate,
+        now a capability check)."""
+        cfg = cfg_with(use_kernel=True)
+        mesh = FakeMesh({"data": 4, "model": 2})
+        s = B.select_backend(cfg, N=64, d=cfg.dim_head, site="full",
+                             causal=True, mesh=mesh)
+        assert s.name == "direct"
+        assert "partitioning" in s.reason
+
+    def test_causal_efficient_stays_on_scan_core(self):
+        cfg = cfg_with(use_kernel=True)
+        d = cfg.dim_head
+        s = B.select_backend(cfg, N=int(T.crossover_n0(d)) + 64, d=d,
+                             site="full", causal=True)
+        assert s.name == "causal-scan"
+
+    def test_gqa_efficient_keeps_grouped_core(self):
+        cfg = gqa_cfg(use_kernel=True)
+        d = cfg.dim_head
+        s = B.select_backend(cfg, N=int(T.crossover_n0(d)) + 64, d=d,
+                             site="full", causal=False)
+        assert s.name == "efficient" and not s.repeat_kv
+
+    def test_gqa_direct_repeats_kv(self):
+        cfg = gqa_cfg()
+        s = B.select_backend(cfg, N=32, d=cfg.dim_head, site="full",
+                             causal=True)
+        assert s.name == "direct" and s.repeat_kv
+
+    def test_sharding_aware_override_non_causal_only(self):
+        """§Perf iteration 4 (ex-_sharding_aware_mode): uneven heads on
+        the model axis push *non-causal* direct to efficient; causal
+        keeps the crossover (measured regression)."""
+        cfg = cfg_with().with_(n_heads=3, n_kv_heads=3, head_dim=32)
+        mesh = FakeMesh({"data": 1, "model": 2}, n_devices=2)
+        nc = B.select_backend(cfg, N=64, d=32, site="full", causal=False,
+                              mesh=mesh)
+        c = B.select_backend(cfg, N=64, d=32, site="full", causal=True,
+                             mesh=mesh)
+        assert nc.name == "efficient"
+        assert c.name == "direct"
+
+    def test_seq_mesh_selects_seq_parallel(self):
+        cfg = cfg_with()
+        d = cfg.dim_head
+        mesh = FakeMesh({"data": 1, "seq": 4, "model": 1}, n_devices=4)
+        n = int(T.crossover_n0(d)) + 64 - (int(T.crossover_n0(d)) + 64) % 4
+        s = B.select_backend(cfg, N=n, d=d, site="full", causal=True,
+                             mesh=mesh)
+        assert s.name == "causal-scan"
+        assert s.scan == "seq-parallel" and s.seq_shards == 4
+        assert (n // 4) % s.chunk == 0
+
+    def test_seq_mesh_indivisible_falls_back(self):
+        cfg = cfg_with()
+        d = cfg.dim_head
+        mesh = FakeMesh({"data": 1, "seq": 4, "model": 1}, n_devices=4)
+        s = B.select_backend(cfg, N=int(T.crossover_n0(d)) + 65, d=d,
+                             site="full", causal=True, mesh=mesh)
+        if s.name == "causal-scan":        # N odd -> can't split over 4
+            assert s.seq_shards == 1 and s.scan == "sequential"
+
+    def test_scan_pin_sequential_wins_over_mesh(self):
+        cfg = cfg_with(scan="sequential")
+        d = cfg.dim_head
+        mesh = FakeMesh({"data": 1, "seq": 4, "model": 1}, n_devices=4)
+        n = (int(T.crossover_n0(d)) + 64) // 4 * 4
+        s = B.select_backend(cfg, N=n, d=d, site="full", causal=True,
+                             mesh=mesh)
+        assert s.seq_shards == 1 and s.scan == "sequential"
+
+
+class TestDecodeSite:
+    def test_fused_decode_mha(self):
+        cfg = cfg_with(use_kernel=True)
+        s = B.select_backend(cfg, N=1, d=cfg.dim_head, site="decode")
+        assert s.name == "fused-decode"
+
+    def test_gqa_blocks_fused_decode_via_caps(self):
+        """The old inline `n_heads == kv_heads` if, now an explicit
+        capability miss with the reason recorded."""
+        cfg = gqa_cfg(use_kernel=True)
+        s = B.select_backend(cfg, N=1, d=cfg.dim_head, site="decode")
+        assert s.name == "causal-scan"
+        assert "gqa" in s.reason.lower()
+
+    def test_multi_device_blocks_fused_decode(self):
+        cfg = cfg_with(use_kernel=True)
+        mesh = FakeMesh({"data": 2, "model": 2})
+        s = B.select_backend(cfg, N=1, d=cfg.dim_head, site="decode",
+                             mesh=mesh)
+        assert s.name == "causal-scan"
+
+    def test_kernels_off_recurrent_step(self):
+        cfg = cfg_with()
+        s = B.select_backend(cfg, N=1, d=cfg.dim_head, site="decode")
+        assert s.name == "causal-scan"
+
+    def test_kv_cache_direct(self):
+        cfg = cfg_with()
+        s = B.select_backend(cfg, N=1, d=cfg.dim_head, site="decode",
+                             cache_kind="kv")
+        assert s.name == "direct"
+
+
+class TestPrefillSite:
+    def test_taylor_state_handoff(self):
+        cfg = cfg_with()
+        s = B.select_backend(cfg, N=128, d=cfg.dim_head, site="prefill")
+        assert s.name == "causal-scan"
+        assert s.chunk == 128          # one pass over the prefill chunk
+
+    def test_seq_mesh_splits_prefill_chunk(self):
+        cfg = cfg_with()
+        mesh = FakeMesh({"data": 1, "seq": 4, "model": 1}, n_devices=4)
+        s = B.select_backend(cfg, N=128, d=cfg.dim_head, site="prefill",
+                             mesh=mesh)
+        assert s.scan == "seq-parallel" and s.chunk == 32
+
+
+class TestServePlan:
+    def test_auto_cache_uses_memory_crossover(self):
+        """Satellite: pick_mode(optimize_for='memory') now drives the
+        serving path — short contexts go 'and Back' to the kv cache,
+        long contexts to the constant-size Taylor state."""
+        cfg = cfg_with()
+        d = cfg.dim_head
+        n1 = T.crossover_n1(d)
+        short = B.select_serve_plan(cfg, max_seq_len=int(n1) // 2,
+                                    prefill_chunk=16, cache_kind="auto")
+        long = B.select_serve_plan(cfg, max_seq_len=int(n1) * 2,
+                                   prefill_chunk=16, cache_kind="auto")
+        assert short.cache_kind == "kv"
+        assert long.cache_kind == "taylor"
+        assert short.prefill.name == "direct"
+        assert long.prefill.name == "causal-scan"
+        assert "N1" in short.reason
+
+    def test_pinned_cache_respected(self):
+        cfg = cfg_with()
+        p = B.select_serve_plan(cfg, max_seq_len=64, prefill_chunk=16,
+                                cache_kind="taylor")
+        assert p.cache_kind == "taylor"
+        assert p.decode.name == "causal-scan"
+
+
+class TestLauncherHelpers:
+    def test_configure_for_training(self):
+        cfg = cfg_with()
+        assert not cfg.taylor.use_kernel
+        on = B.configure_for_training(cfg)
+        assert on.taylor.use_kernel
+        off = B.configure_for_training(cfg, use_kernels=False)
+        assert not off.taylor.use_kernel
+        soft = B.configure_for_training(
+            cfg.with_(attn_backend="softmax"))
+        assert not soft.taylor.use_kernel
+
+    def test_report_shape(self):
+        cfg = cfg_with()
+        r = B.report(cfg, N=4096, d=cfg.dim_head)
+        assert set(r) == {"crossover_n0", "crossover_n1", "full",
+                          "prefill", "decode"}
+        for site in ("full", "prefill", "decode"):
+            assert r[site]["backend"] in B.REGISTRY
+
+
+class TestAmbientContext:
+    def test_defaults_to_ctx(self):
+        """select_backend with no mesh reads the ambient sharding ctx
+        (the in-jit path attention layers take)."""
+        cfg = cfg_with(use_kernel=True)
+        mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+        s0 = B.select_backend(cfg, N=64, d=cfg.dim_head, site="full",
+                              causal=True)
+        assert s0.name == "kernel-direct"
+        with ctx.use(mesh):
+            s1 = B.select_backend(cfg, N=64, d=cfg.dim_head, site="full",
+                                  causal=True)
+        # single local device: kernels stay in play under ctx.use
+        if len(jax.devices()) == 1:
+            assert s1.name == "kernel-direct"
+        else:
+            assert s1.name == "direct"

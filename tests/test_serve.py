@@ -259,6 +259,54 @@ def test_long_prefill_does_not_starve_decode(setup):
     assert eng.results["short"].out_tokens and eng.results["long"].out_tokens
 
 
+# ---------------------------------------------------------------------------
+# Sequence-parallel serving (multi-device CI job)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs a multi-device host platform "
+                           "(XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8)")
+def test_prefill_state_parity_under_seq_mesh(setup):
+    """The engine's chunked prefill must produce the same TaylorState —
+    and then the same tokens — whether the model runs under a
+    `seq`-sharded mesh (sequence-parallel causal scan + boundary-state
+    exchange) or on a single device."""
+    from repro.distributed import ctx
+    from repro.launch.mesh import make_seq_mesh
+    from repro.serve.request import SequenceStatus
+
+    cfg, params = setup
+    # 19 = 2×8 + 2 + 1: full chunks split over the seq axis, the
+    # power-of-two tail falls back to the sequential scan
+    prompt = _prompt(cfg, 19, seed=77)
+
+    def prefilled_state_and_tokens(use_mesh):
+        eng = Engine(cfg, params, EngineConfig(
+            n_slots=1, prefill_chunk=8, token_budget=32, max_seq_len=64))
+        eng.submit(Request("r", prompt, max_new_tokens=4))
+        while ("r" in eng.sequences
+               and eng.sequences["r"].status != SequenceStatus.DECODING):
+            eng.step()
+        state = jax.tree.map(lambda x: np.asarray(x), eng.pool.gather(0))
+        for _ in eng.run():
+            pass
+        return state, eng.results["r"].out_tokens
+
+    mesh = make_seq_mesh()
+    with mesh, ctx.use(mesh):
+        st_mesh, toks_mesh = prefilled_state_and_tokens(True)
+    st_ref, toks_ref = prefilled_state_and_tokens(False)
+
+    flat_m = jax.tree_util.tree_flatten_with_path(st_mesh)[0]
+    flat_r = jax.tree_util.tree_flatten_with_path(st_ref)[0]
+    for (path, a), (_, b) in zip(flat_m, flat_r):
+        np.testing.assert_allclose(
+            a, b, rtol=1e-5, atol=1e-5,
+            err_msg="/".join(str(p) for p in path))
+    assert toks_mesh == toks_ref
+
+
 def test_plan_chunks():
     assert plan_chunks(24, 8) == [8, 8, 8]
     assert plan_chunks(21, 8) == [8, 8, 4, 1]
