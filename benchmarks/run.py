@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
   Table 4  -> norm_ablation        (normalization => stability)
   Table 5  -> heads_sweep          (more heads => faster efficient)
   §Roofline-> roofline             (dry-run derived terms)
+  serving  -> serving_throughput   (decode-heavy speculative decoding)
 """
 
 import sys
@@ -22,7 +23,7 @@ def main() -> None:
 
     from benchmarks import (accuracy_parity, attention_scaling, crossover,
                             heads_sweep, norm_ablation, roofline,
-                            transformer_efficiency)
+                            serving_throughput, transformer_efficiency)
 
     crossover.run()
     norm_ablation.run()
@@ -34,6 +35,9 @@ def main() -> None:
                                else (256, 512, 1024, 2048))
     accuracy_parity.run(steps=40 if fast else 800)
     roofline.run()
+    serving_throughput.run_decode_heavy(batches=(1,) if fast else (1, 2),
+                                        gen=48 if fast else 256,
+                                        ks=(4,) if fast else (4, 8))
     print(f"benchmarks_total,{(time.time() - t0) * 1e6:.0f},", flush=True)
 
 

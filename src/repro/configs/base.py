@@ -59,6 +59,24 @@ class TaylorConfig:
 
 
 @dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-generation knobs (src/repro/spec/, docs/serving.md).
+
+    The draft-length cap itself lives on ``EngineConfig.speculate_k``
+    (0 disables speculation); this groups the drafter-side choices so
+    the engine config stays one flat dataclass.
+    """
+    drafter: str = "ngram"        # ngram (prompt-lookup) | self (shallow)
+    draft_layers: int = 1         # self-drafter: reuse the first j blocks
+    adaptive: bool = True         # acceptance-rate-adaptive draft length
+    ngram_max: int = 3            # longest history suffix matched
+    ngram_min: int = 1            # shortest suffix before giving up
+    ewma: float = 0.5             # acceptance-rate EWMA weight on new obs
+    grow_above: float = 0.8       # raise draft length above this rate
+    shrink_below: float = 0.4     # lower draft length below this rate
+
+
+@dataclass(frozen=True)
 class ModelConfig:
     name: str = "model"
     family: str = "decoder"       # decoder | encdec | hybrid | xlstm | vlm | audio

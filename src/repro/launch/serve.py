@@ -6,10 +6,13 @@ and every prompt is absorbed through chunked prefill (state handoff via
 ``causal_taylorshift(initial_state=...)``) — no token-by-token prefill
 loop remains in the serving path. With ``--check`` (default) each
 request is re-run alone through the naive single-sequence baseline and
-the tokens must match exactly at temperature 0.
+the tokens must match exactly at temperature 0 — including under
+``--speculate K`` (greedy speculative decoding is exact; see
+src/repro/spec/ and docs/serving.md).
 
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
-      --d-model 128 --n-layers 2 --requests 4 --prompt-len 32 --gen 16
+      --d-model 128 --n-layers 2 --requests 4 --prompt-len 32 --gen 16 \
+      --speculate 4 --drafter self
 """
 
 from __future__ import annotations
@@ -20,7 +23,7 @@ import json
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
+from repro.configs import SpecConfig, get_config
 from repro.models import model as M
 from repro.serve import Engine, EngineConfig, Request
 
@@ -58,7 +61,8 @@ def naive_generate(cfg, params, prompts: jnp.ndarray, *, gen_tokens: int,
 
 
 def mixed_arrival_workload(cfg, n_requests: int, prompt_len: int, gen: int,
-                           seed: int = 1):
+                           seed: int = 1, *, top_k: int = 0,
+                           top_p: float = 1.0):
     """Requests with staggered arrival steps and varied prompt lengths."""
     reqs, arrivals = [], []
     for i in range(n_requests):
@@ -67,7 +71,7 @@ def mixed_arrival_workload(cfg, n_requests: int, prompt_len: int, gen: int,
                                     (plen,), 0, cfg.vocab)
         reqs.append(Request(request_id=f"req{i}",
                             prompt=[int(t) for t in prompt],
-                            max_new_tokens=gen))
+                            max_new_tokens=gen, top_k=top_k, top_p=top_p))
         # ~half the requests arrive mid-flight, while earlier ones decode
         arrivals.append(0 if i < (n_requests + 1) // 2 else 2 * i)
     return reqs, arrivals
@@ -99,6 +103,18 @@ def main():
                     help="decode-cache layout; 'auto' picks via the paper's "
                          "N1 memory crossover (select_serve_plan)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k sampling cut (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="per-request nucleus sampling mass (1.0 = off)")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="speculative decoding with draft length <= K "
+                         "(0 = one token per step)")
+    ap.add_argument("--drafter", default="ngram", choices=["ngram", "self"],
+                    help="draft source: prompt-lookup n-grams or the "
+                         "model's own first --draft-layers blocks")
+    ap.add_argument("--draft-layers", type=int, default=1,
+                    help="self-drafter: number of leading blocks reused")
     ap.add_argument("--no-check", dest="check", action="store_false",
                     help="skip the per-request naive-baseline comparison")
     args = ap.parse_args()
@@ -111,13 +127,18 @@ def main():
         n_slots=args.slots, prefill_chunk=args.prefill_chunk,
         token_budget=args.token_budget, cache_kind=args.cache,
         max_seq_len=args.prompt_len + args.gen + 1,
-        temperature=args.temperature))
+        temperature=args.temperature,
+        speculate_k=args.speculate,
+        spec=SpecConfig(drafter=args.drafter,
+                        draft_layers=args.draft_layers)))
     plan = engine.plan
     print(f"serve plan: cache={plan.cache_kind} "
-          f"prefill={plan.prefill.name} decode={plan.decode.name} "
-          f"({plan.reason})")
+          f"prefill={plan.prefill.name} decode={plan.decode.name}"
+          + (f" verify={plan.verify.name}" if plan.verify else "")
+          + f" ({plan.reason})")
     reqs, arrivals = mixed_arrival_workload(
-        cfg, args.requests, args.prompt_len, args.gen)
+        cfg, args.requests, args.prompt_len, args.gen,
+        top_k=args.top_k, top_p=args.top_p)
     results = run_workload(engine, reqs, arrivals)
 
     summary = engine.stats.summary()

@@ -445,9 +445,71 @@ def attn_prefill(params: Params, cfg: ModelConfig, x: jnp.ndarray, cache,
     return L.dense(params["wo"], _merge_heads(y).astype(x.dtype)), cache
 
 
+def attn_verify(params: Params, cfg: ModelConfig, x: jnp.ndarray, cache,
+                *, kind: str = "global"):
+    """Multi-token scoring + absorb from a *per-slot* decode cache — the
+    speculative-verify site (src/repro/spec/, docs/design.md §4.4).
+
+    Where :func:`attn_prefill` continues one sequence (scalar counters),
+    verify continues every slot of the pool at once: x is (B, C,
+    d_model) with B = slots and C = speculate_k + 1, and the cache
+    carries per-slot (B,) position counters, so each row attends —
+    causally within its block — from its own context length. The same
+    path also serves the rollback re-absorb (a gathered batch-1 slot,
+    counters (1,)). Routed through ``select_backend(site="verify")``:
+    one sequential ``causal_taylorshift`` chunk for Taylor state, a
+    per-slot masked direct attend for kv caches.
+
+    Returns (y, new_cache) with every slot advanced by C tokens; the
+    caller snapshots/restores slots whose drafts are rejected.
+    """
+    if kind != "global":
+        raise NotImplementedError(
+            f"speculative verify supports global attention only "
+            f"(got kind={kind!r})")
+    is_taylor_state = isinstance(cache, T.TaylorState)
+    pos = cache.n if is_taylor_state else cache["pos"]
+    C = x.shape[1]
+    step = jnp.arange(C)
+    # rope positions broadcast over heads: (B, 1, C) per-slot, (C,) scalar
+    rpos = pos + step if pos.ndim == 0 else pos[:, None, None] + step
+    q, k, v = _project_qkv(params, cfg, x, rpos)
+
+    sel = B.select_backend(cfg, N=C, d=cfg.dim_head, site="verify",
+                           cache_kind="taylor" if is_taylor_state else "kv")
+    if is_taylor_state:
+        qg = _group_q(q, cfg.kv_heads)
+        kg, vg = k[:, :, None], v[:, :, None]
+        y, cache = T.causal_taylorshift(
+            qg, kg, vg, tau=_tau(params, cfg, True),
+            normalize_inputs=cfg.taylor.normalize_inputs,
+            output_scale=cfg.taylor.output_scale,
+            initial_state=cache, return_state=True, chunk=sel.chunk)
+        y = y.reshape(q.shape)
+    else:
+        cache_len = cache["k"].shape[2]
+        kc = k.astype(cache["k"].dtype)
+        vc = v.astype(cache["v"].dtype)
+        if pos.ndim:   # per-slot cache: every sequence writes its own index
+            upd = jax.vmap(
+                lambda c, u, s: jax.lax.dynamic_update_slice_in_dim(c, u, s, 1))
+            ck, cv = upd(cache["k"], kc, pos), upd(cache["v"], vc, pos)
+            qpos = pos[:, None] + step                            # (B, C)
+            mask = jnp.arange(cache_len)[None, None] <= qpos[:, :, None]
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kc, pos, 2)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vc, pos, 2)
+            qpos = pos + step
+            mask = jnp.arange(cache_len)[None] <= qpos[:, None]   # (C, L)
+        cache = {"k": ck, "v": cv, "pos": pos + C}
+        y = _prefill_attend(cfg, params, q, ck, cv, mask, counts=qpos + 1)
+    return L.dense(params["wo"], _merge_heads(y).astype(x.dtype)), cache
+
+
 def _prefill_attend(cfg, params, q, ck, cv, mask, counts):
     """Masked multi-query attention over a kv cache during chunked
-    prefill. q: (B,H,C,d); ck/cv: (B,KV,L,d); mask: (C, L); counts: (C,)
+    prefill / speculative verify. q: (B,H,C,d); ck/cv: (B,KV,L,d);
+    mask: (C, L) shared, or (B, C, L) per-slot; counts: (C,) or (B, C)
     true per-row context lengths."""
     b, h, _, d = q.shape
     kv = ck.shape[1]
@@ -455,12 +517,13 @@ def _prefill_attend(cfg, params, q, ck, cv, mask, counts):
         rep = h // kv
         ck = jnp.repeat(ck, rep, axis=1)
         cv = jnp.repeat(cv, rep, axis=1)
+    mask4 = mask[None, None] if mask.ndim == 2 else mask[:, None]
     if cfg.attn_backend == "softmax":
         x = jnp.einsum("bhcd,bhmd->bhcm", q, ck,
                        preferred_element_type=jnp.float32) / math.sqrt(d)
         if cfg.softcap_attn:
             x = L.softcap(x, cfg.softcap_attn)
-        x = jnp.where(mask[None, None], x, -1e30)
+        x = jnp.where(mask4, x, -1e30)
         a = jax.nn.softmax(x, -1)
         return jnp.einsum("bhcm,bhmd->bhcd", a.astype(cv.dtype), cv)
     tc = cfg.taylor
@@ -469,11 +532,13 @@ def _prefill_attend(cfg, params, q, ck, cv, mask, counts):
         q, ck = T.normalize_qk(q, ck, tau)
     x = jnp.einsum("bhcd,bhmd->bhcm", q, ck,
                    preferred_element_type=jnp.float32)
-    a = jnp.where(mask[None, None], T.taylor_exp(x), 0.0)
+    a = jnp.where(mask4, T.taylor_exp(x), 0.0)
     y = jnp.einsum("bhcm,bhmd->bhcd", a / jnp.sum(a, -1, keepdims=True),
                    cv.astype(a.dtype))
     if tc.output_scale:
-        y = y * jnp.sqrt(counts.astype(jnp.float32) / d)[None, None, :, None]
+        cf = counts.astype(jnp.float32)
+        cf = cf[None, None, :, None] if cf.ndim == 1 else cf[:, None, :, None]
+        y = y * jnp.sqrt(cf / d)
     return y.astype(cv.dtype)
 
 

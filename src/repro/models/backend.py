@@ -227,6 +227,21 @@ def select_backend(cfg, *, N: int, d: int, site: str = "full",
         return sel("causal-scan", scan="sequential",
                    reason=f"recurrent taylor_decode_step — {why}")
 
+    if site == "verify":
+        # Speculative verification (src/repro/spec/): score a short block
+        # of drafted tokens for every slot in one call, continuing each
+        # slot's state. The block is tiny (speculate_k+1 ≤ ~9 tokens), so
+        # it always runs as ONE chunk of the sequential scan — no seq
+        # sharding, no kernels (per-slot (B,) counters are a layout the
+        # flat kernels don't serve).
+        if cache_kind == "kv":
+            return sel("direct", mode="direct", repeat_kv=gqa,
+                       reason="kv cache: masked direct verify attend "
+                              "(per-slot positions)")
+        return sel("causal-scan", scan="sequential", chunk=max(N, 1),
+                   reason="multi-token verify from per-slot TaylorState "
+                          "(causal_taylorshift initial_state=…, one chunk)")
+
     if site == "prefill":
         if cache_kind == "kv":
             return sel("direct", mode="direct", repeat_kv=gqa,
@@ -277,10 +292,12 @@ class ServePlan:
     prefill: Selection
     decode: Selection
     reason: str
+    verify: Selection | None = None   # speculative verify (speculate_k > 0)
 
 
 def select_serve_plan(cfg, *, max_seq_len: int, prefill_chunk: int,
-                      cache_kind: str = "auto", mesh=None) -> ServePlan:
+                      cache_kind: str = "auto", speculate_k: int = 0,
+                      mesh=None) -> ServePlan:
     """Resolve the engine's cache layout and both serving paths.
 
     ``cache_kind='auto'`` applies the paper's memory crossover N1
@@ -302,6 +319,9 @@ def select_serve_plan(cfg, *, max_seq_len: int, prefill_chunk: int,
                                cache_kind=cache_kind, mesh=mesh),
         decode=select_backend(cfg, N=1, d=d, site="decode",
                               cache_kind=cache_kind, mesh=mesh),
+        verify=(select_backend(cfg, N=speculate_k + 1, d=d, site="verify",
+                               cache_kind=cache_kind, mesh=mesh)
+                if speculate_k else None),
         reason=reason)
 
 

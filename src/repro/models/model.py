@@ -218,16 +218,19 @@ def _block_decode(kind: str, p: Params, cfg: ModelConfig, x, cache, *,
 PREFILL_KINDS = ("global", "global_moe")
 
 
-def _block_prefill(kind: str, p: Params, cfg: ModelConfig, x, cache):
-    """One residual block over a whole prompt chunk, consuming and
-    returning the decode cache (chunked prefill). Global-attention kinds
-    only: local ring-buffer windows and SSM/xLSTM blocks would need
-    their own chunkwise state handoff."""
+def _block_absorb(kind: str, p: Params, cfg: ModelConfig, x, cache, *,
+                  attend, what: str):
+    """One residual block over a multi-token chunk that consumes and
+    returns the decode cache — shared body of chunked prefill
+    (``attend=attn_prefill``, per-sequence scalar counters) and
+    speculative verify (``attend=attn_verify``, per-slot counters; the
+    whole pool in one call). Global-attention kinds only: local
+    ring-buffer windows and SSM/xLSTM blocks would need their own
+    chunkwise state handoff."""
     if kind not in PREFILL_KINDS:
-        raise NotImplementedError(
-            f"chunked prefill: unsupported block kind {kind!r}")
+        raise NotImplementedError(f"{what}: unsupported block kind {kind!r}")
     _, norm = L.make_norm(cfg.norm)
-    h, cache = A.attn_prefill(p["attn"], cfg, norm(p["norm1"], x), cache)
+    h, cache = attend(p["attn"], cfg, norm(p["norm1"], x), cache)
     if cfg.post_norm:
         h = norm(p["norm1_post"], h)
     x = x + h
@@ -241,6 +244,16 @@ def _block_prefill(kind: str, p: Params, cfg: ModelConfig, x, cache):
             h = norm(p["norm2_post"], h)
         x = x + h
     return x, cache
+
+
+def _block_prefill(kind: str, p: Params, cfg: ModelConfig, x, cache):
+    return _block_absorb(kind, p, cfg, x, cache, attend=A.attn_prefill,
+                         what="chunked prefill")
+
+
+def _block_verify(kind: str, p: Params, cfg: ModelConfig, x, cache):
+    return _block_absorb(kind, p, cfg, x, cache, attend=A.attn_verify,
+                         what="speculative verify")
 
 
 # ---------------------------------------------------------------------------
@@ -571,6 +584,51 @@ def decode_step(params, cfg: ModelConfig, batch, cache):
 # Chunked prefill — the serving prefill path (repro.serve)
 # ---------------------------------------------------------------------------
 
+def _chunk_apply(params, cfg: ModelConfig, batch, cache, block_fn,
+                 what: str):
+    """Shared teacher-forced forward over a (B, C) token block that
+    consumes and returns a decode cache — the body of both
+    :func:`prefill_chunk` and :func:`verify_chunk` (they differ only in
+    which attention site each block runs). Position counters may be
+    scalar (per-sequence) or per-slot (B,)."""
+    if cfg.family == "encdec":
+        raise NotImplementedError(f"{what}: decoder families only")
+    _, norm = L.make_norm(cfg.norm)
+    tokens = batch["tokens"]
+    C = tokens.shape[1]
+    x = L.embed(params["embed"], tokens) * jnp.asarray(
+        jnp.sqrt(cfg.d_model), cfg.param_dtype)
+    if cfg.pos_embed == "learned":
+        p = cache["pos"]
+        step = jnp.arange(C)
+        x = L.add_learned_pos(params["pos"], x,
+                              p + step if p.ndim == 0 else p[:, None] + step)
+    pattern, n_groups, rem = _pattern_layout(cfg)
+
+    new_groups = []
+    if n_groups:
+        def body(x, sliced):
+            new_caches = []
+            for kind, bp, bc in zip(pattern, sliced[0], sliced[1]):
+                x, nc = block_fn(kind, bp, cfg, x, bc)
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        x, ncaches = jax.lax.scan(
+            body, x, (tuple(params["groups"]), tuple(cache["groups"])))
+        new_groups = list(ncaches)
+
+    new_rem = []
+    for kind, bp, bc in zip(rem, params["rem"], cache["rem"]):
+        x, nc = block_fn(kind, bp, cfg, x, bc)
+        new_rem.append(nc)
+
+    x = norm(params["final_norm"], x)
+    lg = logits_from_hidden(params, cfg, x)
+    return lg, {"groups": new_groups, "rem": new_rem,
+                "pos": cache["pos"] + C}
+
+
 def prefill_chunk(params, cfg: ModelConfig, batch, cache):
     """Teacher-forced forward over a (B, C) prompt chunk that consumes
     and returns the decode cache — the state-handoff path that replaces
@@ -581,44 +639,57 @@ def prefill_chunk(params, cfg: ModelConfig, batch, cache):
     prompt is absorbed chunk by chunk at full-sequence arithmetic
     intensity and the final state drops straight into the recurrent
     decode step. Cache must carry a scalar position (per-sequence
-    prefill); the serve engine scatters the result into its slot pool.
+    prefill — ``attn_prefill`` enforces it, and its `site="prefill"`
+    routing supports seq-parallel chunk scans); the serve engine
+    scatters the result into its slot pool.
 
     Returns (logits (B, C, vocab), new_cache).
     """
-    if cfg.family == "encdec":
-        raise NotImplementedError("chunked prefill: decoder families only")
-    _, norm = L.make_norm(cfg.norm)
-    tokens = batch["tokens"]
-    C = tokens.shape[1]
-    x = L.embed(params["embed"], tokens) * jnp.asarray(
-        jnp.sqrt(cfg.d_model), cfg.param_dtype)
-    if cfg.pos_embed == "learned":
-        x = L.add_learned_pos(params["pos"], x,
-                              cache["pos"] + jnp.arange(C))
-    pattern, n_groups, rem = _pattern_layout(cfg)
+    return _chunk_apply(params, cfg, batch, cache, _block_prefill,
+                        "chunked prefill")
 
-    new_groups = []
-    if n_groups:
-        def body(x, sliced):
-            new_caches = []
-            for kind, bp, bc in zip(pattern, sliced[0], sliced[1]):
-                x, nc = _block_prefill(kind, bp, cfg, x, bc)
-                new_caches.append(nc)
-            return x, tuple(new_caches)
 
-        x, ncaches = jax.lax.scan(
-            body, x, (tuple(params["groups"]), tuple(cache["groups"])))
-        new_groups = list(ncaches)
+# ---------------------------------------------------------------------------
+# Speculative verify — score k drafted tokens per slot (repro.spec)
+# ---------------------------------------------------------------------------
 
-    new_rem = []
-    for kind, bp, bc in zip(rem, params["rem"], cache["rem"]):
-        x, nc = _block_prefill(kind, bp, cfg, x, bc)
-        new_rem.append(nc)
+def verify_chunk(params, cfg: ModelConfig, batch, cache):
+    """Teacher-forced forward over a (B, C) token block that consumes and
+    returns a *per-slot* decode cache — the speculative-verification path
+    (src/repro/spec/).
 
-    x = norm(params["final_norm"], x)
-    lg = logits_from_hidden(params, cfg, x)
-    return lg, {"groups": new_groups, "rem": new_rem,
-                "pos": cache["pos"] + C}
+    Where :func:`prefill_chunk` continues one sequence (scalar position),
+    verify continues every slot of a continuous-batching pool at once:
+    B = slots, C = speculate_k + 1, and ``cache["pos"]`` / TaylorState
+    ``n`` are (B,) so each row attends from its own context length. The
+    same function also serves the rollback re-absorb on a gathered
+    batch-1 slot. Causality holds within the block, so ``logits[:, i]``
+    is exactly the next-token distribution after absorbing tokens
+    ``[0..i]`` — what greedy verification compares drafts against.
+
+    Returns (logits (B, C, vocab), new_cache) with every slot advanced
+    by C tokens; the caller snapshots/restores slots whose drafts are
+    rejected (serve/pool.py: ``StatePool.snapshot/restore``).
+    """
+    return _chunk_apply(params, cfg, batch, cache, _block_verify,
+                        "speculative verify")
+
+
+def verify_rollback(params, cfg: ModelConfig, cache, snap, slot, batch):
+    """Fused rejected-draft rollback: restore ``slot`` from the
+    pre-verify pool snapshot ``snap`` and advance it by the accepted
+    prefix ``batch["tokens"]`` (1, a+1), all in one traceable call —
+    gather-from-snapshot, :func:`verify_chunk` re-absorb, scatter into
+    ``cache``. ``slot`` may be traced (no retrace per slot); only the
+    accepted-prefix length changes the shape (≤ speculate_k variants).
+
+    ``snap`` is simply a reference to the pool pytree from before the
+    verify call — jax arrays are immutable, so holding the old cache IS
+    a bit-exact snapshot of every slot at zero copy cost.
+    """
+    sub = cache_gather_slot(snap, slot)
+    _, sub = verify_chunk(params, cfg, batch, sub)
+    return cache_scatter_slot(cache, sub, slot)
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,9 @@ fixed-size ``TaylorState``. The engine therefore reduces to
   * a token-budget scheduler interleaving prefill chunks with batched
     decode steps (``scheduler``),
   * request lifecycle + admission queue with backpressure (``request``),
+  * snapshot/rollback of whole slots in O(d²) (``pool.StatePool.
+    snapshot/restore``) — the primitive the speculative-generation
+    subsystem (``repro.spec``, ``EngineConfig.speculate_k``) builds on,
 
 tied together by ``engine.Engine``. See docs/serving.md.
 """

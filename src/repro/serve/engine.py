@@ -7,6 +7,15 @@ no step ever recompiles. Sequences at different context lengths share
 decode batches thanks to the per-slot position counters
 (``init_decode_state(per_slot=True)``).
 
+Speculative decoding (``speculate_k > 0``, src/repro/spec/): instead of
+one token per step, a drafter proposes k tokens per decoding slot, one
+batched ``verify_chunk`` call scores all k+1 from each slot's current
+Taylor state, and the longest argmax-matching prefix (plus one bonus
+token) is emitted. Slots whose drafts are rejected roll back through
+``StatePool.snapshot/restore`` — O(d²) regardless of context length —
+and re-absorb just the accepted prefix. Greedy output is bit-identical
+to the one-token-per-step engine; only throughput changes.
+
 Typical use::
 
     eng = Engine(cfg, params, EngineConfig(n_slots=4))
@@ -20,14 +29,14 @@ from __future__ import annotations
 
 import time
 import zlib
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, SpecConfig
 from repro.models import backend as B
 from repro.models import model as M
 from repro.models.model import PREFILL_KINDS
@@ -47,8 +56,31 @@ class EngineConfig:
     max_seq_len: int = 2048      # pool cache_len (kv caches only grow to this)
     cache_kind: str = "taylor"   # taylor | kv | auto ("and Back" via the
     #   N1 memory crossover — models/backend.py:select_serve_plan)
-    temperature: float = 0.0
+    temperature: float = 0.0     # default; Request.temperature overrides
     seed: int = 0
+    speculate_k: int = 0         # max draft length; 0 = no speculation
+    spec: SpecConfig = field(default_factory=SpecConfig)
+
+
+def _filter_logits(lg: jnp.ndarray, top_k: int, top_p: float) -> jnp.ndarray:
+    """Apply top-k then nucleus (top-p) filtering to one logits row.
+
+    top-k keeps the k largest logits; top-p keeps the smallest
+    probability-sorted prefix whose cumulative mass reaches ``top_p``
+    (the first token always survives, so sampling is never empty).
+    Filtered entries go to -inf — ``jax.random.categorical`` assigns
+    them zero probability.
+    """
+    if top_k > 0:
+        kth = jnp.sort(lg)[-min(top_k, lg.shape[-1])]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    if top_p < 1.0:
+        order = jnp.argsort(-lg)
+        probs = jax.nn.softmax(lg[order])
+        keep_sorted = jnp.cumsum(probs) - probs < top_p
+        keep = jnp.zeros_like(keep_sorted).at[order].set(keep_sorted)
+        lg = jnp.where(keep, lg, -jnp.inf)
+    return lg
 
 
 class Engine:
@@ -68,9 +100,14 @@ class Engine:
         self.plan = B.select_serve_plan(
             cfg, max_seq_len=econf.max_seq_len,
             prefill_chunk=econf.prefill_chunk,
-            cache_kind=econf.cache_kind)
+            cache_kind=econf.cache_kind,
+            speculate_k=econf.speculate_k)
+        # kv caches need k rows of headroom: a verify block written at the
+        # final context position overshoots max_seq_len by up to k before
+        # the rollback trims it (Taylor slots are size-invariant anyway)
+        cache_len = econf.max_seq_len + max(econf.speculate_k, 0)
         self.pool = StatePool(cfg, econf.n_slots,
-                              cache_len=econf.max_seq_len,
+                              cache_len=cache_len,
                               cache_kind=self.plan.cache_kind)
         self.queue = AdmissionQueue(econf.max_queue)
         self.scheduler = Scheduler(econf.token_budget)
@@ -89,10 +126,32 @@ class Engine:
         decode_jit = jax.jit(
             lambda p, toks, cache: M.decode_step(p, cfg,
                                                  {"tokens": toks}, cache))
+        verify_jit = jax.jit(
+            lambda p, toks, cache: M.verify_chunk(p, cfg,
+                                                  {"tokens": toks}, cache))
+        rollback_jit = jax.jit(
+            lambda p, cache, snap, slot, toks: M.verify_rollback(
+                p, cfg, cache, snap, slot, {"tokens": toks}))
         self._prefill_fn = lambda toks, cache: prefill_jit(
             self._params, toks, cache)
         self._decode_fn = lambda toks, cache: decode_jit(
             self._params, toks, cache)
+        self._verify_fn = lambda toks, cache: verify_jit(
+            self._params, toks, cache)
+        self._rollback_fn = lambda cache, snap, slot, toks: rollback_jit(
+            self._params, cache, snap, slot, toks)
+        # speculative machinery (lazy import: repro.spec builds on the
+        # pool/prefill layers of this package)
+        self.drafter = None
+        self._controller = None
+        if econf.speculate_k > 0:
+            from repro.spec.controller import DraftController
+            from repro.spec.drafter import make_drafter
+            self.drafter = make_drafter(
+                cfg, params, n_slots=econf.n_slots, cache_len=cache_len,
+                cache_kind=self.plan.cache_kind, spec=econf.spec,
+                prefill_chunk=econf.prefill_chunk)
+            self._controller = DraftController(econf.speculate_k, econf.spec)
 
     # ------------------------------------------------------------------
     # Submission
@@ -120,6 +179,18 @@ class Engine:
         tests key on this)."""
         return self._step_idx
 
+    def reset_metrics(self) -> None:
+        """Fresh ``EngineStats`` and draft controller. For warm/timed
+        benchmark pairs: the adaptive controller's draft length follows
+        its acceptance history, so without a reset the timed run would
+        take a different k trajectory than the warmup (and recompile
+        verify shapes mid-measurement)."""
+        self.stats = EngineStats()
+        if self._controller is not None:
+            from repro.spec.controller import DraftController
+            self._controller = DraftController(self.econf.speculate_k,
+                                               self.econf.spec)
+
     def pop_result(self, request_id: str) -> Sequence:
         """Drain one finished sequence. ``results`` retains finished
         sequences until popped — long-running callers must drain (and may
@@ -145,25 +216,40 @@ class Engine:
         plan = self.scheduler.plan([s for s in self._slots if s is not None])
         budget = self.scheduler.token_budget
 
-        # 2. one batched decode step for every running sequence
+        # 2. one batched decode (or draft+verify) pass for every running
+        # sequence. Speculation only pays when at least one decoding row
+        # is greedy — sampled rows always reject their drafts, so an
+        # all-sampled batch takes the plain decode path (one token per
+        # slot, no draft/verify/rollback work, no budget surcharge).
         decode_tokens = 0
-        if plan.decode:
+        draft_tokens = accepted_tokens = rollbacks = k_step = 0
+        spec_step = (self.drafter is not None
+                     and any(self._temp(s) <= 0.0 for s in plan.decode))
+        if plan.decode and spec_step:
+            k_step = self._controller.k
+            (decode_tokens, draft_tokens, accepted_tokens,
+             rollbacks) = self._speculative_decode(plan.decode, k_step,
+                                                   events)
+            budget -= self.scheduler.decode_cost(len(plan.decode), k_step)
+        elif plan.decode:
             tokens = np.zeros((self.pool.n_slots, 1), np.int32)
             for s in plan.decode:
                 tokens[s.slot, 0] = s.next_token
             logits, self.pool.cache = self._decode_fn(
                 jnp.asarray(tokens), self.pool.cache)
             last = logits[:, -1]
-            if self.econf.temperature <= 0.0:
-                # one batched argmax + one device sync for the whole step
+            # one batched argmax + one device sync covers every greedy
+            # row; skipped entirely when the whole batch is sampled
+            greedy = None
+            if any(self._temp(s) <= 0.0 for s in plan.decode):
                 greedy = np.asarray(jnp.argmax(last, axis=-1))
-                for s in plan.decode:
+            for s in plan.decode:
+                if self._temp(s) <= 0.0:
                     events.append(self._emit(s, int(greedy[s.slot])))
-            else:
-                for s in plan.decode:
+                else:
                     events.append(self._emit(s, self._sample(s, last[s.slot])))
             decode_tokens = len(plan.decode)
-            budget -= decode_tokens
+            budget -= self.scheduler.decode_cost(len(plan.decode))
 
         # 3. chunked prefill under the remaining budget
         prefill_tokens = 0
@@ -183,6 +269,8 @@ class Engine:
             self.pool.scatter(s.cache, s.slot)
             s.cache = None
             s.status = SequenceStatus.DECODING
+            if self.drafter is not None:
+                self.drafter.on_ready(s)
             s.t_first_token = time.perf_counter()
             self.stats.record_first_token(s.ttft)
             events.append(self._emit(s, self._sample(s, s.last_logits[0, -1]),
@@ -193,7 +281,9 @@ class Engine:
             step=self._step_idx, wall_s=time.perf_counter() - t0,
             decode_tokens=decode_tokens, prefill_tokens=prefill_tokens,
             queue_depth=self.queue.depth, occupancy=self.pool.occupancy,
-            active_decoding=len(plan.decode))
+            active_decoding=len(plan.decode),
+            draft_tokens=draft_tokens, accepted_tokens=accepted_tokens,
+            rollbacks=rollbacks, speculate_k=k_step)
         self.stats.record_step(m)
         self._step_idx += 1
         return m, events
@@ -215,20 +305,96 @@ class Engine:
                 for r in requests}
 
     # ------------------------------------------------------------------
+    # Speculative decode (draft -> one batched verify -> accept/rollback)
+    # ------------------------------------------------------------------
+
+    def _speculative_decode(self, decoding: list[Sequence], k: int,
+                            events: list[TokenEvent]
+                            ) -> tuple[int, int, int, int]:
+        """One draft+verify pass over every decoding slot.
+
+        Returns (emitted, drafted, accepted, rollbacks). Greedy
+        sequences accept the longest draft prefix whose argmax chain
+        matches (bit-identical to one-token-per-step greedy decoding);
+        sampled sequences draw from the verify block's first position —
+        exactly the next-token distribution — and always roll back the
+        drafted tail.
+
+        Rollback discipline: jax arrays are immutable, so holding the
+        pre-verify pool pytree is a zero-copy bit-exact snapshot of
+        every slot. A rejected slot is then fixed in ONE fused call
+        (``models.model.verify_rollback``): restore from the snapshot +
+        re-absorb the accepted prefix, ≤ k distinct shapes total. An
+        accepted-everything step costs exactly the dispatches of a
+        plain decode step (verify + argmax) while emitting k+1 tokens
+        per slot.
+        """
+        from repro.spec.verify import accepted_prefix
+
+        drafts = self.drafter.draft(decoding, k)
+        tokens = np.zeros((self.pool.n_slots, k + 1), np.int32)
+        for s in decoding:
+            tokens[s.slot, 0] = s.next_token
+            tokens[s.slot, 1:] = drafts[s.slot]
+        snap = self.pool.cache          # O(1): arrays are immutable
+        logits, self.pool.cache = self._verify_fn(
+            jnp.asarray(tokens), self.pool.cache)
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))   # (slots, k+1)
+
+        # every decoding slot's k drafts are scored (and budgeted),
+        # sampled ones included — only acceptance is greedy-specific
+        emitted_n, accepted_n, rollbacks = 0, 0, 0
+        drafted_n = k * len(decoding)
+        for s in decoding:
+            slot = s.slot
+            if self._temp(s) <= 0.0:
+                a, emitted = accepted_prefix(drafts[slot], greedy[slot])
+                accepted_n += a
+                self._controller.update(a, k)   # greedy observations only:
+            else:                               # sampled seqs always reject
+                a, emitted = 0, [self._sample(s, logits[slot, 0])]
+            for t in emitted:
+                ev = self._emit(s, t)
+                events.append(ev)
+                emitted_n += 1
+                if ev.finished:
+                    break
+            if s.status is SequenceStatus.FINISHED:
+                continue        # slot already released and zero-reset
+            if a < k:
+                # state absorbed all k+1 fed tokens but only a+1 are
+                # real context: restore and re-absorb the accepted
+                # prefix (the bonus token is the *next* feed, never
+                # absorbed here — same as the non-speculative step)
+                self.pool.cache = self._rollback_fn(
+                    self.pool.cache, snap, slot,
+                    jnp.asarray(tokens[slot, :a + 1], jnp.int32)[None])
+                rollbacks += 1
+            self.drafter.commit(s, a, tokens[slot].tolist())
+        return emitted_n, drafted_n, accepted_n, rollbacks
+
+    # ------------------------------------------------------------------
     # Sampling / lifecycle internals
     # ------------------------------------------------------------------
 
+    def _temp(self, seq: Sequence) -> float:
+        """Effective temperature: per-request override, engine default."""
+        t = seq.request.temperature
+        return self.econf.temperature if t is None else t
+
     def _sample(self, seq: Sequence, logits_row) -> int:
-        if self.econf.temperature <= 0.0:
+        temp = self._temp(seq)
+        if temp <= 0.0:
             return int(jnp.argmax(logits_row))
+        lg = jnp.asarray(logits_row, jnp.float32) / temp
+        lg = _filter_logits(lg, seq.request.top_k, seq.request.top_p)
         # per-(request, index) keys: sampling is independent of how the
         # request was batched, so staggered arrivals stay reproducible;
         # crc32, not hash() — str hashing is salted per interpreter
         rid = zlib.crc32(seq.request_id.encode()) & 0x7FFFFFFF
         key = jax.random.fold_in(jax.random.fold_in(self._rng, rid),
                                  len(seq.out_tokens))
-        return int(jax.random.categorical(
-            key, logits_row / self.econf.temperature))
+        return int(jax.random.categorical(key, lg))
 
     def _emit(self, seq: Sequence, token: int, *, first: bool = False
               ) -> TokenEvent:
@@ -245,6 +411,8 @@ class Engine:
         seq.status = SequenceStatus.FINISHED
         seq.t_finish = time.perf_counter()
         self._slots[seq.slot] = None
+        if self.drafter is not None:
+            self.drafter.release(seq.slot)
         self.pool.release(seq.slot)
         seq.slot = None
         del self.sequences[seq.request_id]   # live bookkeeping only

@@ -11,6 +11,19 @@ memory that never grows with context length.
 Slot lifecycle: ``alloc`` (admission) → ``scatter`` (prefill finished,
 single-sequence state dropped into the slot) → ``release`` (zero-reset,
 back on the free list).
+
+Because a Taylor slot is constant-size — O(layers · d²) sums plus
+counters, independent of context length — a full copy of a slot's state
+is as cheap as one decode step's state update. ``snapshot``/``restore``
+expose that as the rollback primitive speculative decoding builds on
+(src/repro/spec/, docs/design.md): snapshot before scoring drafted
+tokens, restore when the drafts are rejected. jax arrays are immutable,
+so a snapshot is simply the gathered sub-pytree — it can never be
+corrupted by later pool updates, and restore is one scatter. (With
+``cache_kind="kv"`` — the "and Back" regime below the N1 crossover —
+a slot copy is O(layers · cache_len · d) instead: still one gather,
+but growing with ``max_seq_len``; the constant-cost claim is the
+Taylor state's.)
 """
 
 from __future__ import annotations
@@ -59,8 +72,14 @@ class StatePool:
         """Zero the slot's state and return it to the free list. The
         zero-reset is hygiene, not correctness: a later ``scatter``
         overwrites every leaf of the slot anyway."""
-        self.cache = self._reset(self.cache, slot)
+        self.reset(slot)
         self._free.append(slot)
+
+    def reset(self, slot: int) -> None:
+        """Zero one slot *without* freeing it — for shadow pools (e.g.
+        the self-drafter's) whose slot indices mirror this pool's and
+        are not independently allocated."""
+        self.cache = self._reset(self.cache, slot)
 
     # -- state movement -----------------------------------------------------
 
@@ -76,6 +95,22 @@ class StatePool:
 
     def gather(self, slot: int):
         return self._gather(self.cache, slot)
+
+    # -- snapshot / rollback (speculative decoding, repro.spec) -------------
+    #
+    # Thin rollback-facing names over gather/scatter — ONE underlying
+    # slot-copy path. A snapshot is bit-exact for every leaf (state
+    # sums / kv rows / pos counters) and immutable, so it survives any
+    # number of pool mutations; restore makes the slot bit-identical to
+    # snapshot time (tests/test_spec.py pins the round-trip). Cost is
+    # O(layers · d²) for Taylor slots — context-length-independent —
+    # and O(layers · cache_len · d) for kv slots.
+
+    def snapshot(self, slot: int):
+        return self.gather(slot)
+
+    def restore(self, slot: int, snap) -> None:
+        self.scatter(snap, slot)
 
     def nbytes(self) -> int:
         return sum(x.size * x.dtype.itemsize

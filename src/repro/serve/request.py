@@ -29,17 +29,34 @@ class SequenceStatus(enum.Enum):
 
 @dataclass
 class Request:
-    """One generation request. ``prompt``: token ids."""
+    """One generation request. ``prompt``: token ids.
+
+    Sampling is per-request, not engine-global: ``temperature=None``
+    inherits the engine default (``EngineConfig.temperature``), any
+    other value pins this request. ``top_k``/``top_p`` restrict the
+    sampled support (0 / 1.0 = off); both compose (top-k filter first,
+    then nucleus). Greedy requests (effective temperature <= 0) are the
+    ones speculative decoding accepts drafts for — sampled requests
+    still flow through a speculative step but draw from the verify
+    logits' first position (see docs/serving.md).
+    """
     request_id: str
     prompt: Seq[int]
     max_new_tokens: int = 16
     eos_id: int | None = None
+    temperature: float | None = None   # None = engine default
+    top_k: int = 0                     # 0 = no top-k cut
+    top_p: float = 1.0                 # 1.0 = no nucleus cut
 
     def __post_init__(self):
         if len(self.prompt) < 1:
             raise ValueError("empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
 
 
 @dataclass

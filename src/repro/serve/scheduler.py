@@ -33,11 +33,17 @@ class StepPlan:
 class StepMetrics:
     step: int
     wall_s: float
-    decode_tokens: int
+    decode_tokens: int           # tokens *emitted* by the decode/verify path
     prefill_tokens: int
     queue_depth: int
     occupancy: float             # fraction of slots held
     active_decoding: int
+    # --- speculative decoding (0 when speculation is off) ------------------
+    draft_tokens: int = 0        # drafted tokens scored (k · decoding slots)
+    accepted_tokens: int = 0     # drafts accepted by greedy verification
+    #   (sampled rows score their drafts too but always reject)
+    rollbacks: int = 0           # slots restored from snapshot (a < k)
+    speculate_k: int = 0         # draft length the controller used
 
 
 @dataclass
@@ -60,7 +66,9 @@ class EngineStats:
         wall = sum(m.wall_s for m in self.steps)
         dec = sum(m.decode_tokens for m in self.steps)
         pre = sum(m.prefill_tokens for m in self.steps)
-        return {
+        drafted = sum(m.draft_tokens for m in self.steps)
+        accepted = sum(m.accepted_tokens for m in self.steps)
+        out = {
             "steps": len(self.steps),
             "completed_requests": self.completed,
             "wall_s": wall,
@@ -74,6 +82,16 @@ class EngineStats:
                                                for m in self.steps)
                                if self.steps else 0.0),
         }
+        if drafted:     # speculation ran: surface accept/rollback next
+            out.update({   # to TTFT/tok-s (ISSUE 4 engine metrics)
+                "draft_tokens": drafted,
+                "accepted_tokens": accepted,
+                "acceptance_rate": accepted / drafted,
+                "rollbacks": sum(m.rollbacks for m in self.steps),
+                "mean_speculate_k": statistics.mean(
+                    m.speculate_k for m in self.steps if m.speculate_k),
+            })
+        return out
 
 
 class Scheduler:
@@ -81,6 +99,18 @@ class Scheduler:
         if token_budget < 1:
             raise ValueError("token_budget must be >= 1")
         self.token_budget = token_budget
+
+    @staticmethod
+    def decode_cost(n_decoding: int, draft_k: int = 0) -> int:
+        """Scheduled-token cost of one decode/verify pass.
+
+        Without speculation each decoding slot scores one token. With a
+        draft length k the verify call scores k+1 tokens per slot —
+        drafted tokens do real model work whether or not they are
+        accepted, so they count against the step budget exactly like
+        prefill tokens (otherwise speculation would silently starve
+        prefill under a 'one token per slot' assumption)."""
+        return n_decoding * (draft_k + 1)
 
     def plan(self, sequences: list[Sequence]) -> StepPlan:
         decode = [s for s in sequences

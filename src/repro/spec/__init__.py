@@ -1,0 +1,37 @@
+"""Speculative generation on snapshot/rollback Taylor state.
+
+TaylorShift's "and Back" reformulation gives every decoding sequence a
+*constant-size* recurrent state (per-head O(d²) tensors, not a growing
+KV cache) — the linear-attention-as-RNN view of Katharopoulos et al.
+(2020). That makes state snapshot/rollback nearly free: a slot's entire
+decode state copies in O(layers · d²) regardless of context length, so
+speculative decoding needs no paged-cache surgery. The subsystem is
+
+  * ``drafter``    — the ``Drafter`` interface plus two concrete
+    drafters: ``NgramDrafter`` (prompt-lookup: match the context suffix
+    against earlier context, propose the historical continuation) and
+    ``SelfDrafter`` (shallow self-draft: the model's own first j blocks
+    + final norm + unembed run as a truncated model with its own slot
+    pool, mirroring the main pool's snapshot/rollback discipline);
+  * ``verify``     — greedy acceptance: score the k drafted tokens in
+    ONE ``models.model.verify_chunk`` call from each slot's current
+    state (`select_backend(site="verify")` routes it onto one
+    sequential ``causal_taylorshift`` chunk), then accept the longest
+    prefix whose argmax chain matches the draft, plus one bonus token;
+  * ``controller`` — acceptance-rate-adaptive draft length (EWMA over
+    observed acceptance, doubling/halving within [1, speculate_k]).
+
+Engine integration lives in ``serve/engine.py`` (``EngineConfig.
+speculate_k``); rollback primitives in ``serve/pool.py``
+(``StatePool.snapshot/restore``). See docs/serving.md.
+"""
+
+from repro.spec.controller import DraftController
+from repro.spec.drafter import (Drafter, NgramDrafter, SelfDrafter,
+                                make_drafter, truncate_params)
+from repro.spec.verify import accepted_prefix
+
+__all__ = [
+    "Drafter", "NgramDrafter", "SelfDrafter", "make_drafter",
+    "truncate_params", "accepted_prefix", "DraftController",
+]

@@ -1,0 +1,59 @@
+"""Acceptance-rate-adaptive draft length.
+
+Speculation's cost model: a verify step always pays for k+1 scored
+tokens (plus the drafter's own work) but only emits a+1, so the win
+lives or dies on the acceptance rate a/k. The controller tracks an EWMA
+of observed acceptance and moves the draft length by doubling/halving
+within [1, cap] — powers of two keep the set of verify-call shapes (and
+therefore jit retraces) logarithmic in the cap rather than linear.
+
+One controller per engine (not per sequence): the verify call batches
+every decoding slot at one shared k, so a per-sequence length would
+force ragged blocks. Greedy output is k-invariant (verification only
+ever accepts tokens greedy decoding would emit), so adaptation changes
+throughput, never the stream.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import SpecConfig
+
+
+class DraftController:
+    """Tracks acceptance and serves the current draft length ``k``."""
+
+    def __init__(self, cap: int, spec: SpecConfig | None = None):
+        if cap < 1:
+            raise ValueError("draft-length cap must be >= 1")
+        self.cap = cap
+        self.spec = spec or SpecConfig()
+        self.k = cap
+        # neutral prior between the two thresholds: no resize until
+        # real observations push the EWMA out of the dead band
+        self.rate = 0.5 * (self.spec.grow_above + self.spec.shrink_below)
+        self.observed_drafted = 0
+        self.observed_accepted = 0
+
+    def update(self, accepted: int, drafted: int) -> None:
+        """Fold one sequence's verify outcome (a of k accepted) in."""
+        if drafted <= 0:
+            return
+        if not 0 <= accepted <= drafted:
+            raise ValueError(f"accepted={accepted} of drafted={drafted}")
+        self.observed_drafted += drafted
+        self.observed_accepted += accepted
+        w = self.spec.ewma
+        self.rate = (1.0 - w) * self.rate + w * (accepted / drafted)
+        if not self.spec.adaptive:
+            return
+        if self.rate > self.spec.grow_above:
+            self.k = min(self.k * 2, self.cap)
+        elif self.rate < self.spec.shrink_below:
+            self.k = max(self.k // 2, 1)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Lifetime mean acceptance (not the EWMA the resizing uses)."""
+        if not self.observed_drafted:
+            return 0.0
+        return self.observed_accepted / self.observed_drafted

@@ -1,0 +1,297 @@
+"""Draft-token proposers.
+
+Two concrete drafters behind one interface:
+
+  * ``NgramDrafter`` — prompt-lookup decoding: match the longest suffix
+    of the sequence's context (prompt + generated tokens) against
+    earlier context and propose the historical continuation. Pure
+    host-side list work, zero model FLOPs — the right drafter for
+    extractive/repetitive workloads where the continuation already
+    appeared verbatim.
+  * ``SelfDrafter`` — shallow self-draft: the model's own first j
+    blocks plus the final norm and unembedding, run as a truncated
+    model over its *own* slot pool (same ``StatePool`` machinery,
+    constant-size Taylor state). Drafting k tokens costs k+1 shallow
+    decode steps at j/L of a full step each; the drafter pool mirrors
+    the main pool's snapshot → verify → rollback/re-absorb discipline
+    so its state tracks exactly the accepted context.
+
+The engine drives drafters through four hooks: ``on_ready`` (prompt
+absorbed, slot live), ``draft`` (propose k tokens per decoding slot),
+``commit`` (verification outcome — roll shallow state back to the
+accepted prefix), ``release`` (slot freed). Stateless drafters ignore
+everything but ``draft``.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence as Seq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SpecConfig
+
+
+class Drafter:
+    """Interface. ``draft`` maps decoding sequences to k proposed tokens
+    each; the other hooks let stateful drafters track slot lifecycle."""
+
+    def draft(self, seqs, k: int) -> dict[int, list[int]]:
+        """slot -> k draft tokens, for every sequence in ``seqs``."""
+        raise NotImplementedError
+
+    def on_ready(self, seq) -> None:
+        """Called once per sequence when its prompt has been absorbed
+        into the main pool (slot allocated, decode about to start)."""
+
+    def commit(self, seq, accepted: int, block: Seq[int]) -> None:
+        """Verification outcome for one sequence: of the k drafts in
+        ``block[1:]`` (``block[0]`` is the previous real token), the
+        first ``accepted`` were accepted. Stateful drafters roll back
+        to the accepted prefix ``block[:accepted + 1]`` here."""
+
+    def release(self, slot: int) -> None:
+        """Slot freed (sequence finished)."""
+
+
+# ---------------------------------------------------------------------------
+# Prompt-lookup (n-gram) drafting
+# ---------------------------------------------------------------------------
+
+def ngram_propose(context: Seq[int], k: int, *, ngram_max: int = 3,
+                  ngram_min: int = 1) -> list[int]:
+    """Propose k tokens by suffix lookup in the sequence's own context.
+
+    Longest-match-first: for n from ``ngram_max`` down to ``ngram_min``,
+    find the most recent earlier occurrence of the length-n context
+    suffix and return the k tokens that followed it (padded by repeating
+    the last proposal when the match sits near the end). Falls back to
+    repeating the last context token — drafting must always return
+    exactly k tokens so the verify block keeps a fixed shape; a bad
+    draft merely costs acceptance.
+    """
+    ctx = [int(t) for t in context]
+    n_ctx = len(ctx)
+    if n_ctx == 0:
+        raise ValueError("cannot draft from empty context")
+    for n in range(min(ngram_max, n_ctx - 1), ngram_min - 1, -1):
+        suffix = ctx[n_ctx - n:]
+        for start in range(n_ctx - n - 1, -1, -1):
+            if ctx[start:start + n] == suffix:
+                cont = ctx[start + n:start + n + k]
+                if cont:
+                    while len(cont) < k:
+                        cont.append(cont[-1])
+                    return cont
+    return [ctx[-1]] * k
+
+
+class NgramDrafter(Drafter):
+    """Prompt-lookup drafter (zero model FLOPs).
+
+    Keeps a per-slot incremental index — for each n-gram length, a map
+    from gram to the position just after its most recent occurrence
+    strictly before the context end — extended only over tokens emitted
+    since the last draft. Each draft is then O(ngram_max) dict lookups
+    instead of :func:`ngram_propose`'s O(ngram_max · context) rescan
+    (which would come to dominate step latency on long contexts —
+    exactly the workload this subsystem exists for). Proposals are
+    identical to ``ngram_propose``; tests/test_spec.py pins the
+    equivalence. Context only ever grows per slot (emission is final),
+    so the index never needs invalidation — only a reset on slot reuse
+    (``release``).
+    """
+
+    def __init__(self, spec: SpecConfig | None = None):
+        self.spec = spec or SpecConfig()
+        self._index: dict[int, dict] = {}   # slot -> {"maps", "upto"}
+
+    def draft(self, seqs, k: int) -> dict[int, list[int]]:
+        return {s.slot: self._propose(s.slot,
+                                      [*s.request.prompt, *s.out_tokens], k)
+                for s in seqs}
+
+    def _propose(self, slot: int, ctx: list[int], k: int) -> list[int]:
+        lengths = range(self.spec.ngram_min, self.spec.ngram_max + 1)
+        st = self._index.setdefault(
+            slot, {"maps": {n: {} for n in lengths}, "upto": 0})
+        maps, n_ctx = st["maps"], len(ctx)
+        # index grams ending strictly before the context end, so every
+        # hit has a nonempty continuation (matches ngram_propose's
+        # "most recent *earlier* occurrence" search)
+        for end in range(st["upto"] + 1, n_ctx):
+            for n in maps:
+                if end >= n:
+                    maps[n][tuple(ctx[end - n:end])] = end
+        st["upto"] = max(st["upto"], n_ctx - 1)
+        for n in range(self.spec.ngram_max, self.spec.ngram_min - 1, -1):
+            if n >= n_ctx:
+                continue
+            end = maps[n].get(tuple(ctx[n_ctx - n:]))
+            if end is not None:
+                cont = ctx[end:end + k]
+                while len(cont) < k:
+                    cont.append(cont[-1])
+                return cont
+        return [ctx[-1]] * k
+
+    def release(self, slot: int) -> None:
+        self._index.pop(slot, None)
+
+
+# ---------------------------------------------------------------------------
+# Shallow-layer self-draft
+# ---------------------------------------------------------------------------
+
+def truncate_params(params, cfg: ModelConfig, j: int):
+    """Parameter view of the model's first ``j`` blocks.
+
+    The layer stack is stored as per-pattern-position group stacks
+    (leaves (n_groups, ...)) plus an unrolled remainder; the first j
+    layers are ``j // P`` full pattern groups and the first ``j % P``
+    kinds of the next group. Embedding, final norm, unembedding (and any
+    shared-attention block) are shared with the full model — slices are
+    views, so no weight is copied. Pair with ``cfg.with_(n_layers=j)``.
+    """
+    pattern, n_groups, _ = _pattern_layout(cfg)
+    P = len(pattern)
+    if not 1 <= j <= cfg.n_layers:
+        raise ValueError(f"draft_layers={j} outside [1, {cfg.n_layers}]")
+    jg, jr = j // P, j % P
+    out = {key: val for key, val in params.items()
+           if key not in ("groups", "rem")}
+    out["groups"] = ([jax.tree.map(lambda a: a[:jg], g)
+                      for g in params["groups"]] if jg else [])
+    rem_p = []
+    for i in range(jr):
+        if jg < n_groups:
+            rem_p.append(jax.tree.map(lambda a: a[jg], params["groups"][i]))
+        else:
+            rem_p.append(params["rem"][i])
+    out["rem"] = rem_p
+    return out
+
+
+def _pattern_layout(cfg, n_layers=None):
+    from repro.models.model import _pattern_layout as pl
+    return pl(cfg, n_layers)
+
+
+class SelfDrafter(Drafter):
+    """Draft with the model's own first ``spec.draft_layers`` blocks.
+
+    Keeps a second ``StatePool`` (truncated model, same slot indices as
+    the main pool) whose state always equals "shallow model run over the
+    accepted context". One draft phase runs k+1 shallow decode steps:
+    feed the last real token, chain k argmax drafts, and absorb the
+    final draft too — so on full acceptance the shallow state needs no
+    fix-up at all, and on rejection it restores its pre-draft snapshot
+    and re-absorbs the accepted prefix through the truncated model's
+    ``verify_chunk``, exactly mirroring the main pool's rollback.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
+                 cache_len: int, cache_kind: str = "taylor",
+                 spec: SpecConfig | None = None, prefill_chunk: int = 128):
+        from repro.models import model as M
+        from repro.serve.pool import StatePool
+
+        self.spec = spec or SpecConfig()
+        j = self.spec.draft_layers
+        self.cfg = cfg.with_(n_layers=j)
+        self.params = truncate_params(params, cfg, j)
+        self.pool = StatePool(self.cfg, n_slots, cache_len=cache_len,
+                              cache_kind=cache_kind)
+        self.prefill_chunk = prefill_chunk
+        self._snap = None       # whole-pool reference from draft() time
+        dcfg = self.cfg
+
+        def draft_loop(p, tokens0, cache, k):
+            """k argmax draft steps + one absorb-only step, fused into a
+            single dispatch (k+1 sequential shallow decode_steps would
+            otherwise dominate the drafter's cost at small scale)."""
+            def body(carry, _):
+                toks, cache = carry
+                logits, cache = M.decode_step(p, dcfg, {"tokens": toks},
+                                              cache)
+                nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+                return (nxt, cache), nxt[:, 0]
+
+            (last, cache), drafts = jax.lax.scan(body, (tokens0, cache),
+                                                 None, length=k)
+            _, cache = M.decode_step(p, dcfg, {"tokens": last}, cache)
+            return drafts.T, cache          # (B, k)
+
+        pf = jax.jit(lambda p, t, c: M.prefill_chunk(p, dcfg,
+                                                     {"tokens": t}, c))
+        dl = jax.jit(draft_loop, static_argnums=3)
+        rb = jax.jit(lambda p, cache, snap, slot, toks: M.verify_rollback(
+            p, dcfg, cache, snap, slot, {"tokens": toks}))
+        self._prefill_fn = lambda t, c: pf(self.params, t, c)
+        self._draft_fn = lambda t, c, k: dl(self.params, t, c, k)
+        self._rollback_fn = lambda c, snap, slot, t: rb(self.params, c,
+                                                        snap, slot, t)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def on_ready(self, seq) -> None:
+        """Absorb the prompt through the shallow model into this slot —
+        chunked exactly like the main prefill (same power-of-two chunk
+        plan, so the shallow prefill shapes are a subset of shapes the
+        engine already compiles for the full model)."""
+        from repro.serve.prefill import plan_chunks
+
+        cache = self.pool.new_sequence_cache()
+        prompt = seq.request.prompt
+        lo = 0
+        for c in plan_chunks(len(prompt), self.prefill_chunk):
+            toks = jnp.asarray([prompt[lo:lo + c]], jnp.int32)
+            _, cache = self._prefill_fn(toks, cache)
+            lo += c
+        self.pool.scatter(cache, seq.slot)
+
+    def draft(self, seqs, k: int) -> dict[int, list[int]]:
+        """One fused shallow decode loop for every decoding slot.
+
+        k+1 steps in a single dispatch: feed the last real token, chain
+        k argmax drafts, absorb the final draft. The pre-draft pool
+        pytree is kept as the zero-copy snapshot ``commit`` rolls back
+        to after verification.
+        """
+        self._snap = self.pool.cache    # O(1): arrays are immutable
+        tokens = np.zeros((self.pool.n_slots, 1), np.int32)
+        for s in seqs:
+            tokens[s.slot, 0] = s.next_token
+        drafts, self.pool.cache = self._draft_fn(jnp.asarray(tokens),
+                                                 self.pool.cache, k)
+        drafts = np.asarray(drafts)
+        return {s.slot: [int(t) for t in drafts[s.slot]] for s in seqs}
+
+    def commit(self, seq, accepted: int, block: Seq[int]) -> None:
+        k = len(block) - 1
+        if accepted >= k:       # shallow state already == accepted context
+            return
+        if self._snap is None:  # draft() was never called this step
+            return
+        toks = jnp.asarray([list(block[:accepted + 1])], jnp.int32)
+        self.pool.cache = self._rollback_fn(self.pool.cache, self._snap,
+                                            seq.slot, toks)
+
+    def release(self, slot: int) -> None:
+        self.pool.reset(slot)
+
+
+def make_drafter(cfg: ModelConfig, params, *, n_slots: int, cache_len: int,
+                 cache_kind: str, spec: SpecConfig,
+                 prefill_chunk: int = 128) -> Drafter:
+    """Build the drafter named by ``spec.drafter``."""
+    if spec.drafter == "ngram":
+        return NgramDrafter(spec)
+    if spec.drafter == "self":
+        return SelfDrafter(cfg, params, n_slots=n_slots, cache_len=cache_len,
+                           cache_kind=cache_kind, spec=spec,
+                           prefill_chunk=prefill_chunk)
+    raise ValueError(f"unknown drafter {spec.drafter!r} "
+                     "(expected 'ngram' or 'self')")

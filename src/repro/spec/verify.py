@@ -1,0 +1,42 @@
+"""Greedy draft verification.
+
+The model side — scoring k+1 tokens per slot in one batched call from
+each slot's current Taylor state — is ``models.model.verify_chunk``;
+this module holds the pure acceptance logic the engine applies to its
+output. Greedy verification is exact: the emitted stream is, token for
+token, what one-token-per-step greedy decoding would have produced,
+because each position's argmax is conditioned only on the (verified)
+prefix before it.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+
+def accepted_prefix(draft: Sequence[int], greedy: Sequence[int]
+                    ) -> tuple[int, list[int]]:
+    """Longest accepted draft prefix + the bonus token.
+
+    ``draft``: the k drafted tokens fed at positions 1..k of the verify
+    block. ``greedy``: the k+1 argmax tokens of the verify logits —
+    ``greedy[i]`` is the model's next token after absorbing block
+    positions 0..i.
+
+    Position i's draft is accepted iff ``draft[i] == greedy[i]`` (the
+    model would have produced exactly that token), and acceptance stops
+    at the first mismatch — later positions were conditioned on a
+    rejected token, so their logits are void. The model's own token at
+    the first mismatch (or ``greedy[k]`` on full acceptance) is free —
+    the "bonus" token every speculative step emits even at zero
+    acceptance.
+
+    Returns ``(a, emitted)``: a ∈ [0, k] accepted drafts, and the
+    a + 1 tokens to emit (accepted drafts + bonus).
+    """
+    k = len(draft)
+    assert len(greedy) == k + 1, (len(greedy), k)
+    a = 0
+    while a < k and int(draft[a]) == int(greedy[a]):
+        a += 1
+    return a, [*(int(t) for t in draft[:a]), int(greedy[a])]

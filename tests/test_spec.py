@@ -1,0 +1,440 @@
+"""Speculative generation (src/repro/spec/ + engine integration).
+
+The invariants:
+  * greedy speculative decoding emits token streams bit-identical to
+    the non-speculative engine — for every speculate_k, both drafters,
+    both cache kinds, on the mixed-arrival serving workload;
+  * StatePool.snapshot → mutate → restore round-trips bit-exactly for
+    Taylor state, decode caches, and pos/n counters, across slot reuse;
+  * per-request sampling (temperature / top-k / top-p) is seeded-RNG
+    deterministic and independent of batching;
+  * drafters always return exactly k tokens; the adaptive controller
+    stays within [1, cap].
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import SpecConfig
+from repro.launch.serve import mixed_arrival_workload, run_workload
+from repro.models import backend as B
+from repro.models import model as M
+from repro.serve import Engine, EngineConfig, Request
+from repro.serve.engine import _filter_logits
+from repro.serve.pool import StatePool
+from repro.serve.scheduler import Scheduler
+from repro.spec.controller import DraftController
+from repro.spec.drafter import ngram_propose, truncate_params
+from repro.spec.verify import accepted_prefix
+
+from tests._hypothesis_compat import given, settings, st
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("stablelm-1.6b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompt(cfg, n, seed):
+    return [int(t) for t in jax.random.randint(
+        jax.random.PRNGKey(seed), (n,), 0, cfg.vocab)]
+
+
+# ---------------------------------------------------------------------------
+# Pure units: verification, drafting, controller, scheduler accounting
+# ---------------------------------------------------------------------------
+
+def test_accepted_prefix():
+    # full acceptance: all k drafts match, bonus = greedy[k]
+    assert accepted_prefix([3, 5, 7], [3, 5, 7, 9]) == (3, [3, 5, 7, 9])
+    # first mismatch stops acceptance; the model's token there is free
+    assert accepted_prefix([3, 5, 7], [3, 6, 1, 9]) == (1, [3, 6])
+    assert accepted_prefix([3, 5], [4, 5, 7]) == (0, [4])
+    # k = 0 degenerates to plain decode: bonus only
+    assert accepted_prefix([], [8]) == (0, [8])
+
+
+def test_ngram_propose_lookup_and_padding():
+    # suffix [7, 8] occurred earlier, followed by 9, 1
+    ctx = [7, 8, 9, 1, 2, 7, 8]
+    assert ngram_propose(ctx, 2) == [9, 1]
+    # long continuations may run into the suffix region — still history
+    assert ngram_propose(ctx, 4) == [9, 1, 2, 7]
+    # continuation shorter than k: padded by repeating the last token
+    assert ngram_propose([5, 6, 9, 5, 6], 4) == [9, 5, 6, 6]
+    # cyclic context: proposal continues the cycle
+    cyc = [4, 5, 6] * 4
+    assert ngram_propose(cyc, 3) == [4, 5, 6]
+    # no match anywhere: repeat the last token, still exactly k tokens
+    assert ngram_propose([1, 2, 3, 4], 3) == [4, 4, 4]
+    with pytest.raises(ValueError):
+        ngram_propose([], 2)
+
+
+def test_ngram_drafter_index_matches_reference():
+    """The drafter's incremental per-slot index must propose exactly
+    what the reference rescan proposes, over growing contexts and
+    across slot reuse."""
+    from repro.spec.drafter import NgramDrafter
+
+    class FakeSeq:
+        def __init__(self, slot, prompt):
+            self.slot = slot
+            self.request = Request(f"f{slot}", prompt)
+            self.out_tokens = []
+
+    rng = np.random.RandomState(0)
+    d = NgramDrafter()
+    for round_ in range(2):                     # second round reuses slot 0
+        seq = FakeSeq(0, [int(t) for t in rng.randint(0, 7, size=10)])
+        for _ in range(30):
+            ctx = [*seq.request.prompt, *seq.out_tokens]
+            want = ngram_propose(ctx, 3)
+            got = d.draft([seq], 3)[0]
+            assert got == want, (round_, ctx)
+            seq.out_tokens.append(int(rng.randint(0, 7)))
+        d.release(0)
+
+
+def test_ngram_prefers_longest_then_most_recent_match():
+    # suffix [2, 9]: the length-2 match (-> 5) must beat the more
+    # recent length-1 match of [9] (-> 7)
+    ctx = [2, 9, 5, 3, 9, 7, 2, 9]
+    assert ngram_propose(ctx, 1) == [5]
+    # two length-1 matches of [9]: the most recent one (-> 7) wins
+    ctx2 = [9, 5, 9, 7, 1, 9]
+    assert ngram_propose(ctx2, 1, ngram_max=1) == [7]
+
+
+def test_controller_adapts_within_bounds():
+    c = DraftController(8, SpecConfig(ewma=1.0))   # rate = last observation
+    assert c.k == 8
+    c.update(0, 8)                                 # bad step: halve
+    assert c.k == 4
+    c.update(0, 4)
+    c.update(0, 2)
+    c.update(0, 1)
+    assert c.k == 1                                # floor
+    for _ in range(4):
+        c.update(1, 1)                             # perfect: double to cap
+    assert c.k == 8
+    assert c.acceptance_rate == pytest.approx(4 / 19)
+
+    fixed = DraftController(4, SpecConfig(adaptive=False, ewma=1.0))
+    fixed.update(0, 4)
+    assert fixed.k == 4                            # adaptivity off
+
+    with pytest.raises(ValueError):
+        DraftController(0)
+    with pytest.raises(ValueError):
+        c.update(5, 4)
+
+
+def test_scheduler_decode_cost_counts_drafted_tokens():
+    assert Scheduler.decode_cost(3) == 3           # one token per slot
+    assert Scheduler.decode_cost(3, 4) == 15       # k+1 scored per slot
+
+
+def test_verify_backend_selection(setup):
+    cfg, _ = setup
+    plan = B.select_serve_plan(cfg, max_seq_len=64, prefill_chunk=16,
+                               cache_kind="taylor", speculate_k=4)
+    assert plan.verify is not None
+    assert plan.verify.name == "causal-scan"
+    assert plan.verify.chunk == 5                  # one chunk of k+1
+    kvplan = B.select_serve_plan(cfg, max_seq_len=64, prefill_chunk=16,
+                                 cache_kind="kv", speculate_k=2)
+    assert kvplan.verify.name == "direct"
+    noplan = B.select_serve_plan(cfg, max_seq_len=64, prefill_chunk=16,
+                                 cache_kind="taylor")
+    assert noplan.verify is None
+
+
+def test_truncate_params_views_first_layers(setup):
+    cfg, params = setup                            # pattern ("global",)
+    j = 1
+    tp = truncate_params(params, cfg, j)
+    for g_full, g_trunc in zip(params["groups"], tp["groups"]):
+        for (path, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(g_full)[0],
+                jax.tree_util.tree_flatten_with_path(g_trunc)[0]):
+            np.testing.assert_array_equal(np.asarray(a[:j]), np.asarray(b),
+                                          err_msg=str(path))
+    # shared (non-stacked) params are the same objects — no copies
+    assert tp["embed"] is params["embed"]
+    assert tp["final_norm"] is params["final_norm"]
+    # full-depth truncation is the identity on structure and values
+    full = truncate_params(params, cfg, cfg.n_layers)
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(full)[0]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=str(path))
+    with pytest.raises(ValueError):
+        truncate_params(params, cfg, cfg.n_layers + 1)
+    with pytest.raises(ValueError):
+        truncate_params(params, cfg, 0)
+
+
+def test_truncate_params_pattern_remainder():
+    """P=2 pattern with odd truncation: the extra layer's params come
+    from stack index j//P of the right pattern position."""
+    cfg = get_config("stablelm-1.6b").reduced().with_(
+        layer_pattern=("global", "global"), n_layers=4)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    tp = truncate_params(params, cfg, 3)           # 1 full group + 1 rem
+    assert len(tp["rem"]) == 1
+    leaves_rem = jax.tree_util.tree_leaves(tp["rem"][0])
+    leaves_src = jax.tree_util.tree_leaves(
+        jax.tree.map(lambda a: a[1], params["groups"][0]))
+    for a, b in zip(leaves_src, leaves_rem):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Sampling: top-k / top-p filtering + seeded determinism
+# ---------------------------------------------------------------------------
+
+def test_filter_logits_top_k():
+    lg = jnp.asarray([0.1, 2.0, -1.0, 3.0, 0.5])
+    out = np.asarray(_filter_logits(lg, top_k=2, top_p=1.0))
+    assert np.isfinite(out[[1, 3]]).all()
+    assert np.isneginf(out[[0, 2, 4]]).all()
+    # top_k larger than vocab keeps everything
+    assert np.isfinite(np.asarray(_filter_logits(lg, 99, 1.0))).all()
+
+
+def test_filter_logits_top_p():
+    # softmax([~9, ~0, ...]) puts ~all mass on index 0: tiny top_p
+    # keeps only the argmax (the first sorted token always survives)
+    lg = jnp.asarray([9.0, 0.0, -1.0, 0.5])
+    out = np.asarray(_filter_logits(lg, 0, 0.1))
+    assert np.isfinite(out[0]) and np.isneginf(out[1:]).all()
+    # top_p = 1 keeps everything
+    assert np.isfinite(np.asarray(_filter_logits(lg, 0, 1.0))).all()
+    # near-uniform logits with top_p=0.5 keep about half the tokens
+    lg2 = jnp.zeros((8,)).at[0].add(1e-3)
+    kept = np.isfinite(np.asarray(_filter_logits(lg2, 0, 0.5))).sum()
+    assert 1 <= kept <= 5
+
+
+def test_request_sampling_validation():
+    with pytest.raises(ValueError):
+        Request("r", [1], top_p=0.0)
+    with pytest.raises(ValueError):
+        Request("r", [1], top_p=1.5)
+    with pytest.raises(ValueError):
+        Request("r", [1], top_k=-1)
+
+
+@pytest.mark.slow
+def test_per_request_sampling_deterministic_and_batch_invariant(setup):
+    """Same seed => same sampled streams, across engine rebuilds AND
+    across batching (solo vs shared engine), with per-request
+    temperature/top-k/top-p overriding the greedy engine default."""
+    cfg, params = setup
+    mk = lambda seed: Engine(cfg, params, EngineConfig(
+        n_slots=2, prefill_chunk=8, token_budget=32, max_seq_len=64,
+        seed=seed))
+    reqs = lambda: [
+        Request("a", _prompt(cfg, 9, 1), max_new_tokens=6,
+                temperature=0.8, top_k=7),
+        Request("b", _prompt(cfg, 12, 2), max_new_tokens=6,
+                temperature=1.2, top_p=0.9),
+    ]
+    out1 = mk(0).generate(reqs())
+    out2 = mk(0).generate(reqs())
+    assert out1 == out2, "same seed must reproduce sampled streams"
+    solo_a = mk(0).generate([reqs()[0]])["a"]
+    assert solo_a == out1["a"], "sampling must not depend on batching"
+    out3 = mk(123).generate(reqs())
+    assert out3 != out1, "different seed should move sampled streams"
+
+
+# ---------------------------------------------------------------------------
+# StatePool snapshot/restore bit-exactness
+# ---------------------------------------------------------------------------
+
+def _random_seq_cache(pool, seed):
+    """A batch=1 cache with every leaf randomized (counters included)."""
+    base = pool.new_sequence_cache()
+    leaves, treedef = jax.tree_util.tree_flatten(base)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, leaf in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            out.append(jax.random.randint(k, leaf.shape, 0, 97,
+                                          dtype=leaf.dtype))
+        else:
+            out.append(jax.random.normal(k, leaf.shape, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _assert_tree_bitexact(a, b, msg=""):
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(fa) == len(fb)
+    for (path, x), (_, y) in zip(fa, fb):
+        px = "/".join(str(p) for p in path)
+        assert x.dtype == y.dtype, f"{msg}{px}: dtype"
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{msg}{px}")
+
+
+@pytest.mark.parametrize("cache_kind", ["taylor", "kv"])
+def test_snapshot_restore_roundtrip_bitexact(setup, cache_kind):
+    """snapshot -> mutate -> restore is the identity, bit for bit, for
+    Taylor state / kv rows / pos counters — including across release
+    and slot reuse by another sequence."""
+    cfg, _ = setup
+    pool = StatePool(cfg, 3, cache_len=32, cache_kind=cache_kind)
+    for slot in range(3):
+        pool.scatter(_random_seq_cache(pool, 10 + slot), slot)
+    snap = pool.snapshot(1)
+    before = pool.gather(1)
+
+    pool.scatter(_random_seq_cache(pool, 99), 1)     # overwrite
+    pool.release(1)                                  # zero + free
+    s = pool.alloc()                                 # reuse the slot
+    assert s == 1
+    pool.scatter(_random_seq_cache(pool, 123), 1)    # new occupant
+
+    pool.restore(1, snap)
+    _assert_tree_bitexact(pool.gather(1), before, "restored ")
+    # neighbours untouched by the whole dance
+    for slot in (0, 2):
+        _assert_tree_bitexact(pool.gather(slot),
+                              pool.snapshot(slot), f"slot{slot} ")
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_snapshot_restore_property(data):
+    """Hypothesis: any interleaving of scatter/release/restore on any
+    slot leaves a restored slot bit-identical to its snapshot."""
+    cfg = get_config("stablelm-1.6b").reduced()
+    n_slots = data.draw(st.integers(min_value=1, max_value=3), label="slots")
+    kind = data.draw(st.sampled_from(["taylor", "kv"]), label="kind")
+    pool = StatePool(cfg, n_slots, cache_len=16, cache_kind=kind)
+    for slot in range(n_slots):
+        pool.scatter(_random_seq_cache(pool, data.draw(
+            st.integers(0, 2**16), label=f"fill{slot}")), slot)
+    target = data.draw(st.integers(0, n_slots - 1), label="target")
+    snap = pool.snapshot(target)
+    want = pool.gather(target)
+    for i in range(data.draw(st.integers(1, 4), label="n_mutations")):
+        slot = data.draw(st.integers(0, n_slots - 1), label=f"mut{i}")
+        if data.draw(st.booleans(), label=f"kindmut{i}"):
+            pool.scatter(_random_seq_cache(pool, data.draw(
+                st.integers(0, 2**16), label=f"seed{i}")), slot)
+        else:
+            pool.reset(slot)
+    pool.restore(target, snap)
+    _assert_tree_bitexact(pool.gather(target), want)
+
+
+# ---------------------------------------------------------------------------
+# Greedy speculative decoding == non-speculative engine, bit for bit
+# ---------------------------------------------------------------------------
+
+def _spec_engine(cfg, params, *, k, drafter, cache_kind="taylor",
+                 n_slots=3, adaptive=True):
+    return Engine(cfg, params, EngineConfig(
+        n_slots=n_slots, prefill_chunk=8, token_budget=64,
+        max_seq_len=64, cache_kind=cache_kind, speculate_k=k,
+        spec=SpecConfig(drafter=drafter, draft_layers=1,
+                        adaptive=adaptive)))
+
+
+def test_speculative_parity_quick(setup):
+    """Tier-1 smoke: one k, both drafters, random + repetitive prompts
+    (the repetitive one actually exercises accepted drafts)."""
+    cfg, params = setup
+    reqs = lambda: [
+        Request("r", _prompt(cfg, 13, 7), max_new_tokens=6),
+        Request("s", ([5, 9, 2, 7] * 5)[:18], max_new_tokens=6),
+    ]
+    ref = _spec_engine(cfg, params, k=0, drafter="ngram").generate(reqs())
+    for drafter in ("ngram", "self"):
+        eng = _spec_engine(cfg, params, k=2, drafter=drafter)
+        assert eng.generate(reqs()) == ref, drafter
+        assert sum(m.rollbacks for m in eng.stats.steps) > 0, \
+            "parity must be exercised through real rollbacks"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("speculate_k", [1, 2, 4, 8])
+def test_speculative_parity_mixed_arrivals(setup, speculate_k):
+    """Acceptance criterion: greedy speculative decoding on the
+    mixed-arrival serving workload is bit-identical to the
+    non-speculative engine for every speculate_k."""
+    cfg, params = setup
+    mk = lambda k, drafter: Engine(cfg, params, EngineConfig(
+        n_slots=3, prefill_chunk=8, token_budget=48, max_seq_len=64,
+        speculate_k=k, spec=SpecConfig(drafter=drafter, draft_layers=1)))
+
+    reqs, arrivals = mixed_arrival_workload(cfg, 4, 24, 8)
+    base = run_workload(mk(0, "ngram"), reqs, arrivals)
+    want = {rid: s.out_tokens for rid, s in base.items()}
+    for drafter in ("ngram", "self"):
+        reqs2, arrivals2 = mixed_arrival_workload(cfg, 4, 24, 8)
+        got = run_workload(mk(speculate_k, drafter), reqs2, arrivals2)
+        assert {rid: s.out_tokens for rid, s in got.items()} == want, drafter
+
+
+@pytest.mark.slow
+def test_speculative_parity_kv_cache(setup):
+    """The verify/rollback path over a classic KV pool (per-slot masked
+    direct attend + pos counters) matches the non-speculative engine."""
+    cfg, params = setup
+    reqs = lambda: [Request("r", _prompt(cfg, 17, 31), max_new_tokens=8),
+                    Request("s", ([3, 1, 4] * 8)[:15], max_new_tokens=8)]
+    ref = _spec_engine(cfg, params, k=0, drafter="ngram",
+                       cache_kind="kv").generate(reqs())
+    for k in (2, 4):
+        eng = _spec_engine(cfg, params, k=k, drafter="ngram",
+                           cache_kind="kv")
+        assert eng.generate(reqs()) == ref, k
+
+
+@pytest.mark.slow
+def test_speculative_sampling_deterministic(setup):
+    """Sampled requests under speculation: drafts always roll back and
+    the stream is drawn from the verify logits — reproducible per seed
+    (spec-vs-nonspec float paths differ, so only spec-vs-spec equality
+    is pinned)."""
+    cfg, params = setup
+    mk = lambda: Engine(cfg, params, EngineConfig(
+        n_slots=2, prefill_chunk=8, token_budget=48, max_seq_len=64,
+        speculate_k=2, spec=SpecConfig(drafter="ngram")))
+    reqs = lambda: [Request("a", _prompt(cfg, 11, 5), max_new_tokens=6,
+                            temperature=0.9, top_p=0.9),
+                    Request("b", _prompt(cfg, 9, 6), max_new_tokens=6)]
+    out1, out2 = mk().generate(reqs()), mk().generate(reqs())
+    assert out1 == out2
+    # the greedy request in the pair must still match the non-spec engine
+    base = _spec_engine(cfg, params, k=0, drafter="ngram",
+                        n_slots=2).generate(reqs())
+    assert out1["b"] == base["b"]
+
+
+@pytest.mark.slow
+def test_drafter_slot_reuse_is_clean(setup):
+    """A drafter (shadow pool) slot must carry nothing into its next
+    occupant: running a long request then a short one through a 1-slot
+    speculative engine matches a fresh engine exactly."""
+    cfg, params = setup
+    mk = lambda: _spec_engine(cfg, params, k=2, drafter="self", n_slots=1)
+    eng = mk()
+    eng.generate([Request("a", _prompt(cfg, 21, 40), max_new_tokens=5)])
+    reused = eng.generate([Request("b", _prompt(cfg, 9, 41),
+                                   max_new_tokens=5)])["b"]
+    fresh = mk().generate([Request("b", _prompt(cfg, 9, 41),
+                                   max_new_tokens=5)])["b"]
+    assert reused == fresh
