@@ -9,7 +9,11 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
   Table 4  -> norm_ablation        (normalization => stability)
   Table 5  -> heads_sweep          (more heads => faster efficient)
   §Roofline-> roofline             (dry-run derived terms)
-  serving  -> serving_throughput   (decode-heavy speculative decoding)
+  serving  -> serving_throughput   (decode-heavy speculative decoding
+                                    + shared-prefix cache TTFT)
+
+docs/benchmarks.md is the book: what each module measures, how to run
+it alone, and the current measured baselines (BENCH_serving.json).
 """
 
 import sys
@@ -38,6 +42,10 @@ def main() -> None:
     serving_throughput.run_decode_heavy(batches=(1,) if fast else (1, 2),
                                         gen=48 if fast else 256,
                                         ks=(4,) if fast else (4, 8))
+    serving_throughput.run_shared_prefix(
+        overlaps=(0.75,) if fast else (0.5, 0.75, 1.0),
+        plen=256 if fast else 512,
+        prefill_chunk=64 if fast else 128)
     print(f"benchmarks_total,{(time.time() - t0) * 1e6:.0f},", flush=True)
 
 

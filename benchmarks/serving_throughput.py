@@ -13,7 +13,12 @@ plus a *decode-heavy* mode (short prefill, long generation — the regime
 where decode throughput is bounded by step latency, not verification
 bandwidth) comparing one-token-per-step decoding against speculative
 decoding (src/repro/spec/) at several draft lengths, reporting tokens/s,
-acceptance rate, and rollback count per cell.
+acceptance rate, and rollback count per cell,
+
+plus a *shared-prefix* mode (``--shared-prefix``): requests opening
+with one common system-prompt prefix, prefix cache
+(serve/prefix_cache.py, ``EngineConfig.prefix_cache_mb``) on vs off,
+reporting TTFT and reused tokens per overlap fraction.
 
 Emits the repo-standard ``name,us_per_call,derived`` rows (see
 benchmarks/common.py) and a final JSON document on stdout; ``--json
@@ -144,6 +149,108 @@ def run(cells=((2, 64, 16), (4, 64, 16), (4, 128, 16), (2, 128, 32)),
 
 
 # ---------------------------------------------------------------------------
+# Shared-prefix mode: prefix cache vs cold prefill under system-prompt reuse
+# ---------------------------------------------------------------------------
+
+def _shared_prefix_prompts(cfg, batch, plen, shared_len, salt, seed=21):
+    """``batch`` prompts opening with one common ``shared_len``-token
+    prefix (the shared system prompt) and per-(salt, request) random
+    tails — a distinct ``salt`` per run keeps warm-run tails out of the
+    timed runs, so a timed engine can only reuse the *shared* prefix,
+    never a whole earlier prompt (except at shared_len == plen, the
+    identical-repeated-prompt limit)."""
+    shared = jax.random.randint(jax.random.PRNGKey(seed), (shared_len,),
+                                0, cfg.vocab)
+    head = [int(t) for t in shared]
+    out = []
+    for b in range(batch):
+        tail = jax.random.randint(
+            jax.random.PRNGKey(seed + 1009 * (salt + 1) + b),
+            (plen - shared_len,), 0, cfg.vocab)
+        out.append(head + [int(t) for t in tail])
+    return out
+
+
+def time_shared_prefix(cfg, params, *, batch, plen, shared_len, gen,
+                       prefill_chunk, prefix_cache_mb, reps=3):
+    """One engine, warm + ``reps`` timed runs over the shared-prefix
+    workload; the best (min-TTFT) rep is reported.
+
+    The warm run compiles every shape AND (when the cache is on)
+    populates the trie with the shared prefix; every timed rep uses
+    fresh tails, so its hits are exactly the cross-request shared
+    prefix — the production system-prompt-reuse pattern. Returns
+    (wall_s, stats summary) of the best rep."""
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=batch, prefill_chunk=prefill_chunk,
+        token_budget=prefill_chunk + batch,
+        max_seq_len=plen + gen + 1, prefix_cache_mb=prefix_cache_mb))
+
+    def once(tag, salt):
+        eng.reset_metrics()
+        prompts = _shared_prefix_prompts(cfg, batch, plen, shared_len, salt)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(f"{tag}{i}", p, max_new_tokens=gen))
+        t0 = time.perf_counter()
+        for _ in eng.run():
+            pass
+        return time.perf_counter() - t0, eng.stats.summary()
+
+    once("warm", 0)
+    return min((once(f"timed{r}", r + 1) for r in range(reps)),
+               key=lambda ws: ws[1]["ttft_mean_s"])
+
+
+def run_shared_prefix(overlaps=(0.5, 0.75, 1.0), batch=4, plen=512,
+                      gen=4, prefill_chunk=128, cache_mb=256,
+                      d_model=64, n_layers=2):
+    """Shared-prefix serving: TTFT and prefill throughput with the
+    prefix cache on vs off, per prefix-overlap fraction.
+
+    Overlap fractions are chunk-grid-aligned (the trie keys whole
+    prefill chunks); at overlap f the cache skips f·P of every timed
+    prompt, so TTFT should improve ~1/(1-f) when prefill dominates —
+    the ≥3× acceptance line at f=0.75 (docs/benchmarks.md). f=1.0 is
+    the identical-repeated-prompt limit: a full-prompt hit runs zero
+    prefill dispatches and samples its first token from the cached
+    boundary logits."""
+    cfg = _cfg(d_model, n_layers)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    doc = {"name": "serving_shared_prefix",
+           "config": {"batch": batch, "prompt_len": plen, "gen_len": gen,
+                      "prefill_chunk": prefill_chunk,
+                      "prefix_cache_mb": cache_mb, "d_model": d_model,
+                      "n_layers": n_layers,
+                      "backend": jax.default_backend()},
+           "cells": []}
+    for f in overlaps:
+        shared_len = int(plen * f // prefill_chunk) * prefill_chunk
+        _, s_cold = time_shared_prefix(
+            cfg, params, batch=batch, plen=plen, shared_len=shared_len,
+            gen=gen, prefill_chunk=prefill_chunk, prefix_cache_mb=0.0)
+        wall, s_hot = time_shared_prefix(
+            cfg, params, batch=batch, plen=plen, shared_len=shared_len,
+            gen=gen, prefill_chunk=prefill_chunk, prefix_cache_mb=cache_mb)
+        row = {"overlap": shared_len / plen,
+               "shared_len": shared_len,
+               "ttft_cold_s": s_cold["ttft_mean_s"],
+               "ttft_cached_s": s_hot["ttft_mean_s"],
+               "ttft_speedup": (s_cold["ttft_mean_s"]
+                                / max(s_hot["ttft_mean_s"], 1e-9)),
+               "prefill_tokens_cold": s_cold["prefill_tokens"],
+               "prefill_tokens_cached": s_hot["prefill_tokens"],
+               "cached_prefix_tokens": s_hot.get("cached_prefix_tokens", 0),
+               "cache": s_hot.get("prefix_cache", {})}
+        doc["cells"].append(row)
+        emit(f"shared_prefix_f{int(row['overlap'] * 100)}", wall * 1e6,
+             f"ttft_cold_s={row['ttft_cold_s']:.4f};"
+             f"ttft_cached_s={row['ttft_cached_s']:.4f};"
+             f"ttft_speedup={row['ttft_speedup']:.2f};"
+             f"reused_tok={row['cached_prefix_tokens']}")
+    return doc
+
+
+# ---------------------------------------------------------------------------
 # Decode-heavy mode: one-token-per-step vs speculative decoding
 # ---------------------------------------------------------------------------
 
@@ -248,11 +355,18 @@ def main():
     ap.add_argument("--json", default=None, help="also write JSON here")
     ap.add_argument("--decode-heavy", action="store_true",
                     help="only run the decode-heavy speculation cells")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="only run the shared-prefix prefix-cache cells")
     args = ap.parse_args()
     if args.decode_heavy:
         doc = run_decode_heavy(batches=(1,) if args.fast else (1, 2),
                                gen=48 if args.fast else 256,
                                ks=(4,) if args.fast else (4, 8))
+    elif args.shared_prefix:
+        doc = run_shared_prefix(
+            overlaps=(0.75,) if args.fast else (0.5, 0.75, 1.0),
+            plen=256 if args.fast else 512,
+            prefill_chunk=64 if args.fast else 128)
     else:
         cells = ((2, 64, 8),) if args.fast else \
             ((2, 64, 16), (4, 64, 16), (4, 128, 16), (2, 128, 32))
@@ -261,6 +375,10 @@ def main():
             batches=(1,) if args.fast else (1, 2),
             gen=48 if args.fast else 256,
             ks=(4,) if args.fast else (4, 8))
+        doc["shared_prefix"] = run_shared_prefix(
+            overlaps=(0.75,) if args.fast else (0.5, 0.75, 1.0),
+            plen=256 if args.fast else 512,
+            prefill_chunk=64 if args.fast else 128)
     print(json.dumps(doc, indent=2))
     if args.json:
         with open(args.json, "w") as f:

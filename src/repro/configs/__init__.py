@@ -4,8 +4,8 @@ from __future__ import annotations
 
 import importlib
 
-from repro.configs.base import (ModelConfig, MoEConfig, SpecConfig, SSMConfig,
-                                TaylorConfig)
+from repro.configs.base import (ModelConfig, MoEConfig, PrefixCacheConfig,
+                                SpecConfig, SSMConfig, TaylorConfig)
 
 _ARCH_MODULES = {
     "whisper-large-v3": "whisper_large_v3",
@@ -31,5 +31,5 @@ def get_config(arch: str) -> ModelConfig:
     return mod.CONFIG
 
 
-__all__ = ["ModelConfig", "MoEConfig", "SpecConfig", "SSMConfig",
-           "TaylorConfig", "get_config", "ARCH_IDS"]
+__all__ = ["ModelConfig", "MoEConfig", "PrefixCacheConfig", "SpecConfig",
+           "SSMConfig", "TaylorConfig", "get_config", "ARCH_IDS"]

@@ -77,6 +77,27 @@ class SpecConfig:
 
 
 @dataclass(frozen=True)
+class PrefixCacheConfig:
+    """Shared-prefix state-cache knobs (serve/prefix_cache.py,
+    docs/serving.md).
+
+    Mirrors the ``SpecConfig`` split: the on/off knob and byte budget
+    live on ``EngineConfig.prefix_cache_mb`` (0 disables the cache);
+    this groups the trie-side choices. ``chunk_tokens`` is the trie key
+    granularity — 0 follows ``EngineConfig.prefill_chunk``, and the
+    engine *rejects* any other value (a finer grid would let
+    power-of-two tail chunks form boundaries no cold prefill
+    reproduces, breaking the bit-identity contract); it exists so
+    offline tools can build a ``PrefixCache`` without an engine.
+    ``max_entries`` bounds the entry count independently of bytes
+    (0 = byte budget only) — Taylor entries are so small a pure byte
+    budget can let the trie grow very wide.
+    """
+    chunk_tokens: int = 0
+    max_entries: int = 0
+
+
+@dataclass(frozen=True)
 class ModelConfig:
     name: str = "model"
     family: str = "decoder"       # decoder | encdec | hybrid | xlstm | vlm | audio

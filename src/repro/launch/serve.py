@@ -62,15 +62,27 @@ def naive_generate(cfg, params, prompts: jnp.ndarray, *, gen_tokens: int,
 
 def mixed_arrival_workload(cfg, n_requests: int, prompt_len: int, gen: int,
                            seed: int = 1, *, top_k: int = 0,
-                           top_p: float = 1.0):
-    """Requests with staggered arrival steps and varied prompt lengths."""
+                           top_p: float = 1.0, shared_frac: float = 0.0):
+    """Requests with staggered arrival steps and varied prompt lengths.
+
+    ``shared_frac > 0`` makes every prompt open with the same
+    ``shared_frac · prompt_len`` token prefix (a shared system prompt)
+    followed by a per-request tail — the workload the prefix cache
+    (``--prefix-cache``) exists for.
+    """
     reqs, arrivals = [], []
+    shared_len = int(prompt_len * shared_frac)
+    shared = jax.random.randint(jax.random.PRNGKey(seed - 1),
+                                (shared_len,), 0, cfg.vocab)
     for i in range(n_requests):
         plen = max(4, prompt_len - 5 * i)
+        # tail of 0 is fine when a shared prefix exists (the repeated-
+        # prompt limit at FRAC=1.0); prompts never exceed prompt_len
+        tail_len = max(plen - shared_len, 0 if shared_len else plen)
         prompt = jax.random.randint(jax.random.PRNGKey(seed + i),
-                                    (plen,), 0, cfg.vocab)
-        reqs.append(Request(request_id=f"req{i}",
-                            prompt=[int(t) for t in prompt],
+                                    (tail_len,), 0, cfg.vocab)
+        toks = [*(int(t) for t in shared), *(int(t) for t in prompt)]
+        reqs.append(Request(request_id=f"req{i}", prompt=toks,
                             max_new_tokens=gen, top_k=top_k, top_p=top_p))
         # ~half the requests arrive mid-flight, while earlier ones decode
         arrivals.append(0 if i < (n_requests + 1) // 2 else 2 * i)
@@ -107,6 +119,15 @@ def main():
                     help="per-request top-k sampling cut (0 = off)")
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="per-request nucleus sampling mass (1.0 = off)")
+    ap.add_argument("--shared-prefix", type=float, default=0.0,
+                    metavar="FRAC", help="give every request a common "
+                    "prompt prefix of this fraction of --prompt-len "
+                    "(pair with --prefix-cache)")
+    ap.add_argument("--prefix-cache", type=float, default=0.0, metavar="MB",
+                    help="shared-prefix state cache byte budget in MB "
+                         "(0 = off, <0 = unbounded); repeated prompt "
+                         "prefixes resume from cached chunked-prefill "
+                         "state (serve/prefix_cache.py)")
     ap.add_argument("--speculate", type=int, default=0, metavar="K",
                     help="speculative decoding with draft length <= K "
                          "(0 = one token per step)")
@@ -128,6 +149,7 @@ def main():
         token_budget=args.token_budget, cache_kind=args.cache,
         max_seq_len=args.prompt_len + args.gen + 1,
         temperature=args.temperature,
+        prefix_cache_mb=args.prefix_cache,
         speculate_k=args.speculate,
         spec=SpecConfig(drafter=args.drafter,
                         draft_layers=args.draft_layers)))
@@ -138,7 +160,7 @@ def main():
           + f" ({plan.reason})")
     reqs, arrivals = mixed_arrival_workload(
         cfg, args.requests, args.prompt_len, args.gen,
-        top_k=args.top_k, top_p=args.top_p)
+        top_k=args.top_k, top_p=args.top_p, shared_frac=args.shared_prefix)
     results = run_workload(engine, reqs, arrivals)
 
     summary = engine.stats.summary()

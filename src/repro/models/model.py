@@ -649,6 +649,30 @@ def prefill_chunk(params, cfg: ModelConfig, batch, cache):
                         "chunked prefill")
 
 
+def prefill_from_state(params, cfg: ModelConfig, batch, cache):
+    """Absorb a (B, C) token block into a decode cache seeded from a
+    cached prefix snapshot — the shared-prefix serving entry
+    (serve/prefix_cache.py), dispatching on the counter layout and
+    thereby generalizing the per-slot verify path (:func:`verify_chunk`).
+
+    A *scalar*-counter cache — a private resumed prefill, i.e. a
+    ``PrefixCache`` entry taken as the initial state — runs the exact
+    :func:`prefill_chunk` body, so a resumed stream computes the same
+    float ops in the same order as a cold prefill over the same chunk
+    plan: bit-identical logits and tokens. A *per-slot* ``(B,)``-counter
+    cache — a cold pool slot seeded straight from a snapshot via
+    :func:`cache_scatter_slot` then gathered, or the whole pool at once
+    — runs the verify body, each row absorbing from its own position;
+    this is the entry batched cross-slot prefix prefill builds on.
+
+    Returns (logits (B, C, vocab), new_cache).
+    """
+    scalar = cache["pos"].ndim == 0
+    return _chunk_apply(params, cfg, batch, cache,
+                        _block_prefill if scalar else _block_verify,
+                        "prefill-from-state")
+
+
 # ---------------------------------------------------------------------------
 # Speculative verify — score k drafted tokens per slot (repro.spec)
 # ---------------------------------------------------------------------------

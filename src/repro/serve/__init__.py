@@ -14,11 +14,16 @@ fixed-size ``TaylorState``. The engine therefore reduces to
   * snapshot/rollback of whole slots in O(d²) (``pool.StatePool.
     snapshot/restore``) — the primitive the speculative-generation
     subsystem (``repro.spec``, ``EngineConfig.speculate_k``) builds on,
+  * a shared-prefix state cache (``prefix_cache.PrefixCache``,
+    ``EngineConfig.prefix_cache_mb``): a radix trie over prompt chunks
+    whose entries are those same constant-size snapshots, so repeated
+    system prompts resume from cached state instead of re-prefilling,
 
 tied together by ``engine.Engine``. See docs/serving.md.
 """
 
 from repro.serve.engine import Engine, EngineConfig
+from repro.serve.prefix_cache import CacheEntry, PrefixCache
 from repro.serve.request import (AdmissionQueue, QueueFullError, Request,
                                  Sequence, SequenceStatus, TokenEvent)
 from repro.serve.scheduler import EngineStats, Scheduler, StepMetrics
@@ -28,4 +33,5 @@ __all__ = [
     "AdmissionQueue", "QueueFullError", "Request", "Sequence",
     "SequenceStatus", "TokenEvent",
     "EngineStats", "Scheduler", "StepMetrics",
+    "PrefixCache", "CacheEntry",
 ]

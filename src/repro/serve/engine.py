@@ -36,12 +36,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, SpecConfig
+from repro.configs.base import ModelConfig, PrefixCacheConfig, SpecConfig
 from repro.models import backend as B
 from repro.models import model as M
 from repro.models.model import PREFILL_KINDS
 from repro.serve import prefill as PF
 from repro.serve.pool import StatePool
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.request import (AdmissionQueue, Request, Sequence,
                                  SequenceStatus, TokenEvent)
 from repro.serve.scheduler import EngineStats, Scheduler, StepMetrics
@@ -49,6 +50,19 @@ from repro.serve.scheduler import EngineStats, Scheduler, StepMetrics
 
 @dataclass
 class EngineConfig:
+    """Engine-level knobs; one instance per :class:`Engine`.
+
+    Contract highlights: ``max_seq_len`` bounds prompt + generation per
+    request (kv pools preallocate it; Taylor slots are size-invariant);
+    ``token_budget`` is the per-step scheduled-token ceiling that
+    decode, speculative drafts and prefill chunks all draw from;
+    ``cache_kind="auto"`` resolves through the paper's N1 memory
+    crossover (models/backend.py:select_serve_plan);
+    ``prefix_cache_mb > 0`` enables the shared-prefix state cache
+    (serve/prefix_cache.py) with that byte budget — hits charge only
+    the un-cached suffix against the token budget and never change
+    emitted tokens (bit-identical streams, cache on or off).
+    """
     n_slots: int = 4             # max sequences decoding concurrently
     max_queue: int = 64          # admission backpressure threshold
     prefill_chunk: int = 128     # target prompt tokens per prefill call
@@ -60,6 +74,9 @@ class EngineConfig:
     seed: int = 0
     speculate_k: int = 0         # max draft length; 0 = no speculation
     spec: SpecConfig = field(default_factory=SpecConfig)
+    prefix_cache_mb: float = 0.0  # shared-prefix cache byte budget in MB
+    #   (0 = cache off; <0 = on, unbounded)
+    prefix: PrefixCacheConfig = field(default_factory=PrefixCacheConfig)
 
 
 def _filter_logits(lg: jnp.ndarray, top_k: int, top_p: float) -> jnp.ndarray:
@@ -84,6 +101,21 @@ def _filter_logits(lg: jnp.ndarray, top_k: int, top_p: float) -> jnp.ndarray:
 
 
 class Engine:
+    """The continuous-batching engine: submit ``Request``s, drive
+    ``step()``/``run()``, drain ``results``.
+
+    Contract: emitted token streams are a pure function of (params,
+    ModelConfig, Request, EngineConfig.temperature/seed) — independent
+    of batching, arrival order, speculation (``speculate_k``) and the
+    shared-prefix cache (``prefix_cache_mb``), all of which only move
+    throughput and latency. Greedy streams are bit-identical across
+    those knobs; sampled streams are reproducible per (seed,
+    request_id, token index). All pool mutation happens inside
+    ``step()``; snapshots handed out (speculative rollback, prefix-cache
+    entries) are immutable jax pytrees and can never observe later
+    engine state.
+    """
+
     def __init__(self, cfg: ModelConfig, params, econf: EngineConfig | None = None):
         econf = econf or EngineConfig()
         bad = [k for k in cfg.layer_pattern if k not in PREFILL_KINDS]
@@ -112,6 +144,27 @@ class Engine:
         self.queue = AdmissionQueue(econf.max_queue)
         self.scheduler = Scheduler(econf.token_budget)
         self.stats = EngineStats()
+        # shared-prefix state cache: entries are immutable snapshots of
+        # the chunked-prefill cache at full-chunk boundaries, so a hit
+        # is a zero-copy resume (serve/prefix_cache.py). Keyed on the
+        # engine's own prefill chunk — the granularity that keeps
+        # cache-hit streams bit-identical to cold prefill.
+        self.prefix_cache: PrefixCache | None = None
+        if econf.prefix_cache_mb:
+            if econf.prefix.chunk_tokens not in (0, econf.prefill_chunk):
+                # any other granularity lets power-of-two *tail* chunks
+                # land on the trie grid, and a hit would then resume
+                # with a chunk decomposition no cold prefill runs —
+                # breaking the bit-identity contract
+                raise ValueError(
+                    f"prefix.chunk_tokens={econf.prefix.chunk_tokens} "
+                    f"must equal prefill_chunk={econf.prefill_chunk} "
+                    "(or 0 to follow it)")
+            budget = int(econf.prefix_cache_mb * 1024 * 1024) \
+                if econf.prefix_cache_mb > 0 else 0
+            self.prefix_cache = PrefixCache(
+                econf.prefill_chunk,
+                budget_bytes=budget, max_entries=econf.prefix.max_entries)
         self.sequences: dict[str, Sequence] = {}
         self.results: dict[str, Sequence] = {}
         self._slots: list[Sequence | None] = [None] * econf.n_slots
@@ -121,8 +174,9 @@ class Engine:
         # the weights aren't baked into the jaxpr as constants
         self._params = params
         prefill_jit = jax.jit(
-            lambda p, toks, cache: M.prefill_chunk(p, cfg,
-                                                   {"tokens": toks}, cache))
+            lambda p, toks, cache: M.prefill_from_state(p, cfg,
+                                                        {"tokens": toks},
+                                                        cache))
         decode_jit = jax.jit(
             lambda p, toks, cache: M.decode_step(p, cfg,
                                                  {"tokens": toks}, cache))
@@ -205,13 +259,17 @@ class Engine:
         t0 = time.perf_counter()
         events: list[TokenEvent] = []
 
-        # 1. admit — waiting sequences take free slots
+        # 1. admit — waiting sequences take free slots; the prefix
+        # cache seeds each new sequence from its longest cached prefix
+        cached_tokens = 0
         while self.pool.free_slots and self.queue.depth:
             seq = self.queue.pop()
             seq.slot = self.pool.alloc()
             seq.status = SequenceStatus.PREFILLING
             self._slots[seq.slot] = seq
-            PF.start_prefill(seq, self.pool, self.econf.prefill_chunk)
+            PF.start_prefill(seq, self.pool, self.econf.prefill_chunk,
+                             self.prefix_cache)
+            cached_tokens += seq.cached_tokens
 
         plan = self.scheduler.plan([s for s in self._slots if s is not None])
         budget = self.scheduler.token_budget
@@ -259,7 +317,8 @@ class Engine:
                 c = s.next_chunk
                 if not first and c > budget:
                     break
-                prefill_tokens += PF.advance_prefill(s, self._prefill_fn)
+                prefill_tokens += PF.advance_prefill(s, self._prefill_fn,
+                                                     self.prefix_cache)
                 budget -= c
                 first = False
             if not s.prefill_done:
@@ -283,8 +342,11 @@ class Engine:
             queue_depth=self.queue.depth, occupancy=self.pool.occupancy,
             active_decoding=len(plan.decode),
             draft_tokens=draft_tokens, accepted_tokens=accepted_tokens,
-            rollbacks=rollbacks, speculate_k=k_step)
+            rollbacks=rollbacks, speculate_k=k_step,
+            cached_prefix_tokens=cached_tokens)
         self.stats.record_step(m)
+        if self.prefix_cache is not None:
+            self.stats.prefix_cache = self.prefix_cache.stats()
         self._step_idx += 1
         return m, events
 

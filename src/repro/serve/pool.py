@@ -36,6 +36,20 @@ from repro.models import model as M
 
 
 class StatePool:
+    """Slot pool over one ``init_decode_state(per_slot=True)`` pytree.
+
+    Contract: ``self.cache`` is the only mutable reference — every
+    method that "mutates" a slot rebinds it to a functionally-updated
+    pytree, so any pytree previously handed out (``gather``/
+    ``snapshot`` results, prefix-cache entries, the pre-verify
+    speculative snapshot) is immutable and stays bit-exact forever.
+    ``alloc``/``release`` manage the free list only; state movement is
+    ``scatter`` (overwrites *every* leaf of a slot — a recycled slot
+    carries no trace of its previous occupant) and ``gather``. Byte
+    accounting via ``nbytes()`` matches what the prefix cache charges
+    per single-sequence entry times ``n_slots``.
+    """
+
     def __init__(self, cfg: ModelConfig, n_slots: int, *, cache_len: int,
                  cache_kind: str = "taylor", dtype=jnp.float32):
         if n_slots < 1:
@@ -113,6 +127,5 @@ class StatePool:
         self.scatter(snap, slot)
 
     def nbytes(self) -> int:
-        return sum(x.size * x.dtype.itemsize
-                   for x in jax.tree.leaves(self.cache)
-                   if hasattr(x, "size"))
+        from repro.serve.prefix_cache import tree_nbytes
+        return tree_nbytes(self.cache)

@@ -11,12 +11,22 @@ Chunk planning: fixed-size chunks while the remainder allows, then a
 *power-of-two decomposition* of the tail. jax retraces per distinct
 chunk length, so this bounds the number of compiled prefill shapes to
 log2(chunk) + 1 across every prompt length ever seen.
+
+Shared-prefix resume (``prefix_cache.PrefixCache``): ``start_prefill``
+seeds the private cache from the longest cached prefix on the
+full-chunk grid and plans chunks only for the un-cached suffix — which
+is exactly the tail of the cold plan, so the resumed stream is
+bit-identical to a cold prefill. ``advance_prefill`` inserts each
+completed full-chunk boundary (state snapshot + the chunk's last-row
+logits) back into the trie; power-of-two tail chunks land off-grid and
+are never cached.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.request import Sequence
 
 
@@ -36,20 +46,41 @@ def plan_chunks(prompt_len: int, chunk: int) -> list[int]:
     return out
 
 
-def start_prefill(seq: Sequence, pool, prefill_chunk: int) -> None:
-    """Attach a private cache and a chunk plan to a just-admitted
-    sequence."""
-    seq.cache = pool.new_sequence_cache()
-    seq.chunks = plan_chunks(len(seq.request.prompt), prefill_chunk)
+def start_prefill(seq: Sequence, pool, prefill_chunk: int,
+                  prefix_cache: PrefixCache | None = None) -> None:
+    """Attach a cache and a chunk plan to a just-admitted sequence.
+
+    With a prefix cache, the longest cached prefix of the prompt seeds
+    ``seq.cache`` (zero-copy — the snapshot is immutable) and only the
+    suffix is planned; a full-prompt hit leaves an empty plan and
+    restores the boundary logits so the engine can emit the first token
+    without any prefill dispatch.
+    """
+    hit = prefix_cache.lookup(seq.request.prompt) if prefix_cache else None
+    if hit is not None:
+        seq.cache = hit.state
+        seq.consumed = seq.cached_tokens = hit.n_tokens
+        rest = len(seq.request.prompt) - hit.n_tokens
+        seq.chunks = plan_chunks(rest, prefill_chunk) if rest else []
+        if not rest:              # full-prompt hit: boundary logits are
+            seq.last_logits = hit.logits   # the prompt's next-token row
+    else:
+        seq.cache = pool.new_sequence_cache()
+        seq.chunks = plan_chunks(len(seq.request.prompt), prefill_chunk)
+        seq.consumed = 0
+        seq.cached_tokens = 0
     seq.chunk_idx = 0
-    seq.consumed = 0
 
 
-def advance_prefill(seq: Sequence, prefill_fn) -> int:
+def advance_prefill(seq: Sequence, prefill_fn,
+                    prefix_cache: PrefixCache | None = None) -> int:
     """Run the sequence's next prompt chunk. Returns tokens consumed.
 
     ``prefill_fn(tokens (1, C) int32, cache) -> (logits, cache)`` — the
-    engine's jitted closure over ``model.prefill_chunk``.
+    engine's jitted closure over ``model.prefill_from_state``. Completed
+    boundaries that land on the full-chunk grid are inserted into
+    ``prefix_cache`` (the returned cache pytree *is* the snapshot; jax
+    immutability makes the share safe).
     """
     c = seq.next_chunk
     lo = seq.consumed
@@ -57,4 +88,7 @@ def advance_prefill(seq: Sequence, prefill_fn) -> int:
     seq.last_logits, seq.cache = prefill_fn(toks, seq.cache)
     seq.chunk_idx += 1
     seq.consumed += c
+    if prefix_cache is not None and c == prefix_cache.chunk_tokens:
+        prefix_cache.insert(seq.request.prompt, seq.consumed, seq.cache,
+                            seq.last_logits[:, -1:])
     return c

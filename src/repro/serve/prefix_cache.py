@@ -1,0 +1,237 @@
+"""Shared-prefix state cache: a radix trie over prompt-token chunks.
+
+TaylorShift's constant-size attention state (PAPER.md §3.2) turns
+prefix reuse — the workhorse of production serving under heavy
+shared-system-prompt traffic — into a cheap pytree copy. A cached
+prompt prefix is a fixed ``O(layers · d²)`` snapshot of the chunked
+prefill state (plus ``pos``/TaylorState ``n`` counters), not an
+``O(N)`` paged-KV region, so "resume from the longest cached prefix"
+degenerates to *start prefill from a different initial cache*. With
+``cache_kind="kv"`` (the "and Back" regime below the N1 crossover)
+entries hold the prefix's KV blocks instead — still one snapshot, but
+sized by ``cache_len``; the byte budget treats both honestly.
+
+Why keys are whole ``chunk_tokens``-sized chunks, not arbitrary token
+prefixes: bit-identity. ``prefill.plan_chunks(P, C)`` always emits the
+full ``C``-sized chunks first, so every cached boundary sits on the
+``k·C`` grid, and the suffix plan after a hit — ``plan_chunks(P - k·C,
+C)`` — has exactly the chunk shapes the cold plan has after the same
+boundary. Same chunks + same immutable snapshot = the same float ops in
+the same order, so a cache-hit stream equals the cold-prefill stream
+token for token (``tests/test_prefix_cache.py`` pins this for greedy
+and seeded sampling, speculation on and off, both cache kinds).
+
+Aliasing discipline: entries are references to jax arrays, which are
+immutable — an entry can never observe a later pool mutation, a
+speculative rollback, or another sequence resuming from the same node.
+Two sequences resuming from one entry each functionally update their
+own copies from the first suffix chunk on. ``insert`` therefore never
+copies, and a hit costs zero device work.
+
+Eviction is LRU under a byte budget: every lookup/insert touches the
+node; when ``bytes > budget`` the stalest *entries* are dropped (and
+childless interior nodes pruned) until the budget holds. Metrics
+(hits, misses, reused tokens, evictions, bytes) surface through
+``Engine`` into ``EngineStats.summary()["prefix_cache"]``.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Sequence as Seq
+
+import jax
+
+
+def tree_nbytes(tree) -> int:
+    """Total bytes of every array leaf in a pytree."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+               if hasattr(x, "size"))
+
+
+@dataclass
+class CacheEntry:
+    """One cached prefix boundary.
+
+    ``state`` is the single-sequence (batch=1) decode cache exactly as
+    ``prefill_chunk`` returned it at the boundary — Taylor prefix sums
+    or KV blocks plus the position counter, immutable and shared by
+    reference. ``logits`` is the boundary chunk's last-position row
+    ``(1, 1, vocab)``: when an entry covers a whole prompt, the engine
+    samples the first token from it without running any model call.
+    ``n_tokens`` is the boundary position (a multiple of the cache's
+    chunk size); ``nbytes`` is what the entry charges the budget.
+    """
+    state: object
+    logits: object
+    n_tokens: int
+    nbytes: int
+
+
+class _Node:
+    """Radix-trie node. Children are keyed by the next chunk's token
+    tuple; ``entry`` (if set) caches the state at this node's depth."""
+
+    __slots__ = ("children", "entry", "parent", "edge")
+
+    def __init__(self, parent: "_Node | None" = None,
+                 edge: tuple[int, ...] | None = None):
+        self.children: dict[tuple[int, ...], _Node] = {}
+        self.entry: CacheEntry | None = None
+        self.parent = parent
+        self.edge = edge
+
+
+@dataclass
+class CacheStats:
+    """Counters over the cache's lifetime (``PrefixCache.stats()``)."""
+    lookups: int = 0
+    hits: int = 0                # lookups that found a usable entry
+    misses: int = 0
+    hit_tokens: int = 0          # prompt tokens served from cache
+    lookup_tokens: int = 0       # prompt tokens offered to lookups
+    inserts: int = 0
+    duplicate_inserts: int = 0   # boundary already cached (touch only)
+    evictions: int = 0
+    bytes: int = 0               # current resident entry bytes
+    entries: int = 0
+
+    def as_dict(self) -> dict:
+        d = dict(self.__dict__)
+        d["hit_rate"] = self.hits / self.lookups if self.lookups else 0.0
+        d["token_reuse"] = (self.hit_tokens / self.lookup_tokens
+                            if self.lookup_tokens else 0.0)
+        return d
+
+
+class PrefixCache:
+    """Radix-trie prefix cache over chunked-prefill state snapshots.
+
+    Contract: ``lookup(prompt)`` returns the deepest cached boundary on
+    the ``chunk_tokens`` grid that is a prefix of ``prompt`` (the whole
+    prompt included — full hits sample from the stored boundary
+    logits), or ``None``. ``insert(prompt, n_tokens, state, logits)``
+    records the snapshot at boundary ``n_tokens`` — a no-op unless the
+    boundary is a positive multiple of ``chunk_tokens`` (off-grid
+    boundaries come from power-of-two tail chunks, whose shapes a later
+    cold plan would not reproduce; caching them would break
+    bit-identity). Entries are immutable once stored: a duplicate
+    insert only refreshes LRU recency, so concurrent sequences always
+    observe one canonical state per boundary.
+
+    ``budget_bytes <= 0`` disables the budget (unbounded);
+    ``max_entries`` (0 = unbounded) bounds the entry count
+    independently — useful when Taylor entries are so small the byte
+    budget alone would let the trie grow wide.
+    """
+
+    def __init__(self, chunk_tokens: int, budget_bytes: int = 0,
+                 max_entries: int = 0):
+        if chunk_tokens < 1:
+            raise ValueError("chunk_tokens must be >= 1")
+        self.chunk_tokens = chunk_tokens
+        self.budget_bytes = budget_bytes
+        self.max_entries = max_entries
+        self.root = _Node()
+        self._lru: OrderedDict[_Node, None] = OrderedDict()
+        self.stats_ = CacheStats()
+
+    # -- trie walk ----------------------------------------------------------
+
+    def _chunks(self, prompt: Seq[int]) -> list[tuple[int, ...]]:
+        C = self.chunk_tokens
+        return [tuple(int(t) for t in prompt[i:i + C])
+                for i in range(0, (len(prompt) // C) * C, C)]
+
+    def lookup(self, prompt: Seq[int]) -> CacheEntry | None:
+        """Longest cached prefix of ``prompt`` on the chunk grid."""
+        self.stats_.lookups += 1
+        self.stats_.lookup_tokens += len(prompt)
+        node, best = self.root, None
+        for key in self._chunks(prompt):
+            node = node.children.get(key)
+            if node is None:
+                break
+            if node.entry is not None:
+                best = node
+        if best is None:
+            self.stats_.misses += 1
+            return None
+        self._touch(best)
+        self.stats_.hits += 1
+        self.stats_.hit_tokens += best.entry.n_tokens
+        return best.entry
+
+    def insert(self, prompt: Seq[int], n_tokens: int, state, logits) -> bool:
+        """Cache the prefill state at boundary ``n_tokens``. Returns
+        True when a new entry was stored."""
+        C = self.chunk_tokens
+        if n_tokens < C or n_tokens % C or n_tokens > len(prompt):
+            return False
+        nbytes = tree_nbytes(state) + tree_nbytes(logits)
+        if self.budget_bytes > 0 and nbytes > self.budget_bytes:
+            return False          # one entry alone would bust the budget —
+            #   refused BEFORE building path nodes, so hopeless inserts
+            #   (every prompt, forever) never leak trie skeleton
+        node = self.root
+        for key in self._chunks(prompt[:n_tokens]):
+            nxt = node.children.get(key)
+            if nxt is None:
+                nxt = node.children[key] = _Node(node, key)
+            node = nxt
+        if node.entry is not None:
+            self.stats_.duplicate_inserts += 1
+            self._touch(node)
+            return False
+        node.entry = CacheEntry(state=state, logits=logits,
+                                n_tokens=n_tokens, nbytes=nbytes)
+        self._lru[node] = None
+        self.stats_.inserts += 1
+        self.stats_.entries += 1
+        self.stats_.bytes += nbytes
+        self._evict(keep=node)
+        return True
+
+    # -- LRU / eviction -----------------------------------------------------
+
+    def _touch(self, node: _Node) -> None:
+        self._lru.move_to_end(node)
+
+    def _over_budget(self) -> bool:
+        if self.budget_bytes > 0 and self.stats_.bytes > self.budget_bytes:
+            return True
+        return bool(self.max_entries
+                    and self.stats_.entries > self.max_entries)
+
+    def _evict(self, keep: _Node | None = None) -> None:
+        while self._over_budget():
+            victim = next((n for n in self._lru if n is not keep), None)
+            if victim is None:    # only the just-inserted entry remains
+                break
+            del self._lru[victim]
+            self._drop(victim)
+
+    def _drop(self, node: _Node) -> None:
+        self.stats_.bytes -= node.entry.nbytes
+        self.stats_.entries -= 1
+        self.stats_.evictions += 1
+        node.entry = None
+        # prune entry-less leaf chains so the trie doesn't accumulate
+        # skeleton paths for evicted prefixes
+        while (node.parent is not None and not node.children
+               and node.entry is None):
+            del node.parent.children[node.edge]
+            node = node.parent
+
+    # -- introspection ------------------------------------------------------
+
+    def stats(self) -> dict:
+        return self.stats_.as_dict()
+
+    def clear(self) -> None:
+        """Drop every entry (metrics keep accumulating)."""
+        self.root = _Node()
+        self._lru.clear()
+        self.stats_.bytes = 0
+        self.stats_.entries = 0

@@ -81,6 +81,7 @@ class Sequence:
     chunks: list[int] = field(default_factory=list)
     chunk_idx: int = 0
     consumed: int = 0            # prompt tokens absorbed so far
+    cached_tokens: int = 0       # of which served by the prefix cache
     last_logits: object = None   # (1, C, V) logits of the latest chunk
     # timing
     t_submit: float = field(default_factory=time.perf_counter)

@@ -44,14 +44,25 @@ class StepMetrics:
     #   (sampled rows score their drafts too but always reject)
     rollbacks: int = 0           # slots restored from snapshot (a < k)
     speculate_k: int = 0         # draft length the controller used
+    # --- shared-prefix cache (0 when the cache is off) ----------------------
+    cached_prefix_tokens: int = 0  # prompt tokens served from the prefix
+    #   cache at admission this step (never scheduled, never charged)
 
 
 @dataclass
 class EngineStats:
-    """Aggregated over a run; ``summary()`` gives the JSON-able dict."""
+    """Aggregated over a run; ``summary()`` gives the JSON-able dict.
+
+    Contract: purely observational — nothing reads these back into
+    scheduling decisions, so resetting them (``Engine.reset_metrics``)
+    can never change emitted tokens. ``prefix_cache`` mirrors the
+    engine's ``PrefixCache.stats()`` after the latest step (lifetime
+    counters — a metrics reset does not clear the cache itself).
+    """
     steps: list[StepMetrics] = field(default_factory=list)
     ttfts: list[float] = field(default_factory=list)
     completed: int = 0
+    prefix_cache: dict | None = None
 
     def record_step(self, m: StepMetrics) -> None:
         self.steps.append(m)
@@ -91,10 +102,26 @@ class EngineStats:
                 "mean_speculate_k": statistics.mean(
                     m.speculate_k for m in self.steps if m.speculate_k),
             })
+        cached = sum(m.cached_prefix_tokens for m in self.steps)
+        if self.prefix_cache is not None:   # shared-prefix cache enabled
+            out["cached_prefix_tokens"] = cached
+            out["prefix_cache"] = self.prefix_cache
         return out
 
 
 class Scheduler:
+    """Token-budget step planner.
+
+    Contract: ``plan()`` is pure — it never mutates sequences or pool
+    state; the engine executes the plan and does all accounting. The
+    budget charges real model work only: one token per decoding slot
+    (``k+1`` with speculation — ``decode_cost``), each prefill chunk at
+    its length, and *zero* for prompt tokens the prefix cache served
+    (their chunks simply never appear in the sequence's plan), which is
+    what lets a cache-hit engine spend its budget on other sequences'
+    work instead.
+    """
+
     def __init__(self, token_budget: int):
         if token_budget < 1:
             raise ValueError("token_budget must be >= 1")

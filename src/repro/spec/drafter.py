@@ -36,7 +36,18 @@ from repro.configs.base import ModelConfig, SpecConfig
 
 class Drafter:
     """Interface. ``draft`` maps decoding sequences to k proposed tokens
-    each; the other hooks let stateful drafters track slot lifecycle."""
+    each; the other hooks let stateful drafters track slot lifecycle.
+
+    Contract (docs/design.md §4.4, invariant 5): drafts are *hints* —
+    they may be arbitrarily wrong and only cost acceptance, never
+    correctness, because verification scores every draft against the
+    real model. ``draft`` must return exactly k tokens per decoding
+    sequence (fixed verify shapes). A stateful drafter's internal state
+    must equal "drafter run over the accepted context" after each
+    ``commit`` — the engine calls ``on_ready`` once per sequence (prompt
+    absorbed), ``draft``/``commit`` per speculative step, and
+    ``release(slot)`` on finish; any state keyed by slot index must be
+    dropped there, since slots are recycled."""
 
     def draft(self, seqs, k: int) -> dict[int, list[int]]:
         """slot -> k draft tokens, for every sequence in ``seqs``."""

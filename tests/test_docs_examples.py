@@ -1,0 +1,142 @@
+"""The documentation front door must not rot.
+
+Two layers of defense (the CI ``docs`` job runs both, slow included):
+
+  * link/anchor integrity — every relative markdown link in README.md
+    and docs/*.md resolves to a real file, every ``#anchor`` matches a
+    real heading slug in its target, and every docs page is reachable
+    from docs/index.md;
+  * executable quickstart — the README's quickstart commands actually
+    run: ``examples/quickstart.py`` end to end, and a 2-request engine
+    session equivalent to the README's serving snippet.
+"""
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+_LINK = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style heading slug: lowercase, inline-code/emphasis
+    markers stripped, non-word punctuation dropped, then *each* space
+    becomes a dash (GitHub does not collapse runs — `a / b` slugs to
+    `a--b`). Underscores survive: they are word characters."""
+    h = heading.strip().lower()
+    h = re.sub(r"[`*]", "", h)
+    h = re.sub(r"[^\w\s-]", "", h, flags=re.UNICODE)
+    return h.replace(" ", "-")
+
+
+def _anchors(md_path: Path) -> set[str]:
+    text = _CODE_FENCE.sub("", md_path.read_text())
+    return {_slug(h) for h in _HEADING.findall(text)}
+
+
+def _links(md_path: Path) -> list[str]:
+    text = _CODE_FENCE.sub("", md_path.read_text())
+    return _LINK.findall(text)
+
+
+def test_docs_exist():
+    for f in DOC_FILES:
+        assert f.exists(), f
+    assert (ROOT / "docs" / "index.md").exists(), "docs need a front door"
+
+
+@pytest.mark.parametrize("md", DOC_FILES, ids=lambda p: p.name)
+def test_markdown_links_and_anchors_resolve(md):
+    for link in _links(md):
+        if link.startswith(("http://", "https://", "mailto:")):
+            continue
+        target, _, anchor = link.partition("#")
+        target_path = (md.parent / target).resolve() if target else md
+        assert target_path.exists(), f"{md.name}: dead link {link!r}"
+        if anchor:
+            assert target_path.suffix == ".md", \
+                f"{md.name}: anchor into non-markdown {link!r}"
+            anchors = _anchors(target_path)
+            assert anchor in anchors, (
+                f"{md.name}: anchor {link!r} not found; "
+                f"{target_path.name} has {sorted(anchors)}")
+
+
+def test_every_docs_page_reachable_from_index():
+    index = ROOT / "docs" / "index.md"
+    linked = {(index.parent / l.partition("#")[0]).resolve()
+              for l in _links(index) if not l.startswith("http")
+              if l.partition("#")[0]}
+    for page in (ROOT / "docs").glob("*.md"):
+        if page.name == "index.md":
+            continue
+        assert page.resolve() in linked, \
+            f"docs/{page.name} is not linked from docs/index.md"
+
+
+def test_readme_quickstart_commands_are_current():
+    """Every ``python -m`` module and script path the README tells the
+    reader to run must exist in the tree."""
+    text = (ROOT / "README.md").read_text()
+    for mod in set(re.findall(r"python -m ([\w.]+)", text)):
+        if not mod.startswith(("repro", "benchmarks")):
+            continue              # stdlib / third-party (e.g. pytest)
+        rel = mod.replace(".", "/")
+        assert ((ROOT / "src" / (rel + ".py")).exists()
+                or (ROOT / (rel + ".py")).exists()
+                or (ROOT / "src" / rel).is_dir()
+                or (ROOT / rel).is_dir()), f"README names missing {mod}"
+    for script in set(re.findall(r"python (\S+\.py)", text)):
+        assert (ROOT / script).exists(), f"README names missing {script}"
+
+
+# ---------------------------------------------------------------------------
+# Executable quickstart (CI docs job; slow — compiles a real model)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_quickstart_example_runs():
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(ROOT / "src"), env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / "quickstart.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_readme_engine_session():
+    """The README's serving snippet: build an engine, stream two
+    requests (sharing a prompt prefix, prefix cache on), drain results."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.serve import Engine, EngineConfig, Request
+
+    cfg = get_config("stablelm-1.6b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=2, prefill_chunk=8, token_budget=32, max_seq_len=64,
+        prefix_cache_mb=64))
+    prefix = [1, 2, 3, 4, 5, 6, 7, 8]
+    eng.submit(Request("a", prefix + [9, 10], max_new_tokens=4))
+    eng.submit(Request("b", prefix + [11, 12], max_new_tokens=4))
+    events = list(eng.run())
+    assert {e.request_id for e in events} == {"a", "b"}
+    assert len(eng.pop_result("a").out_tokens) == 4
+    assert len(eng.pop_result("b").out_tokens) == 4
+    summary = eng.stats.summary()
+    assert summary["completed_requests"] == 2
+    assert "prefix_cache" in summary

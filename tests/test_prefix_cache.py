@@ -1,0 +1,332 @@
+"""Shared-prefix state cache (serve/prefix_cache.py).
+
+The load-bearing invariant: **a cache hit never changes emitted
+tokens**. Entries sit on the full-prefill-chunk grid, so a resumed
+suffix runs exactly the chunk decomposition a cold prefill would run
+after the same boundary — same float ops, same order, bit-identical
+streams. The engine-level tests pin that for greedy and seeded
+sampling, speculation on and off, and both cache kinds; the trie unit
+tests pin lookup/insert/LRU/byte-budget semantics without any jax
+arrays in the loop.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve import Engine, EngineConfig, Request
+from repro.serve.pool import StatePool
+from repro.serve.prefix_cache import PrefixCache, tree_nbytes
+
+
+# ---------------------------------------------------------------------------
+# Trie unit tests (no model, no engine)
+# ---------------------------------------------------------------------------
+
+def _arr(n_floats):
+    return np.zeros((n_floats,), np.float32)
+
+
+def _mk(chunk=4, budget=0, max_entries=0):
+    return PrefixCache(chunk, budget_bytes=budget, max_entries=max_entries)
+
+
+def test_lookup_returns_longest_cached_prefix():
+    pc = _mk(chunk=4)
+    prompt = list(range(16))
+    assert pc.lookup(prompt) is None
+    pc.insert(prompt, 4, _arr(1), _arr(1))
+    pc.insert(prompt, 12, _arr(1), _arr(1))
+    hit = pc.lookup(prompt)
+    assert hit.n_tokens == 12
+    # a diverging prompt only matches through the shared chunks
+    other = prompt[:8] + [99] * 8
+    assert pc.lookup(other).n_tokens == 4      # 8-boundary was never cached
+    pc.insert(other, 8, _arr(1), _arr(1))
+    assert pc.lookup(other).n_tokens == 8      # shared chunk grid, own branch
+    assert pc.lookup(prompt).n_tokens == 12    # original branch untouched
+
+
+def test_insert_rejects_off_grid_boundaries():
+    pc = _mk(chunk=4)
+    prompt = list(range(10))
+    assert not pc.insert(prompt, 3, _arr(1), _arr(1))    # mid-chunk
+    assert not pc.insert(prompt, 10, _arr(1), _arr(1))   # pow2-tail boundary
+    assert not pc.insert(prompt, 0, _arr(1), _arr(1))
+    assert not pc.insert(prompt, 12, _arr(1), _arr(1))   # beyond the prompt
+    assert pc.insert(prompt, 8, _arr(1), _arr(1))
+    assert pc.stats()["entries"] == 1
+
+
+def test_full_prompt_boundary_is_cacheable():
+    """A boundary covering the whole prompt is a valid entry — the
+    full-hit path samples the first token from its stored logits."""
+    pc = _mk(chunk=4)
+    prompt = list(range(8))
+    assert pc.insert(prompt, 8, _arr(1), _arr(2))
+    assert pc.lookup(prompt).n_tokens == 8
+
+
+def test_duplicate_insert_keeps_canonical_entry():
+    pc = _mk(chunk=4)
+    prompt = list(range(8))
+    first = _arr(1)
+    pc.insert(prompt, 4, first, _arr(1))
+    pc.insert(prompt, 4, _arr(1), _arr(1))
+    assert pc.lookup(prompt).state is first
+    s = pc.stats()
+    assert s["inserts"] == 1 and s["duplicate_inserts"] == 1
+    assert s["entries"] == 1
+
+
+def test_lru_eviction_under_byte_budget():
+    entry_bytes = 2 * 4                       # state + logits, 4B floats
+    pc = _mk(chunk=2, budget=3 * entry_bytes)
+    prompts = [[i, i] for i in range(4)]
+    for p in prompts[:3]:
+        assert pc.insert(p, 2, _arr(1), _arr(1))
+    assert pc.stats()["entries"] == 3
+    pc.lookup(prompts[0])                     # refresh: 0 is now MRU
+    assert pc.insert(prompts[3], 2, _arr(1), _arr(1))
+    s = pc.stats()
+    assert s["entries"] == 3 and s["evictions"] == 1
+    assert pc.lookup(prompts[1]) is None      # LRU victim
+    assert pc.lookup(prompts[0]) is not None  # refreshed entry survived
+    assert pc.lookup(prompts[3]) is not None  # newest entry survived
+    assert s["bytes"] == 3 * entry_bytes
+
+
+def test_eviction_prunes_trie_paths():
+    pc = _mk(chunk=2, max_entries=1)
+    pc.insert([1, 2, 3, 4], 4, _arr(1), _arr(1))   # deep entry: 2 nodes
+    pc.insert([5, 6], 2, _arr(1), _arr(1))         # evicts the deep one
+    assert pc.lookup([1, 2, 3, 4]) is None
+    assert not pc.root.children.get((1, 2))        # skeleton path pruned
+    assert pc.lookup([5, 6]) is not None
+
+
+def test_oversized_entry_is_refused():
+    pc = _mk(chunk=2, budget=4)
+    assert not pc.insert([1, 2], 2, _arr(64), _arr(1))
+    assert pc.stats()["entries"] == 0
+    # and the refusal happens BEFORE any trie path is built — a budget
+    # smaller than one entry must not leak skeleton nodes per prompt
+    assert not pc.root.children
+
+
+def test_engine_rejects_mismatched_chunk_tokens():
+    """Any trie granularity other than prefill_chunk would let pow2
+    tail chunks form off-grid boundaries (bit-identity break) — the
+    engine refuses it up front."""
+    from repro.configs.base import PrefixCacheConfig
+
+    cfg = get_config("stablelm-1.6b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        Engine(cfg, params, EngineConfig(
+            n_slots=1, prefill_chunk=8, max_seq_len=64,
+            prefix_cache_mb=1.0, prefix=PrefixCacheConfig(chunk_tokens=4)))
+
+
+def test_cli_workload_full_overlap_fits_max_seq_len():
+    """--shared-prefix 1.0 (the repeated-prompt limit) must produce
+    prompts the engine accepts under max_seq_len = prompt_len + gen + 1."""
+    from repro.launch.serve import mixed_arrival_workload
+
+    cfg = get_config("stablelm-1.6b").reduced()
+    for frac in (0.0, 0.7, 1.0):
+        reqs, _ = mixed_arrival_workload(cfg, 4, 24, 6, shared_frac=frac)
+        assert all(1 <= len(r.prompt) <= 24 for r in reqs)
+
+
+def test_clear_drops_entries_not_counters():
+    pc = _mk(chunk=2)
+    pc.insert([1, 2], 2, _arr(1), _arr(1))
+    pc.lookup([1, 2])
+    pc.clear()
+    assert pc.lookup([1, 2]) is None
+    s = pc.stats()
+    assert s["entries"] == 0 and s["bytes"] == 0 and s["inserts"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine-level bit-identity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("stablelm-1.6b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _toks(cfg, n, seed):
+    return [int(t) for t in jax.random.randint(
+        jax.random.PRNGKey(seed), (n,), 0, cfg.vocab)]
+
+
+def _engine(cfg, params, *, cache_mb, cache_kind="taylor", speculate_k=0,
+            n_slots=2, temperature=0.0):
+    return Engine(cfg, params, EngineConfig(
+        n_slots=n_slots, prefill_chunk=8, token_budget=32, max_seq_len=64,
+        cache_kind=cache_kind, temperature=temperature,
+        speculate_k=speculate_k, prefix_cache_mb=cache_mb))
+
+
+def _shared_prefix_requests(cfg, **req_kw):
+    """Three requests sharing a 16-token (2-chunk) prefix; the third
+    repeats the first prompt exactly (full-prompt-hit candidate)."""
+    prefix = _toks(cfg, 16, seed=100)
+    reqs = [Request("a", prefix + _toks(cfg, 7, seed=101), 6, **req_kw),
+            Request("b", prefix + _toks(cfg, 5, seed=102), 6, **req_kw),
+            Request("c", prefix + _toks(cfg, 7, seed=101), 6, **req_kw)]
+    return reqs
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("cache_kind", ["taylor", "kv"])
+@pytest.mark.parametrize("speculate_k", [0, 2])
+def test_cache_hit_streams_bit_identical(setup, cache_kind, speculate_k):
+    """Greedy streams with the prefix cache on == streams with it off,
+    for both cache kinds, speculation on and off. Sequential submission
+    maximizes hits (later requests see earlier boundaries)."""
+    cfg, params = setup
+    reqs = _shared_prefix_requests(cfg)
+
+    def run(cache_mb):
+        eng = _engine(cfg, params, cache_mb=cache_mb, cache_kind=cache_kind,
+                      speculate_k=speculate_k, n_slots=1)
+        out = {}
+        for r in reqs:              # one at a time: every later request
+            out.update(eng.generate([Request(r.request_id, r.prompt,
+                                             r.max_new_tokens)]))
+            eng.results.clear()
+        return out, eng
+
+    cold, _ = run(0.0)
+    hot, eng = run(-1.0)
+    assert cold == hot
+    s = eng.prefix_cache.stats()
+    assert s["hits"] >= 2 and s["hit_tokens"] >= 2 * 16
+
+
+@pytest.mark.slow
+def test_full_prompt_hit_skips_prefill_entirely(setup):
+    """An exact repeated prompt (length on the chunk grid) resumes with
+    zero prefill dispatches: the slot is seeded straight from the
+    snapshot and the first token comes from the cached boundary
+    logits."""
+    cfg, params = setup
+    prompt = _toks(cfg, 16, seed=200)          # 16 = 2 full chunks of 8
+    eng = _engine(cfg, params, cache_mb=-1.0, n_slots=1)
+    first = eng.generate([Request("x", prompt, max_new_tokens=5)])["x"]
+    n_steps = len(eng.stats.steps)
+    second = eng.generate([Request("y", prompt, max_new_tokens=5)])["y"]
+    assert first == second
+    steps = eng.stats.steps[n_steps:]
+    assert sum(m.prefill_tokens for m in steps) == 0
+    assert sum(m.cached_prefix_tokens for m in steps) == len(prompt)
+    # and the cold-baseline engine agrees
+    ref = _engine(cfg, params, cache_mb=0.0, n_slots=1)
+    assert ref.generate([Request("z", prompt, max_new_tokens=5)])["z"] == first
+
+
+@pytest.mark.slow
+def test_seeded_sampling_reproducible_across_cache(setup):
+    """Per-request sampling is keyed on (seed, request_id, index) — a
+    cache hit must not move any sampled token either."""
+    cfg, params = setup
+    reqs = _shared_prefix_requests(cfg, temperature=0.9, top_k=8)
+
+    def run(cache_mb):
+        eng = _engine(cfg, params, cache_mb=cache_mb, n_slots=1)
+        out = {}
+        for r in reqs:
+            out.update(eng.generate(
+                [Request(r.request_id, r.prompt, r.max_new_tokens,
+                         temperature=0.9, top_k=8)]))
+            eng.results.clear()
+        return out
+
+    assert run(0.0) == run(-1.0)
+
+
+@pytest.mark.slow
+def test_concurrent_sequences_share_one_entry_safely(setup):
+    """Two sequences resuming from the same cached entry, decoding and
+    speculating concurrently, must not alias: snapshots are immutable,
+    so each functionally updates its own state."""
+    cfg, params = setup
+    prefix = _toks(cfg, 16, seed=300)
+    pa, pb = prefix + _toks(cfg, 6, seed=301), prefix + _toks(cfg, 4, seed=302)
+
+    warm = _engine(cfg, params, cache_mb=-1.0, speculate_k=2, n_slots=2)
+    warm.generate([Request("seed", prefix + [1, 2], max_new_tokens=1)])
+    warm.results.clear()
+    hot = warm.generate([Request("a", pa, max_new_tokens=6),
+                         Request("b", pb, max_new_tokens=6)])
+    assert warm.prefix_cache.stats()["hits"] >= 2
+
+    ref = _engine(cfg, params, cache_mb=0.0, speculate_k=2, n_slots=2)
+    assert ref.generate([Request("a", pa, max_new_tokens=6),
+                         Request("b", pb, max_new_tokens=6)]) == hot
+
+
+@pytest.mark.slow
+def test_tiny_budget_still_correct(setup):
+    """A budget too small to hold anything useful degrades to a cold
+    engine — never to wrong tokens."""
+    cfg, params = setup
+    reqs = _shared_prefix_requests(cfg)
+    cold = _engine(cfg, params, cache_mb=0.0, n_slots=1)
+    tiny = _engine(cfg, params, cache_mb=1e-4, n_slots=1)   # ~100 bytes
+    for r in reqs:
+        a = cold.generate([Request(r.request_id, r.prompt, 6)])
+        b = tiny.generate([Request(r.request_id, r.prompt, 6)])
+        assert a == b
+        cold.results.clear(), tiny.results.clear()
+
+
+# ---------------------------------------------------------------------------
+# prefill_from_state: the per-slot (pool-seeded) generalization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_prefill_from_state_per_slot_matches_private_resume(setup):
+    """Seeding a cold pool slot straight from a snapshot and absorbing
+    the suffix with per-slot counters (the verify body) must agree with
+    the private scalar-counter resume (the prefill body) — the
+    generalization ``models.model.prefill_from_state`` dispatches on."""
+    cfg, params = setup
+    prompt = jnp.asarray([_toks(cfg, 12, seed=400)], jnp.int32)
+
+    # prefix state: absorb 8 tokens into a fresh single-sequence cache
+    cache = M.init_decode_state(cfg, 1, cache_len=32, cache_kind="taylor",
+                                dtype=jnp.float32)
+    _, snap = M.prefill_from_state(params, cfg,
+                                   {"tokens": prompt[:, :8]}, cache)
+
+    # scalar-counter resume (what the engine runs on a cache hit)
+    lg_priv, cache_priv = M.prefill_from_state(
+        params, cfg, {"tokens": prompt[:, 8:]}, snap)
+
+    # per-slot resume: scatter the snapshot into slot 1 of a pool and
+    # absorb the suffix from the gathered per-slot view
+    pool = StatePool(cfg, 3, cache_len=32, cache_kind="taylor")
+    pool.scatter(snap, 1)
+    sub = pool.gather(1)
+    assert sub["pos"].ndim == 1               # (1,) per-slot counter
+    lg_slot, sub = M.prefill_from_state(params, cfg,
+                                        {"tokens": prompt[:, 8:]}, sub)
+    np.testing.assert_allclose(np.asarray(lg_priv), np.asarray(lg_slot),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cache_priv["pos"]),
+                               np.asarray(sub["pos"]))
+
+
+def test_tree_nbytes_counts_every_leaf():
+    tree = {"a": np.zeros((4, 2), np.float32), "b": [np.zeros(3, np.int32)]}
+    assert tree_nbytes(tree) == 4 * 2 * 4 + 3 * 4
