@@ -14,13 +14,92 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
 
 docs/benchmarks.md is the book: what each module measures, how to run
 it alone, and the current measured baselines (BENCH_serving.json).
+
+``validate_serving_doc`` schema-checks a serving benchmark document
+(required keys per cell, every number finite — no NaN/Inf) so the perf
+trajectory in BENCH_serving.json stays machine-readable for the
+ROADMAP's autotuning pass; ``serving_throughput --json`` runs it before
+writing, and ``python -m benchmarks.run --validate PATH`` re-checks an
+existing file (the CI ``obs`` job does).
 """
 
+import json
+import math
 import sys
 import time
 
+# required keys per cell, by document name. Latency percentiles are part
+# of the schema: the autotuning pass consumes tail latency, not means.
+SERVING_CELL_KEYS = {
+    "serving_throughput": (
+        "batch", "prompt_len", "gen_len", "naive_tok_s", "engine_tok_s",
+        "engine_kv_tok_s", "speedup_vs_naive", "ttft_mean_s", "ttft_p50_s",
+        "ttft_p95_s", "ttft_p99_s", "itl_p50_s", "itl_p95_s", "itl_p99_s"),
+    "serving_decode_heavy": ("batch", "drafter", "speculate_k", "tok_s",
+                             "speedup"),
+    "serving_shared_prefix": (
+        "overlap", "shared_len", "ttft_cold_s", "ttft_cached_s",
+        "ttft_speedup", "prefill_tokens_cold", "prefill_tokens_cached",
+        "cached_prefix_tokens"),
+}
+
+
+def _finite(value, path, problems):
+    if isinstance(value, float) and not math.isfinite(value):
+        problems.append(f"{path}: non-finite value {value!r}")
+    elif isinstance(value, dict):
+        for k, v in value.items():
+            _finite(v, f"{path}.{k}", problems)
+    elif isinstance(value, (list, tuple)):
+        for i, v in enumerate(value):
+            _finite(v, f"{path}[{i}]", problems)
+
+
+def validate_serving_doc(doc: dict) -> list[str]:
+    """Problems in a serving benchmark document ([] = valid)."""
+    problems: list[str] = []
+    name = doc.get("name")
+    if name not in SERVING_CELL_KEYS:
+        return [f"unknown doc name {name!r}"]
+    if not isinstance(doc.get("config"), dict):
+        problems.append(f"{name}: missing config")
+    cells = doc.get("cells")
+    if not isinstance(cells, list) or not cells:
+        problems.append(f"{name}: cells missing or empty")
+        cells = []
+    for i, cell in enumerate(cells):
+        missing = [k for k in SERVING_CELL_KEYS[name] if k not in cell]
+        # decode-heavy baseline rows (speculate_k=0) carry no
+        # acceptance ledger; percentile keys only exist on cells whose
+        # engine emitted >1 token per stream — the schema requires the
+        # keys the cell's own mode produces
+        if name == "serving_decode_heavy" and cell.get("speculate_k"):
+            missing += [k for k in ("acceptance_rate", "rollbacks",
+                                    "mean_speculate_k") if k not in cell]
+        if missing:
+            problems.append(f"{name}.cells[{i}]: missing keys {missing}")
+    _finite(doc, name or "doc", problems)
+    # nested sub-documents (full serving_throughput runs embed both)
+    for sub in ("decode_heavy", "shared_prefix"):
+        if sub in doc:
+            problems += validate_serving_doc(doc[sub])
+    return problems
+
+
+def check_serving_doc(doc: dict) -> None:
+    problems = validate_serving_doc(doc)
+    if problems:
+        raise ValueError("BENCH_serving schema violation:\n  "
+                         + "\n  ".join(problems))
+
 
 def main() -> None:
+    if "--validate" in sys.argv:
+        path = sys.argv[sys.argv.index("--validate") + 1]
+        with open(path) as f:
+            check_serving_doc(json.load(f))
+        print(f"{path}: serving benchmark schema OK")
+        return
     fast = "--fast" in sys.argv
     print("name,us_per_call,derived")
     t0 = time.time()

@@ -20,9 +20,16 @@ with one common system-prompt prefix, prefix cache
 (serve/prefix_cache.py, ``EngineConfig.prefix_cache_mb``) on vs off,
 reporting TTFT and reused tokens per overlap fraction.
 
+Every cell reports latency percentiles (TTFT and ITL p50/p95/p99 from
+the engine's metrics histograms) next to the means, and ``--trace
+PREFIX`` writes one Chrome-trace JSON per standard cell
+(``PREFIX_b{B}_p{P}_g{G}.json``, warmup included so first dispatches
+are tagged ``compile=true`` — see docs/observability.md).
+
 Emits the repo-standard ``name,us_per_call,derived`` rows (see
 benchmarks/common.py) and a final JSON document on stdout; ``--json
-PATH`` also writes the document to a file for the perf trajectory.
+PATH`` also writes the document to a file for the perf trajectory,
+schema-checked by ``benchmarks.run.check_serving_doc`` first.
 """
 
 from __future__ import annotations
@@ -36,9 +43,14 @@ import jax.numpy as jnp
 
 from repro.configs import SpecConfig, get_config
 from repro.models import model as M
+from repro.obs.trace import tracer
 from repro.serve import Engine, EngineConfig, Request
 
 from benchmarks.common import emit
+from benchmarks.run import check_serving_doc
+
+_PCTL_KEYS = ("ttft_p50_s", "ttft_p95_s", "ttft_p99_s",
+              "itl_p50_s", "itl_p95_s", "itl_p99_s")
 
 
 def _cfg(d_model=64, n_layers=2):
@@ -101,7 +113,7 @@ def time_engine(cfg, params, prompts, gen, cache_kind):
 
 
 def run(cells=((2, 64, 16), (4, 64, 16), (4, 128, 16), (2, 128, 32)),
-        prefill_len=512, d_model=64, n_layers=2):
+        prefill_len=512, d_model=64, n_layers=2, trace_prefix=None):
     cfg = _cfg(d_model, n_layers)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     step_fn = jax.jit(lambda b, c: M.decode_step(params, cfg, b, c))
@@ -116,12 +128,23 @@ def run(cells=((2, 64, 16), (4, 64, 16), (4, 128, 16), (2, 128, 32)),
         t_naive, _ = time_naive(cfg, params, prompts, G, step_fn)
         row = {"batch": B, "prompt_len": P, "gen_len": G,
                "naive_tok_s": total / t_naive}
+        if trace_prefix:
+            tracer.clear()
+            tracer.enable()
         for kind in ("taylor", "kv"):
             dt, s = time_engine(cfg, params, prompts, G, kind)
             key = "engine_tok_s" if kind == "taylor" else "engine_kv_tok_s"
             row[key] = total / dt
             if kind == "taylor":
                 row["ttft_mean_s"] = s["ttft_mean_s"]
+                for pk in _PCTL_KEYS:
+                    row[pk] = s[pk]
+        if trace_prefix:
+            path = f"{trace_prefix}_b{B}_p{P}_g{G}.json"
+            tracer.write(path)
+            tracer.disable()
+            tracer.clear()
+            print(f"# trace -> {path}")
         row["speedup_vs_naive"] = row["engine_tok_s"] / row["naive_tok_s"]
         doc["cells"].append(row)
         emit(f"serve_b{B}_p{P}_g{G}", t_naive * 1e6,
@@ -357,6 +380,9 @@ def main():
                     help="only run the decode-heavy speculation cells")
     ap.add_argument("--shared-prefix", action="store_true",
                     help="only run the shared-prefix prefix-cache cells")
+    ap.add_argument("--trace", default=None, metavar="PREFIX",
+                    help="write one Chrome-trace JSON per standard cell "
+                         "to PREFIX_b{B}_p{P}_g{G}.json")
     args = ap.parse_args()
     if args.decode_heavy:
         doc = run_decode_heavy(batches=(1,) if args.fast else (1, 2),
@@ -370,7 +396,7 @@ def main():
     else:
         cells = ((2, 64, 8),) if args.fast else \
             ((2, 64, 16), (4, 64, 16), (4, 128, 16), (2, 128, 32))
-        doc = run(cells=cells, prefill_len=512)
+        doc = run(cells=cells, prefill_len=512, trace_prefix=args.trace)
         doc["decode_heavy"] = run_decode_heavy(
             batches=(1,) if args.fast else (1, 2),
             gen=48 if args.fast else 256,
@@ -379,6 +405,7 @@ def main():
             overlaps=(0.75,) if args.fast else (0.5, 0.75, 1.0),
             plen=256 if args.fast else 512,
             prefill_chunk=64 if args.fast else 128)
+    check_serving_doc(doc)
     print(json.dumps(doc, indent=2))
     if args.json:
         with open(args.json, "w") as f:

@@ -27,6 +27,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.distributed import ctx
 from repro.distributed import hlo_analysis as H
 from repro.distributed import hlo_cost as HC
+from repro.obs import decisions as OD
 from repro.launch import shapes as SH
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_cell
@@ -72,7 +73,12 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, force: bool = False,
         cfg = get_config(arch)
         if config_edit is not None:
             cfg = config_edit(cfg)
-        with mesh, ctx.use(mesh, sp_carry=sp_carry):
+        # capture every select_backend call the cell makes while it is
+        # built and lowered (obs/decisions.py): the audit of which
+        # implementation the traced program *actually* contains, vs the
+        # offline B.report below
+        with mesh, ctx.use(mesh, sp_carry=sp_carry), \
+                OD.log.capture() as decision_records:
             jitted, args, cfg_used = build_cell(cfg, shape, mesh,
                                                 cache_kind=cache_kind,
                                                 microbatches=microbatches)
@@ -83,6 +89,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, force: bool = False,
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, list):    # older jax: one dict per device
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
         # Loop-aware cost model (XLA's cost_analysis counts scan bodies
         # once; ours multiplies by known_trip_count — see hlo_cost.py).
@@ -128,6 +136,9 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, force: bool = False,
             "attention": B.report(
                 cfg_used, N=SH.SHAPE_CELLS[shape].seq_len,
                 d=cfg_used.dim_head, mesh=mesh),
+            # the trace-time selection audit (obs/decisions.py): every
+            # select_backend call made while the cell was built/lowered
+            "backend_decisions": decision_records,
         })
     except Exception as e:  # noqa: BLE001 — record and continue the sweep
         record["error"] = f"{type(e).__name__}: {e}"

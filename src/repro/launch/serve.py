@@ -13,6 +13,18 @@ src/repro/spec/ and docs/serving.md).
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
       --d-model 128 --n-layers 2 --requests 4 --prompt-len 32 --gen 16 \
       --speculate 4 --drafter self
+
+Observability (src/repro/obs/, docs/observability.md): ``--trace PATH``
+writes a Chrome-trace/Perfetto JSON of every engine-step phase
+(admission, prefix-cache lookup, prefill chunks, decode/draft/verify/
+rollback, first dispatches tagged ``compile=true``); ``--metrics-file
+PATH`` writes the Prometheus exposition (TTFT/ITL histograms,
+prefix-cache and speculation counters) at exit and ``--metrics-port N``
+serves it live on ``http://localhost:N/metrics``; ``--decision-log
+PATH`` writes every ``select_backend`` record as JSONL — replaying
+exactly how the engine's ServePlan and each trace-time attention site
+were chosen. All of it observational: streams are bit-identical with
+every flag on or off.
 """
 
 from __future__ import annotations
@@ -25,7 +37,33 @@ import jax.numpy as jnp
 
 from repro.configs import SpecConfig, get_config
 from repro.models import model as M
+from repro.obs import decisions as OD
+from repro.obs.trace import tracer
 from repro.serve import Engine, EngineConfig, Request
+
+
+def serve_metrics_http(engine: Engine, port: int):
+    """Serve ``engine.render_metrics()`` on a daemon thread (Prometheus
+    scrape target). Returns the server (``.shutdown()`` to stop)."""
+    import threading
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):
+            body = engine.render_metrics().encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):    # no per-scrape stderr chatter
+            pass
+
+    srv = ThreadingHTTPServer(("127.0.0.1", port), Handler)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    return srv
 
 
 def naive_generate(cfg, params, prompts: jnp.ndarray, *, gen_tokens: int,
@@ -138,11 +176,33 @@ def main():
                     help="self-drafter: number of leading blocks reused")
     ap.add_argument("--no-check", dest="check", action="store_false",
                     help="skip the per-request naive-baseline comparison")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of every engine-step "
+                         "phase (open in chrome://tracing or Perfetto)")
+    ap.add_argument("--annotate-steps", action="store_true",
+                    help="with --trace: also enter jax.profiler "
+                         "StepTraceAnnotation per engine step (correlates "
+                         "a simultaneous device profile)")
+    ap.add_argument("--metrics-file", default=None, metavar="PATH",
+                    help="write the Prometheus text exposition at exit")
+    ap.add_argument("--metrics-port", type=int, default=0, metavar="PORT",
+                    help="serve the exposition live on "
+                         "http://localhost:PORT/metrics (0 = off)")
+    ap.add_argument("--decision-log", default=None, metavar="PATH",
+                    help="write every select_backend decision as JSONL")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced().with_(
         d_model=args.d_model, n_layers=args.n_layers)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    # observability switches come up BEFORE the engine exists so the
+    # ServePlan's select_backend calls land in the decision log and the
+    # first-dispatch (compile=true) spans land in the trace
+    if args.trace:
+        tracer.enable(annotate_steps=args.annotate_steps)
+    if args.decision_log:
+        OD.log.enable()
 
     engine = Engine(cfg, params, EngineConfig(
         n_slots=args.slots, prefill_chunk=args.prefill_chunk,
@@ -158,6 +218,8 @@ def main():
           f"prefill={plan.prefill.name} decode={plan.decode.name}"
           + (f" verify={plan.verify.name}" if plan.verify else "")
           + f" ({plan.reason})")
+    metrics_srv = (serve_metrics_http(engine, args.metrics_port)
+                   if args.metrics_port else None)
     reqs, arrivals = mixed_arrival_workload(
         cfg, args.requests, args.prompt_len, args.gen,
         top_k=args.top_k, top_p=args.top_p, shared_frac=args.shared_prefix)
@@ -167,6 +229,23 @@ def main():
     print(json.dumps(summary, indent=2))
     shared = max((m.active_decoding for m in engine.stats.steps), default=0)
     print(f"max sequences sharing a decode batch: {shared}")
+
+    if args.trace:
+        tracer.write(args.trace)
+        tracer.disable()
+        print(f"trace: {len(tracer.export()['traceEvents'])} events "
+              f"-> {args.trace}")
+    if args.metrics_file:
+        with open(args.metrics_file, "w") as f:
+            f.write(engine.render_metrics())
+        print(f"metrics exposition -> {args.metrics_file}")
+    if args.decision_log:
+        OD.log.write_jsonl(args.decision_log)
+        OD.log.disable()
+        print(f"decision log: {len(OD.log.records)} records "
+              f"-> {args.decision_log}")
+    if metrics_srv is not None:
+        metrics_srv.shutdown()
 
     if args.check and args.temperature == 0.0:
         ok = True

@@ -35,6 +35,13 @@ Decisions folded in from their previous scattered homes:
   boundary-state exchange (distributed/seqscan.py, docs/sharding.md);
   selection checks divisibility and falls back to the sequential scan
   otherwise.
+
+Auditability: with ``repro.obs.decisions.log`` enabled, every
+``select_backend`` call appends a structured record (site, shape,
+chosen backend, N0/N1, reason) — ``launch/dryrun.py`` stores the
+records per cell, ``launch/serve.py --decision-log`` writes them as
+JSONL, and ``benchmarks/crossover.py --decision-log`` diffs them
+against the analytic crossovers (docs/observability.md).
 """
 
 from __future__ import annotations
@@ -45,6 +52,7 @@ from typing import Callable
 
 from repro.core import taylor as T
 from repro.distributed import ctx
+from repro.obs import decisions as D
 
 
 # ---------------------------------------------------------------------------
@@ -207,8 +215,16 @@ def select_backend(cfg, *, N: int, d: int, site: str = "full",
 
     def sel(name, mode="", repeat_kv=False, seq_shards=1, scan="",
             chunk=0, reason=""):
-        return Selection(REGISTRY[name], mode, repeat_kv, seq_shards,
-                         scan, chunk, n0, n1, reason)
+        s = Selection(REGISTRY[name], mode, repeat_kv, seq_shards,
+                      scan, chunk, n0, n1, reason)
+        if D.log.enabled:   # audit every resolved selection (obs/decisions)
+            D.log.record(site=site, N=N, d=d, H=cfg.n_heads,
+                         kv_heads=cfg.kv_heads, causal=causal,
+                         cache_kind=cache_kind, backend=s.name, mode=s.mode,
+                         repeat_kv=s.repeat_kv, seq_shards=s.seq_shards,
+                         scan=s.scan, chunk=s.chunk, n0=s.n0, n1=s.n1,
+                         reason=s.reason)
+        return s
 
     if site == "decode":
         if cache_kind == "kv":

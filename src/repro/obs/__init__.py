@@ -1,0 +1,31 @@
+"""Unified observability: tracing, metrics, and decision auditing.
+
+Three pillars (docs/observability.md):
+
+* ``obs.trace``     — nested span tracer, Chrome-trace/Perfetto export,
+  jit-compile tagging, optional ``jax.profiler`` step correlation;
+  global instance ``obs.tracer``.
+* ``obs.metrics``   — counters/gauges/histograms with labels +
+  Prometheus text exposition; the engine's ``EngineStats`` is a view
+  over a ``MetricsRegistry``.
+* ``obs.decisions`` — structured audit log of every
+  ``models/backend.py:select_backend`` call; global ``obs.decisions.log``.
+
+Invariant (design.md §4.6): purely observational. All three pillars are
+write-only from the serving/dispatch hot paths — nothing reads them
+back into scheduling, selection, or sampling — and everything except
+the always-on metrics counters is off by default with one-flag-check
+overhead.
+"""
+
+from repro.obs import decisions, metrics, trace, validate  # noqa: F401
+from repro.obs.decisions import DecisionLog
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               render_all)
+from repro.obs.trace import Tracer, tracer
+
+__all__ = [
+    "decisions", "metrics", "trace", "validate",
+    "DecisionLog", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "render_all", "Tracer", "tracer",
+]

@@ -1,0 +1,101 @@
+"""Backend decision/audit log.
+
+Every ``models/backend.py:select_backend`` call resolves an attention
+implementation from the paper's N0/N1 cost model — and until now the
+evidence (site, shape, crossovers, reason) vanished after the call.
+With the log enabled, each selection appends one structured record:
+
+    {"seq": 3, "site": "prefill", "N": 128, "d": 32, "H": 4,
+     "causal": true, "cache_kind": "taylor", "backend": "causal-scan",
+     "mode": "", "repeat_kv": false, "seq_shards": 1,
+     "scan": "sequential", "chunk": 128, "n0": 1187.0, "n1": 542.0,
+     "reason": "TaylorState handoff (...)"}
+
+Consumers:
+
+* ``launch/dryrun.py`` captures the selections made while a cell is
+  built/lowered and stores them in the cell JSON next to the roofline
+  (``backend_decisions``), so a sweep records which implementation it
+  *actually* traced, not just the offline ``B.report``;
+* ``launch/serve.py --decision-log`` writes the serving engine's
+  records as JSONL — replaying exactly how the ``ServePlan`` and every
+  trace-time attention site were chosen;
+* ``benchmarks/crossover.py --decision-log`` diffs recorded choices
+  against the analytic crossovers — the hook the ROADMAP's empirical
+  calibration pass consumes (measured N0/N1 overrides will be judged
+  against these records).
+
+Off by default and one attribute check when off — ``select_backend``
+stays hot-path cheap. ``capture()`` is the scoped way to collect
+records without leaking global state.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import threading
+
+
+class DecisionLog:
+    """Append-only structured log of backend selections."""
+
+    def __init__(self):
+        self.enabled = False
+        self.records: list[dict] = []
+        self._lock = threading.Lock()
+
+    def enable(self) -> None:
+        self.enabled = True
+
+    def disable(self) -> None:
+        self.enabled = False
+
+    def clear(self) -> None:
+        with self._lock:
+            self.records = []
+
+    def record(self, **fields) -> None:
+        """Append one record (no-op when disabled — callers may guard on
+        ``log.enabled`` themselves to skip building the fields)."""
+        if not self.enabled:
+            return
+        with self._lock:
+            self.records.append({"seq": len(self.records), **fields})
+
+    @contextlib.contextmanager
+    def capture(self):
+        """Collect the records made inside the block.
+
+        Yields the live list; prior enabled-state and records are
+        restored on exit, so nested/global logging is unaffected.
+        """
+        prev_enabled, prev_records = self.enabled, self.records
+        self.records = []
+        self.enabled = True
+        try:
+            yield self.records
+        finally:
+            self.enabled, self.records = prev_enabled, prev_records
+
+    def write_jsonl(self, path: str) -> None:
+        with self._lock:
+            records = list(self.records)
+        with open(path, "w") as f:
+            for r in records:
+                f.write(json.dumps(r) + "\n")
+
+
+def read_jsonl(path: str) -> list[dict]:
+    """Load a decision log written by ``write_jsonl``."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+#: The process-global decision log ``select_backend`` publishes into.
+log = DecisionLog()

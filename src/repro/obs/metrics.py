@@ -1,0 +1,313 @@
+"""Metrics registry: counters, gauges, histograms with labels.
+
+The single metrics surface the serving stack publishes into —
+``EngineStats`` (serve/scheduler.py), ``PrefixCache``
+(serve/prefix_cache.py), ``Scheduler`` and the speculative
+``DraftController`` (spec/controller.py) all register their counters
+here instead of keeping private dicts, so one Prometheus text
+exposition (``MetricsRegistry.render()``) covers the whole engine and
+``EngineStats.summary()`` is a *view* over the registry rather than a
+second bookkeeping system.
+
+Design constraints, in order:
+
+* **cheap on the hot path** — ``Counter.inc`` / ``Gauge.set`` /
+  ``Histogram.observe`` are a couple of attribute writes, no locks on
+  the unlabeled fast path (the engine is single-threaded per step; the
+  registry dict itself is guarded for concurrent *registration* only);
+* **percentile-honest** — histograms keep the raw observations (capped
+  at ``Histogram.MAX_SAMPLES``, after which percentiles fall back to
+  bucket interpolation) so ``quantile(0.5/0.95/0.99)`` reports real
+  p50/p95/p99 rather than bucket-boundary estimates; the bucket counts
+  still drive the Prometheus ``_bucket`` exposition;
+* **exposition-compatible** — ``render()`` emits the Prometheus text
+  format (``# HELP`` / ``# TYPE`` / ``name{labels} value``) that any
+  scraper parses; ``obs.validate.validate_prometheus_text`` checks it
+  in CI.
+"""
+
+from __future__ import annotations
+
+import bisect
+import math
+import re
+import threading
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+
+# latency buckets (seconds) tuned to serving TTFT/ITL scales
+LATENCY_BUCKETS = (0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05,
+                   0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
+
+
+def _fmt(v: float) -> str:
+    """Prometheus sample value: integers render bare, floats repr()."""
+    if isinstance(v, bool):
+        return "1" if v else "0"
+    if isinstance(v, int) or (isinstance(v, float) and v.is_integer()
+                              and abs(v) < 1e15):
+        return str(int(v))
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    return repr(float(v))
+
+
+def _escape(v) -> str:
+    return str(v).replace("\\", r"\\").replace('"', r'\"').replace(
+        "\n", r"\n")
+
+
+def _label_str(labels: dict) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{_escape(v)}"' for k, v in labels.items())
+    return "{" + inner + "}"
+
+
+class _Child:
+    """Base for one (metric, label-values) time series."""
+
+    def __init__(self, labels: dict):
+        self.labels = dict(labels)
+
+
+class Counter(_Child):
+    """Monotonically increasing count."""
+
+    def __init__(self, labels: dict | None = None):
+        super().__init__(labels or {})
+        self.value = 0
+
+    def inc(self, amount: int | float = 1) -> None:
+        if amount < 0:
+            raise ValueError("counters only go up")
+        self.value += amount
+
+
+class Gauge(_Child):
+    """A value that can go up and down."""
+
+    def __init__(self, labels: dict | None = None):
+        super().__init__(labels or {})
+        self.value = 0.0
+
+    def set(self, value: float) -> None:
+        self.value = value
+
+    def inc(self, amount: float = 1.0) -> None:
+        self.value += amount
+
+    def dec(self, amount: float = 1.0) -> None:
+        self.value -= amount
+
+
+class Histogram(_Child):
+    """Cumulative-bucket histogram that also keeps raw samples.
+
+    ``quantile(q)`` interpolates the sorted raw samples while they fit
+    under ``MAX_SAMPLES`` (exact percentiles for every serving run this
+    repo times); past the cap it degrades to linear interpolation
+    inside the cumulative buckets — still monotone, never silently
+    wrong by more than a bucket width.
+    """
+
+    MAX_SAMPLES = 1 << 17
+
+    def __init__(self, labels: dict | None = None,
+                 buckets: tuple[float, ...] = LATENCY_BUCKETS):
+        super().__init__(labels or {})
+        self.buckets = tuple(sorted(buckets))
+        self.bucket_counts = [0] * (len(self.buckets) + 1)  # +Inf last
+        self.sum = 0.0
+        self.count = 0
+        self.samples: list[float] = []
+
+    def observe(self, value: float) -> None:
+        self.sum += value
+        self.count += 1
+        self.bucket_counts[bisect.bisect_left(self.buckets, value)] += 1
+        if len(self.samples) < self.MAX_SAMPLES:
+            self.samples.append(value)
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    @property
+    def max(self) -> float:
+        if self.samples and len(self.samples) == self.count:
+            return max(self.samples)
+        # capped: the top bucket edge below the largest non-empty bucket
+        for i in range(len(self.bucket_counts) - 1, -1, -1):
+            if self.bucket_counts[i]:
+                return (self.buckets[i] if i < len(self.buckets)
+                        else float("inf"))
+        return 0.0
+
+    def quantile(self, q: float) -> float:
+        """q in [0, 1]; 0 with no observations."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        if not self.count:
+            return 0.0
+        if self.samples and len(self.samples) == self.count:
+            s = sorted(self.samples)
+            pos = q * (len(s) - 1)
+            lo = int(pos)
+            hi = min(lo + 1, len(s) - 1)
+            return s[lo] + (s[hi] - s[lo]) * (pos - lo)
+        # bucket interpolation on the cumulative counts
+        target = q * self.count
+        cum = 0
+        prev_edge = 0.0
+        for i, n in enumerate(self.bucket_counts):
+            if cum + n >= target and n:
+                edge = (self.buckets[i] if i < len(self.buckets)
+                        else self.buckets[-1])
+                frac = (target - cum) / n
+                return prev_edge + (edge - prev_edge) * frac
+            cum += n
+            if i < len(self.buckets):
+                prev_edge = self.buckets[i]
+        return self.buckets[-1]
+
+
+class _Family:
+    """One named metric and its labeled children."""
+
+    def __init__(self, name: str, kind: str, help: str,
+                 factory, **kwargs):
+        self.name = name
+        self.kind = kind
+        self.help = help
+        self._factory = factory
+        self._kwargs = kwargs
+        self._children: dict[tuple, _Child] = {}
+
+    def labels(self, **labelvals) -> _Child:
+        key = tuple(sorted(labelvals.items()))
+        child = self._children.get(key)
+        if child is None:
+            child = self._children[key] = self._factory(
+                labels=dict(key), **self._kwargs)
+        return child
+
+    @property
+    def children(self) -> list[_Child]:
+        return list(self._children.values())
+
+
+class MetricsRegistry:
+    """Named metrics with one-line registration.
+
+    ``counter`` / ``gauge`` / ``histogram`` create-or-return: calling
+    twice with one name returns the same object (so views like
+    ``EngineStats`` and publishers like ``Scheduler`` can resolve
+    independently), but a name can never change kind.
+    """
+
+    def __init__(self):
+        self._metrics: dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _register(self, name: str, kind: str, help: str, build):
+        if not _NAME_RE.match(name):
+            raise ValueError(f"bad metric name {name!r}")
+        with self._lock:
+            existing = self._metrics.get(name)
+            if existing is not None:
+                ekind = (existing.kind if isinstance(existing, _Family)
+                         else existing._kind)
+                if ekind != kind:
+                    raise ValueError(
+                        f"metric {name!r} already registered as {ekind}")
+                return existing
+            m = build()
+            self._metrics[name] = m
+            return m
+
+    def counter(self, name: str, help: str = "",
+                labelnames: tuple[str, ...] = ()) -> Counter | _Family:
+        return self._one(name, "counter", help, labelnames, Counter)
+
+    def gauge(self, name: str, help: str = "",
+              labelnames: tuple[str, ...] = ()) -> Gauge | _Family:
+        return self._one(name, "gauge", help, labelnames, Gauge)
+
+    def histogram(self, name: str, help: str = "",
+                  labelnames: tuple[str, ...] = (),
+                  buckets: tuple[float, ...] = LATENCY_BUCKETS
+                  ) -> Histogram | _Family:
+        return self._one(name, "histogram", help, labelnames, Histogram,
+                         buckets=buckets)
+
+    def _one(self, name, kind, help, labelnames, cls, **kwargs):
+        if labelnames:
+            return self._register(
+                name, kind, help,
+                lambda: _Family(name, kind, help, cls, **kwargs))
+
+        def build():
+            m = cls(**kwargs)
+            m._kind = kind
+            m._help = help
+            return m
+        return self._register(name, kind, help, build)
+
+    def get(self, name: str):
+        return self._metrics.get(name)
+
+    def value(self, name: str, default=0):
+        """Scalar value of an unlabeled counter/gauge (views use this)."""
+        m = self._metrics.get(name)
+        return default if m is None else m.value
+
+    # -- exposition ---------------------------------------------------------
+
+    def render(self) -> str:
+        """Prometheus text exposition of every registered metric."""
+        out: list[str] = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            if isinstance(m, _Family):
+                kind, help, children = m.kind, m.help, m.children
+            else:
+                kind, help, children = m._kind, m._help, [m]
+            if help:
+                out.append(f"# HELP {name} {_escape(help)}")
+            out.append(f"# TYPE {name} {kind}")
+            for c in children:
+                if kind == "histogram":
+                    cum = 0
+                    for edge, n in zip(c.buckets, c.bucket_counts):
+                        cum += n
+                        lbl = _label_str({**c.labels, "le": _fmt(edge)})
+                        out.append(f"{name}_bucket{lbl} {cum}")
+                    lbl = _label_str({**c.labels, "le": "+Inf"})
+                    out.append(f"{name}_bucket{lbl} {c.count}")
+                    base = _label_str(c.labels)
+                    out.append(f"{name}_sum{base} {_fmt(c.sum)}")
+                    out.append(f"{name}_count{base} {c.count}")
+                else:
+                    out.append(f"{name}{_label_str(c.labels)} "
+                               f"{_fmt(c.value)}")
+        return "\n".join(out) + ("\n" if out else "")
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.render())
+
+
+def render_all(*registries: MetricsRegistry) -> str:
+    """Concatenate expositions (metric names must be disjoint — the
+    engine keeps lifetime-scoped registries, e.g. the prefix cache's,
+    separate from the resettable stats registry)."""
+    seen: set[str] = set()
+    for r in registries:
+        names = set(r._metrics)
+        dup = seen & names
+        if dup:
+            raise ValueError(f"duplicate metric names across registries: "
+                             f"{sorted(dup)}")
+        seen |= names
+    return "".join(r.render() for r in registries)

@@ -1,0 +1,187 @@
+"""Span tracer: nested spans -> Chrome-trace/Perfetto JSON.
+
+One global ``tracer`` (module-level, like ``decisions.log``) that the
+serving engine wraps around every step phase — admission, prefix-cache
+lookup, prefill chunk, decode batch, draft, verify, rollback — plus
+whatever benchmarks and launchers want to mark. Spans nest naturally
+(``with tracer.span("decode_batch"):``) and export as Chrome trace
+event JSON (``ph: "B"/"E"`` pairs) that chrome://tracing and
+https://ui.perfetto.dev open directly.
+
+Zero overhead when off: ``span()`` checks one flag and returns a shared
+no-op context manager — no event append, no timestamp read, no
+allocation. The engine is instrumented unconditionally; only an enabled
+tracer pays.
+
+Two serving-specific extras:
+
+* **jit-compile detection** — pass ``compile_key=<hashable>`` and the
+  first span with that key is tagged ``args["compile"] = true``: the
+  engine keys on dispatch shapes (chunk length, draft k, slot count),
+  so warmup spans that trigger XLA compilation are visually separable
+  from steady-state dispatches of the same phase.
+* **``jax.profiler`` correlation** — with ``annotate_steps=True`` any
+  span carrying ``step_num`` also enters a
+  ``jax.profiler.StepTraceAnnotation``, so a simultaneously captured
+  device profile aligns its steps with this tracer's engine steps.
+
+Thread-safe: events append under a lock (cross-session replicas or a
+metrics HTTP thread may export mid-run), and ``tid`` records the
+emitting thread so nesting is judged per thread.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+
+class _NullSpan:
+    """Shared do-nothing span for the disabled path."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, key, value):
+        return self
+
+
+_NULL = _NullSpan()
+
+
+class Span:
+    """One live span; ``set(k, v)`` attaches args visible in the trace."""
+
+    __slots__ = ("_tracer", "name", "_args", "_ann")
+
+    def __init__(self, tracer: "Tracer", name: str, args: dict | None,
+                 annotation=None):
+        self._tracer = tracer
+        self.name = name
+        self._args = args
+        self._ann = annotation
+
+    def set(self, key, value) -> "Span":
+        if self._args is None:
+            self._args = {}
+        self._args[key] = value
+        return self
+
+    def __enter__(self):
+        if self._ann is not None:
+            self._ann.__enter__()
+        self._tracer._emit("B", self.name, self._args)
+        # args dict is shared with the B event: set() after enter still
+        # lands in the exported trace
+        return self
+
+    def __exit__(self, *exc):
+        # error goes on the E event: the B event's args dict was already
+        # emitted (and may be None when the span opened bare)
+        self._tracer._emit(
+            "E", self.name,
+            {"error": exc[0].__name__} if exc[0] is not None else None)
+        if self._ann is not None:
+            self._ann.__exit__(*exc)
+        return False
+
+
+class Tracer:
+    """Thread-safe span/event buffer with Chrome-trace export."""
+
+    def __init__(self, *, annotate_steps: bool = False):
+        self.enabled = False
+        self.annotate_steps = annotate_steps
+        self.events: list[dict] = []
+        self._lock = threading.Lock()
+        self._seen_keys: set = set()
+        self._pid = os.getpid()
+
+    # -- control ------------------------------------------------------------
+
+    def enable(self, *, annotate_steps: bool | None = None) -> None:
+        if annotate_steps is not None:
+            self.annotate_steps = annotate_steps
+        self.enabled = True
+
+    def disable(self) -> None:
+        self.enabled = False
+
+    def clear(self) -> None:
+        with self._lock:
+            self.events = []
+            self._seen_keys = set()
+
+    # -- spans --------------------------------------------------------------
+
+    def span(self, name: str, *, compile_key=None, step_num=None,
+             **args) -> Span | _NullSpan:
+        """Context manager for one nested span.
+
+        ``compile_key``: hashable dispatch-shape key; the first span per
+        key is tagged ``compile=true`` (jit warmup detection).
+        ``step_num``: with ``annotate_steps``, correlates this span with
+        a ``jax.profiler`` step annotation of the same number.
+        """
+        if not self.enabled:
+            return _NULL
+        a = dict(args) if args else None
+        if compile_key is not None:
+            first = compile_key not in self._seen_keys
+            if first:
+                self._seen_keys.add(compile_key)
+                a = a or {}
+                a["compile"] = True
+        ann = None
+        if step_num is not None:
+            if a is None:
+                a = {}
+            a["step_num"] = step_num
+            if self.annotate_steps:
+                try:
+                    from jax.profiler import StepTraceAnnotation
+                    ann = StepTraceAnnotation(name, step_num=step_num)
+                except Exception:  # profiler unavailable: spans still work
+                    ann = None
+        return Span(self, name, a, ann)
+
+    def instant(self, name: str, **args) -> None:
+        """A zero-duration marker event."""
+        if self.enabled:
+            self._emit("i", name, dict(args) if args else None)
+
+    def _emit(self, ph: str, name: str, args: dict | None) -> None:
+        ev = {"name": name, "ph": ph, "ts": time.perf_counter() * 1e6,
+              "pid": self._pid, "tid": threading.get_ident()}
+        if args is not None:
+            ev["args"] = args
+        if ph == "i":
+            ev["s"] = "t"     # instant scope: thread
+        # lock-free append: CPython list.append is atomic, and clear()
+        # swaps the whole list rather than mutating it — the lock only
+        # serializes clear()/export() against each other
+        self.events.append(ev)
+
+    # -- export -------------------------------------------------------------
+
+    def export(self) -> dict:
+        """Chrome trace event format object (deep-copied args)."""
+        with self._lock:
+            events = [dict(e, args=dict(e["args"])) if "args" in e
+                      else dict(e) for e in self.events]
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.export(), f)
+
+
+#: The process-global tracer every instrumented module shares.
+tracer = Tracer()

@@ -1,0 +1,207 @@
+"""Validators for the observability outputs CI gates on.
+
+Pure functions over already-loaded data — each returns a list of
+problem strings (empty = valid) so callers can aggregate; the
+``check_*`` wrappers raise ``ValueError`` with every problem listed.
+``scripts/validate_obs.py`` is the CLI front end (the CI ``obs`` job);
+``tests/test_obs.py`` exercises them directly.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?P<labels>\{[^}]*\})?\s+"
+    r"(?P<value>[-+]?(?:\d+\.?\d*(?:[eE][-+]?\d+)?|\d*\.\d+(?:[eE][-+]?\d+)?"
+    r"|Inf|NaN))$")
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace
+# ---------------------------------------------------------------------------
+
+def validate_chrome_trace(doc, *, require_spans: tuple[str, ...] = ()
+                          ) -> list[str]:
+    """Well-formedness of a Chrome trace event document.
+
+    Checks: ``traceEvents`` is a non-empty list; every event has name /
+    ph / ts / pid / tid; per-thread timestamps are monotone
+    non-decreasing; B/E events match up as a proper stack per thread
+    (same names, nothing left open); ``require_spans`` all appear.
+    """
+    problems: list[str] = []
+    events = doc.get("traceEvents") if isinstance(doc, dict) else None
+    if not isinstance(events, list) or not events:
+        return ["traceEvents missing or empty"]
+    stacks: dict[tuple, list[str]] = {}
+    last_ts: dict[tuple, float] = {}
+    names: set[str] = set()
+    for i, ev in enumerate(events):
+        for k in ("name", "ph", "ts", "pid", "tid"):
+            if k not in ev:
+                problems.append(f"event {i}: missing {k!r}")
+        if problems:
+            continue
+        tid = (ev["pid"], ev["tid"])
+        ts = ev["ts"]
+        if not isinstance(ts, (int, float)) or math.isnan(ts):
+            problems.append(f"event {i}: bad ts {ts!r}")
+            continue
+        if ts < last_ts.get(tid, float("-inf")):
+            problems.append(
+                f"event {i} ({ev['name']}): ts {ts} goes backwards on "
+                f"thread {tid}")
+        last_ts[tid] = ts
+        ph = ev["ph"]
+        stack = stacks.setdefault(tid, [])
+        if ph == "B":
+            stack.append(ev["name"])
+            names.add(ev["name"])
+        elif ph == "E":
+            if not stack:
+                problems.append(
+                    f"event {i}: E {ev['name']!r} with no open span")
+            elif stack[-1] != ev["name"]:
+                problems.append(
+                    f"event {i}: E {ev['name']!r} closes open span "
+                    f"{stack[-1]!r} (bad nesting)")
+                stack.pop()
+            else:
+                stack.pop()
+        elif ph in ("i", "I", "X", "M", "C"):
+            names.add(ev["name"])
+        else:
+            problems.append(f"event {i}: unknown ph {ph!r}")
+    for tid, stack in stacks.items():
+        if stack:
+            problems.append(f"thread {tid}: unclosed spans {stack}")
+    for want in require_spans:
+        if want not in names:
+            problems.append(f"required span {want!r} never appears")
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition
+# ---------------------------------------------------------------------------
+
+def validate_prometheus_text(text: str, *,
+                             require_metrics: tuple[str, ...] = ()
+                             ) -> list[str]:
+    """Parse the text exposition format.
+
+    Checks: every non-comment line is a valid sample; every sampled
+    family has a ``# TYPE``; histogram ``_bucket`` series are cumulative
+    (monotone in ``le``) and agree with ``_count``; no NaNs;
+    ``require_metrics`` families all present.
+    """
+    problems: list[str] = []
+    types: dict[str, str] = {}
+    samples: list[tuple[str, dict, float]] = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in (
+                    "counter", "gauge", "histogram", "summary", "untyped"):
+                problems.append(f"line {lineno}: bad TYPE line")
+            else:
+                types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line.strip())
+        if not m:
+            problems.append(f"line {lineno}: unparseable sample {line!r}")
+            continue
+        labels = dict(_LABEL_RE.findall(m.group("labels") or ""))
+        value = float(m.group("value"))
+        if math.isnan(value):
+            problems.append(f"line {lineno}: NaN value")
+        samples.append((m.group("name"), labels, value))
+
+    def family(name: str) -> str:
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix) and name[:-len(suffix)] in types:
+                return name[:-len(suffix)]
+        return name
+
+    seen_families = {family(n) for n, _, _ in samples}
+    for fam in seen_families:
+        if fam not in types:
+            problems.append(f"family {fam!r} sampled without a # TYPE line")
+    for want in require_metrics:
+        if want not in seen_families:
+            problems.append(f"required metric {want!r} missing")
+
+    # histogram bucket monotonicity + count agreement, per label set
+    hists: dict[tuple, list[tuple[float, float]]] = {}
+    counts: dict[tuple, float] = {}
+    for name, labels, value in samples:
+        fam = family(name)
+        if types.get(fam) != "histogram":
+            continue
+        base = tuple(sorted((k, v) for k, v in labels.items()
+                            if k != "le"))
+        if name == fam + "_bucket":
+            le = labels.get("le")
+            edge = float("inf") if le == "+Inf" else float(le)
+            hists.setdefault((fam, base), []).append((edge, value))
+        elif name == fam + "_count":
+            counts[(fam, base)] = value
+    for key, series in hists.items():
+        series.sort(key=lambda p: p[0])
+        vals = [v for _, v in series]
+        if any(b > a for a, b in zip(vals[1:], vals)):
+            problems.append(f"histogram {key[0]}: non-cumulative buckets")
+        if series and series[-1][0] != float("inf"):
+            problems.append(f"histogram {key[0]}: missing +Inf bucket")
+        if key in counts and series and series[-1][1] != counts[key]:
+            problems.append(
+                f"histogram {key[0]}: +Inf bucket {series[-1][1]} != "
+                f"_count {counts[key]}")
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# Decision log
+# ---------------------------------------------------------------------------
+
+DECISION_KEYS = ("seq", "site", "N", "d", "H", "cache_kind", "backend",
+                 "mode", "n0", "n1", "reason")
+
+
+def validate_decision_log(records: list[dict]) -> list[str]:
+    """Every record carries the audit schema; seq is dense from 0."""
+    problems = []
+    if not records:
+        return ["decision log is empty"]
+    for i, r in enumerate(records):
+        missing = [k for k in DECISION_KEYS if k not in r]
+        if missing:
+            problems.append(f"record {i}: missing keys {missing}")
+        if r.get("seq") != i:
+            problems.append(f"record {i}: seq {r.get('seq')} not dense")
+    return problems
+
+
+def _raise(problems: list[str], what: str) -> None:
+    if problems:
+        raise ValueError(f"invalid {what}:\n  " + "\n  ".join(problems))
+
+
+def check_chrome_trace(doc, **kw) -> None:
+    _raise(validate_chrome_trace(doc, **kw), "Chrome trace")
+
+
+def check_prometheus_text(text: str, **kw) -> None:
+    _raise(validate_prometheus_text(text, **kw), "Prometheus exposition")
+
+
+def check_decision_log(records: list[dict]) -> None:
+    _raise(validate_decision_log(records), "decision log")

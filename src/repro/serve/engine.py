@@ -40,6 +40,8 @@ from repro.configs.base import ModelConfig, PrefixCacheConfig, SpecConfig
 from repro.models import backend as B
 from repro.models import model as M
 from repro.models.model import PREFILL_KINDS
+from repro.obs import metrics as OM
+from repro.obs.trace import tracer
 from repro.serve import prefill as PF
 from repro.serve.pool import StatePool
 from repro.serve.prefix_cache import PrefixCache
@@ -142,8 +144,9 @@ class Engine:
                               cache_len=cache_len,
                               cache_kind=self.plan.cache_kind)
         self.queue = AdmissionQueue(econf.max_queue)
-        self.scheduler = Scheduler(econf.token_budget)
         self.stats = EngineStats()
+        self.scheduler = Scheduler(econf.token_budget)
+        self.scheduler.bind_registry(self.stats.registry)
         # shared-prefix state cache: entries are immutable snapshots of
         # the chunked-prefill cache at full-chunk boundaries, so a hit
         # is a zero-copy resume (serve/prefix_cache.py). Keyed on the
@@ -205,7 +208,8 @@ class Engine:
                 cfg, params, n_slots=econf.n_slots, cache_len=cache_len,
                 cache_kind=self.plan.cache_kind, spec=econf.spec,
                 prefill_chunk=econf.prefill_chunk)
-            self._controller = DraftController(econf.speculate_k, econf.spec)
+            self._controller = DraftController(econf.speculate_k, econf.spec,
+                                              registry=self.stats.registry)
 
     # ------------------------------------------------------------------
     # Submission
@@ -234,16 +238,37 @@ class Engine:
         return self._step_idx
 
     def reset_metrics(self) -> None:
-        """Fresh ``EngineStats`` and draft controller. For warm/timed
-        benchmark pairs: the adaptive controller's draft length follows
-        its acceptance history, so without a reset the timed run would
-        take a different k trajectory than the warmup (and recompile
-        verify shapes mid-measurement)."""
+        """Fresh ``EngineStats`` (with a fresh metrics registry) and
+        draft controller. For warm/timed benchmark pairs: the adaptive
+        controller's draft length follows its acceptance history, so
+        without a reset the timed run would take a different k
+        trajectory than the warmup (and recompile verify shapes
+        mid-measurement).
+
+        The prefix cache's lifetime registry is NOT reset (the counters
+        describe state that survives); instead its current counter
+        values become the baseline for the summary's
+        ``prefix_cache.since_reset`` sub-dict, so post-reset summaries
+        are self-consistent. Purely observational either way — resets
+        never change emitted tokens."""
         self.stats = EngineStats()
+        self.scheduler.bind_registry(self.stats.registry)
+        if self.prefix_cache is not None:
+            self.stats.prefix_cache_baseline = self.prefix_cache.stats()
         if self._controller is not None:
             from repro.spec.controller import DraftController
             self._controller = DraftController(self.econf.speculate_k,
-                                               self.econf.spec)
+                                               self.econf.spec,
+                                               registry=self.stats.registry)
+
+    def render_metrics(self) -> str:
+        """Prometheus text exposition over every registry the engine
+        owns: the resettable stats registry plus the prefix cache's
+        lifetime registry (``launch/serve.py --metrics-file/-port``)."""
+        regs = [self.stats.registry]
+        if self.prefix_cache is not None:
+            regs.append(self.prefix_cache.registry)
+        return OM.render_all(*regs)
 
     def pop_result(self, request_id: str) -> Sequence:
         """Drain one finished sequence. ``results`` retains finished
@@ -258,83 +283,108 @@ class Engine:
     def step(self) -> tuple[StepMetrics, list[TokenEvent]]:
         t0 = time.perf_counter()
         events: list[TokenEvent] = []
+        # every phase below is wrapped in an obs span; with the global
+        # tracer disabled (the default) each wrapper is one flag check
+        # returning a shared no-op context — docs/observability.md
+        step_span = tracer.span("engine_step", step_num=self._step_idx)
+        with step_span:
 
-        # 1. admit — waiting sequences take free slots; the prefix
-        # cache seeds each new sequence from its longest cached prefix
-        cached_tokens = 0
-        while self.pool.free_slots and self.queue.depth:
-            seq = self.queue.pop()
-            seq.slot = self.pool.alloc()
-            seq.status = SequenceStatus.PREFILLING
-            self._slots[seq.slot] = seq
-            PF.start_prefill(seq, self.pool, self.econf.prefill_chunk,
-                             self.prefix_cache)
-            cached_tokens += seq.cached_tokens
+            # 1. admit — waiting sequences take free slots; the prefix
+            # cache seeds each new sequence from its longest cached prefix
+            cached_tokens = 0
+            admitted = 0
+            with tracer.span("admit") as adm:
+                while self.pool.free_slots and self.queue.depth:
+                    seq = self.queue.pop()
+                    seq.slot = self.pool.alloc()
+                    seq.status = SequenceStatus.PREFILLING
+                    self._slots[seq.slot] = seq
+                    with tracer.span("prefix_lookup",
+                                     request=seq.request_id) as lk:
+                        PF.start_prefill(seq, self.pool,
+                                         self.econf.prefill_chunk,
+                                         self.prefix_cache)
+                        lk.set("cached_tokens", seq.cached_tokens)
+                    cached_tokens += seq.cached_tokens
+                    admitted += 1
+                adm.set("admitted", admitted)
 
-        plan = self.scheduler.plan([s for s in self._slots if s is not None])
-        budget = self.scheduler.token_budget
+            plan = self.scheduler.plan(
+                [s for s in self._slots if s is not None])
+            budget = self.scheduler.token_budget
 
-        # 2. one batched decode (or draft+verify) pass for every running
-        # sequence. Speculation only pays when at least one decoding row
-        # is greedy — sampled rows always reject their drafts, so an
-        # all-sampled batch takes the plain decode path (one token per
-        # slot, no draft/verify/rollback work, no budget surcharge).
-        decode_tokens = 0
-        draft_tokens = accepted_tokens = rollbacks = k_step = 0
-        spec_step = (self.drafter is not None
-                     and any(self._temp(s) <= 0.0 for s in plan.decode))
-        if plan.decode and spec_step:
-            k_step = self._controller.k
-            (decode_tokens, draft_tokens, accepted_tokens,
-             rollbacks) = self._speculative_decode(plan.decode, k_step,
-                                                   events)
-            budget -= self.scheduler.decode_cost(len(plan.decode), k_step)
-        elif plan.decode:
-            tokens = np.zeros((self.pool.n_slots, 1), np.int32)
-            for s in plan.decode:
-                tokens[s.slot, 0] = s.next_token
-            logits, self.pool.cache = self._decode_fn(
-                jnp.asarray(tokens), self.pool.cache)
-            last = logits[:, -1]
-            # one batched argmax + one device sync covers every greedy
-            # row; skipped entirely when the whole batch is sampled
-            greedy = None
-            if any(self._temp(s) <= 0.0 for s in plan.decode):
-                greedy = np.asarray(jnp.argmax(last, axis=-1))
-            for s in plan.decode:
-                if self._temp(s) <= 0.0:
-                    events.append(self._emit(s, int(greedy[s.slot])))
-                else:
-                    events.append(self._emit(s, self._sample(s, last[s.slot])))
-            decode_tokens = len(plan.decode)
-            budget -= self.scheduler.decode_cost(len(plan.decode))
+            # 2. one batched decode (or draft+verify) pass for every
+            # running sequence. Speculation only pays when at least one
+            # decoding row is greedy — sampled rows always reject their
+            # drafts, so an all-sampled batch takes the plain decode path
+            # (one token per slot, no draft/verify/rollback work, no
+            # budget surcharge).
+            decode_tokens = 0
+            draft_tokens = accepted_tokens = rollbacks = k_step = 0
+            spec_step = (self.drafter is not None
+                         and any(self._temp(s) <= 0.0 for s in plan.decode))
+            if plan.decode and spec_step:
+                k_step = self._controller.k
+                (decode_tokens, draft_tokens, accepted_tokens,
+                 rollbacks) = self._speculative_decode(plan.decode, k_step,
+                                                       events)
+                budget -= self.scheduler.decode_cost(len(plan.decode),
+                                                     k_step)
+            elif plan.decode:
+                with tracer.span("decode_batch",
+                                 compile_key=("decode", self.pool.n_slots),
+                                 slots=len(plan.decode)):
+                    tokens = np.zeros((self.pool.n_slots, 1), np.int32)
+                    for s in plan.decode:
+                        tokens[s.slot, 0] = s.next_token
+                    logits, self.pool.cache = self._decode_fn(
+                        jnp.asarray(tokens), self.pool.cache)
+                    last = logits[:, -1]
+                    # one batched argmax + one device sync covers every
+                    # greedy row; skipped when the whole batch is sampled
+                    greedy = None
+                    if any(self._temp(s) <= 0.0 for s in plan.decode):
+                        greedy = np.asarray(jnp.argmax(last, axis=-1))
+                    for s in plan.decode:
+                        if self._temp(s) <= 0.0:
+                            events.append(self._emit(s, int(greedy[s.slot])))
+                        else:
+                            events.append(
+                                self._emit(s, self._sample(s, last[s.slot])))
+                decode_tokens = len(plan.decode)
+                budget -= self.scheduler.decode_cost(len(plan.decode))
 
-        # 3. chunked prefill under the remaining budget
-        prefill_tokens = 0
-        first = True
-        for s in plan.prefill:
-            while not s.prefill_done:
-                c = s.next_chunk
-                if not first and c > budget:
+            # 3. chunked prefill under the remaining budget
+            prefill_tokens = 0
+            first = True
+            for s in plan.prefill:
+                while not s.prefill_done:
+                    c = s.next_chunk
+                    if not first and c > budget:
+                        break
+                    with tracer.span(
+                            "prefill_chunk",
+                            compile_key=("prefill", c),
+                            request=s.request_id, chunk=c):
+                        prefill_tokens += PF.advance_prefill(
+                            s, self._prefill_fn, self.prefix_cache)
+                    budget -= c
+                    first = False
+                if not s.prefill_done:
                     break
-                prefill_tokens += PF.advance_prefill(s, self._prefill_fn,
-                                                     self.prefix_cache)
-                budget -= c
-                first = False
-            if not s.prefill_done:
-                break
-            # prompt fully absorbed: hand the state to the decode path
-            # and sample the first token from the last chunk's logits
-            self.pool.scatter(s.cache, s.slot)
-            s.cache = None
-            s.status = SequenceStatus.DECODING
-            if self.drafter is not None:
-                self.drafter.on_ready(s)
-            s.t_first_token = time.perf_counter()
-            self.stats.record_first_token(s.ttft)
-            events.append(self._emit(s, self._sample(s, s.last_logits[0, -1]),
-                                     first=True))
-            s.last_logits = None
+                # prompt fully absorbed: hand the state to the decode path
+                # and sample the first token from the last chunk's logits
+                self.pool.scatter(s.cache, s.slot)
+                s.cache = None
+                s.status = SequenceStatus.DECODING
+                if self.drafter is not None:
+                    self.drafter.on_ready(s)
+                s.t_first_token = time.perf_counter()
+                self.stats.record_first_token(s.ttft)
+                events.append(self._emit(s,
+                                         self._sample(s, s.last_logits[0, -1]),
+                                         first=True))
+                s.last_logits = None
 
         m = StepMetrics(
             step=self._step_idx, wall_s=time.perf_counter() - t0,
@@ -393,15 +443,19 @@ class Engine:
         """
         from repro.spec.verify import accepted_prefix
 
-        drafts = self.drafter.draft(decoding, k)
+        with tracer.span("draft", compile_key=("draft", k), k=k,
+                         slots=len(decoding)):
+            drafts = self.drafter.draft(decoding, k)
         tokens = np.zeros((self.pool.n_slots, k + 1), np.int32)
         for s in decoding:
             tokens[s.slot, 0] = s.next_token
             tokens[s.slot, 1:] = drafts[s.slot]
         snap = self.pool.cache          # O(1): arrays are immutable
-        logits, self.pool.cache = self._verify_fn(
-            jnp.asarray(tokens), self.pool.cache)
-        greedy = np.asarray(jnp.argmax(logits, axis=-1))   # (slots, k+1)
+        with tracer.span("verify", compile_key=("verify", k + 1), k=k,
+                         slots=len(decoding)):
+            logits, self.pool.cache = self._verify_fn(
+                jnp.asarray(tokens), self.pool.cache)
+            greedy = np.asarray(jnp.argmax(logits, axis=-1))  # (slots, k+1)
 
         # every decoding slot's k drafts are scored (and budgeted),
         # sampled ones included — only acceptance is greedy-specific
@@ -428,9 +482,12 @@ class Engine:
                 # real context: restore and re-absorb the accepted
                 # prefix (the bonus token is the *next* feed, never
                 # absorbed here — same as the non-speculative step)
-                self.pool.cache = self._rollback_fn(
-                    self.pool.cache, snap, slot,
-                    jnp.asarray(tokens[slot, :a + 1], jnp.int32)[None])
+                with tracer.span("rollback",
+                                 compile_key=("rollback", a + 1),
+                                 request=s.request_id, accepted=a):
+                    self.pool.cache = self._rollback_fn(
+                        self.pool.cache, snap, slot,
+                        jnp.asarray(tokens[slot, :a + 1], jnp.int32)[None])
                 rollbacks += 1
             self.drafter.commit(s, a, tokens[slot].tolist())
         return emitted_n, drafted_n, accepted_n, rollbacks
@@ -460,6 +517,16 @@ class Engine:
 
     def _emit(self, seq: Sequence, token: int, *, first: bool = False
               ) -> TokenEvent:
+        # per-request inter-token latency: wall gap between consecutive
+        # emitted tokens (tokens a verify step releases together are
+        # honest ~0 gaps — that burstiness is what the ITL percentiles
+        # exist to show)
+        now = time.perf_counter()
+        if seq.t_last_token is not None:
+            itl = now - seq.t_last_token
+            seq.itls.append(itl)
+            self.stats.record_itl(itl)
+        seq.t_last_token = now
         seq.out_tokens.append(token)
         done = (len(seq.out_tokens) >= seq.request.max_new_tokens
                 or token == seq.request.eos_id)

@@ -30,18 +30,24 @@ copies, and a hit costs zero device work.
 
 Eviction is LRU under a byte budget: every lookup/insert touches the
 node; when ``bytes > budget`` the stalest *entries* are dropped (and
-childless interior nodes pruned) until the budget holds. Metrics
-(hits, misses, reused tokens, evictions, bytes) surface through
-``Engine`` into ``EngineStats.summary()["prefix_cache"]``.
+childless interior nodes pruned) until the budget holds. Metrics (hits,
+misses, reused tokens, evictions, bytes) live in the cache's own
+``obs.metrics.MetricsRegistry`` — lifetime-scoped, surviving
+``Engine.reset_metrics`` exactly like the cached state does — and
+surface through ``Engine`` into
+``EngineStats.summary()["prefix_cache"]`` (with a ``since_reset``
+sub-dict re-based on the last reset) and the Prometheus exposition.
 """
 
 from __future__ import annotations
 
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Sequence as Seq
 
 import jax
+
+from repro.obs.metrics import MetricsRegistry
 
 
 def tree_nbytes(tree) -> int:
@@ -83,25 +89,52 @@ class _Node:
         self.edge = edge
 
 
-@dataclass
-class CacheStats:
-    """Counters over the cache's lifetime (``PrefixCache.stats()``)."""
-    lookups: int = 0
-    hits: int = 0                # lookups that found a usable entry
-    misses: int = 0
-    hit_tokens: int = 0          # prompt tokens served from cache
-    lookup_tokens: int = 0       # prompt tokens offered to lookups
-    inserts: int = 0
-    duplicate_inserts: int = 0   # boundary already cached (touch only)
-    evictions: int = 0
-    bytes: int = 0               # current resident entry bytes
-    entries: int = 0
+class _CacheMetrics:
+    """The cache's lifetime counters, registered in a
+    ``MetricsRegistry`` (the migration target of the old ``CacheStats``
+    dataclass): hits/misses/reuse as ``prefix_cache_*_total`` counters,
+    resident bytes/entries as gauges. ``as_dict()`` keeps the exact key
+    set ``PrefixCache.stats()`` has always returned."""
+
+    _COUNTERS = {
+        "lookups": "prefix-cache lookups",
+        "hits": "lookups that found a usable entry",
+        "misses": "lookups that found nothing",
+        "hit_tokens": "prompt tokens served from cache",
+        "lookup_tokens": "prompt tokens offered to lookups",
+        "inserts": "new entries stored",
+        "duplicate_inserts": "boundary already cached (touch only)",
+        "evictions": "entries dropped by LRU/budget",
+    }
+    _GAUGES = {
+        "bytes": "current resident entry bytes",
+        "entries": "current resident entries",
+    }
+
+    def __init__(self, registry: MetricsRegistry):
+        self.registry = registry
+        self._c = {k: registry.counter(f"prefix_cache_{k}_total", h)
+                   for k, h in self._COUNTERS.items()}
+        self._g = {k: registry.gauge(f"prefix_cache_{k}", h)
+                   for k, h in self._GAUGES.items()}
+
+    def inc(self, key: str, amount: int = 1) -> None:
+        self._c[key].inc(amount)
+
+    def add(self, key: str, amount: float) -> None:
+        self._g[key].inc(amount)
+
+    def __getitem__(self, key: str) -> int:
+        m = self._c.get(key) or self._g[key]
+        return int(m.value)
 
     def as_dict(self) -> dict:
-        d = dict(self.__dict__)
-        d["hit_rate"] = self.hits / self.lookups if self.lookups else 0.0
-        d["token_reuse"] = (self.hit_tokens / self.lookup_tokens
-                            if self.lookup_tokens else 0.0)
+        d = {k: int(m.value) for k, m in self._c.items()}
+        d.update({k: int(m.value) for k, m in self._g.items()})
+        d["hit_rate"] = (d["hits"] / d["lookups"] if d["lookups"]
+                         else 0.0)
+        d["token_reuse"] = (d["hit_tokens"] / d["lookup_tokens"]
+                            if d["lookup_tokens"] else 0.0)
         return d
 
 
@@ -127,7 +160,8 @@ class PrefixCache:
     """
 
     def __init__(self, chunk_tokens: int, budget_bytes: int = 0,
-                 max_entries: int = 0):
+                 max_entries: int = 0,
+                 registry: MetricsRegistry | None = None):
         if chunk_tokens < 1:
             raise ValueError("chunk_tokens must be >= 1")
         self.chunk_tokens = chunk_tokens
@@ -135,7 +169,11 @@ class PrefixCache:
         self.max_entries = max_entries
         self.root = _Node()
         self._lru: OrderedDict[_Node, None] = OrderedDict()
-        self.stats_ = CacheStats()
+        # lifetime-scoped registry (NOT the engine's resettable stats
+        # registry): cache counters live exactly as long as the cached
+        # state they describe
+        self.registry = registry or MetricsRegistry()
+        self.stats_ = _CacheMetrics(self.registry)
 
     # -- trie walk ----------------------------------------------------------
 
@@ -146,8 +184,8 @@ class PrefixCache:
 
     def lookup(self, prompt: Seq[int]) -> CacheEntry | None:
         """Longest cached prefix of ``prompt`` on the chunk grid."""
-        self.stats_.lookups += 1
-        self.stats_.lookup_tokens += len(prompt)
+        self.stats_.inc("lookups")
+        self.stats_.inc("lookup_tokens", len(prompt))
         node, best = self.root, None
         for key in self._chunks(prompt):
             node = node.children.get(key)
@@ -156,11 +194,11 @@ class PrefixCache:
             if node.entry is not None:
                 best = node
         if best is None:
-            self.stats_.misses += 1
+            self.stats_.inc("misses")
             return None
         self._touch(best)
-        self.stats_.hits += 1
-        self.stats_.hit_tokens += best.entry.n_tokens
+        self.stats_.inc("hits")
+        self.stats_.inc("hit_tokens", best.entry.n_tokens)
         return best.entry
 
     def insert(self, prompt: Seq[int], n_tokens: int, state, logits) -> bool:
@@ -181,15 +219,15 @@ class PrefixCache:
                 nxt = node.children[key] = _Node(node, key)
             node = nxt
         if node.entry is not None:
-            self.stats_.duplicate_inserts += 1
+            self.stats_.inc("duplicate_inserts")
             self._touch(node)
             return False
         node.entry = CacheEntry(state=state, logits=logits,
                                 n_tokens=n_tokens, nbytes=nbytes)
         self._lru[node] = None
-        self.stats_.inserts += 1
-        self.stats_.entries += 1
-        self.stats_.bytes += nbytes
+        self.stats_.inc("inserts")
+        self.stats_.add("entries", 1)
+        self.stats_.add("bytes", nbytes)
         self._evict(keep=node)
         return True
 
@@ -199,10 +237,10 @@ class PrefixCache:
         self._lru.move_to_end(node)
 
     def _over_budget(self) -> bool:
-        if self.budget_bytes > 0 and self.stats_.bytes > self.budget_bytes:
+        if self.budget_bytes > 0 and self.stats_["bytes"] > self.budget_bytes:
             return True
         return bool(self.max_entries
-                    and self.stats_.entries > self.max_entries)
+                    and self.stats_["entries"] > self.max_entries)
 
     def _evict(self, keep: _Node | None = None) -> None:
         while self._over_budget():
@@ -213,9 +251,9 @@ class PrefixCache:
             self._drop(victim)
 
     def _drop(self, node: _Node) -> None:
-        self.stats_.bytes -= node.entry.nbytes
-        self.stats_.entries -= 1
-        self.stats_.evictions += 1
+        self.stats_.add("bytes", -node.entry.nbytes)
+        self.stats_.add("entries", -1)
+        self.stats_.inc("evictions")
         node.entry = None
         # prune entry-less leaf chains so the trie doesn't accumulate
         # skeleton paths for evicted prefixes
@@ -233,5 +271,5 @@ class PrefixCache:
         """Drop every entry (metrics keep accumulating)."""
         self.root = _Node()
         self._lru.clear()
-        self.stats_.bytes = 0
-        self.stats_.entries = 0
+        self.stats_.add("bytes", -self.stats_["bytes"])
+        self.stats_.add("entries", -self.stats_["entries"])

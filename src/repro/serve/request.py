@@ -86,7 +86,10 @@ class Sequence:
     # timing
     t_submit: float = field(default_factory=time.perf_counter)
     t_first_token: float | None = None
+    t_last_token: float | None = None   # latest emitted token (ITL base)
     t_finish: float | None = None
+    itls: list[float] = field(default_factory=list)  # per-request
+    #   inter-token latencies (gap between consecutive emitted tokens)
 
     @property
     def request_id(self) -> str:

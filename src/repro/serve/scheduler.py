@@ -20,6 +20,7 @@ from __future__ import annotations
 import statistics
 from dataclasses import dataclass, field
 
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.request import Sequence, SequenceStatus
 
 
@@ -49,46 +50,130 @@ class StepMetrics:
     #   cache at admission this step (never scheduled, never charged)
 
 
+# keys in ``PrefixCache.stats()`` that accumulate monotonically (the
+# ``since_reset`` sub-dict diffs exactly these against the baseline
+# captured at the last ``Engine.reset_metrics``; bytes/entries are
+# point-in-time resident values and pass through undiffed)
+_CACHE_COUNTER_KEYS = ("lookups", "hits", "misses", "hit_tokens",
+                       "lookup_tokens", "inserts", "duplicate_inserts",
+                       "evictions")
+
+
 @dataclass
 class EngineStats:
     """Aggregated over a run; ``summary()`` gives the JSON-able dict.
 
+    A *view* over an ``obs.metrics.MetricsRegistry``: the record_*
+    calls publish into registry counters/histograms (one Prometheus
+    exposition covers the engine — ``launch/serve.py --metrics-file``),
+    and ``summary()`` derives its numbers back out of the registry.
+    ``steps`` keeps the per-step ``StepMetrics`` detail the summary's
+    occupancy/speculation means and tests key on.
+
     Contract: purely observational — nothing reads these back into
     scheduling decisions, so resetting them (``Engine.reset_metrics``)
     can never change emitted tokens. ``prefix_cache`` mirrors the
-    engine's ``PrefixCache.stats()`` after the latest step (lifetime
-    counters — a metrics reset does not clear the cache itself).
+    engine's ``PrefixCache.stats()`` after the latest step. Those are
+    *lifetime* counters (a metrics reset does not clear the cache
+    itself); ``summary()["prefix_cache"]["since_reset"]`` re-bases them
+    on the baseline captured at the last reset so post-reset summaries
+    are self-consistent.
     """
+    registry: MetricsRegistry = field(default_factory=MetricsRegistry)
     steps: list[StepMetrics] = field(default_factory=list)
-    ttfts: list[float] = field(default_factory=list)
-    completed: int = 0
     prefix_cache: dict | None = None
+    prefix_cache_baseline: dict | None = None
+
+    def __post_init__(self):
+        r = self.registry
+        self._steps_c = r.counter(
+            "engine_steps_total", "engine scheduler steps taken")
+        self._decode_c = r.counter(
+            "engine_decode_tokens_total", "tokens emitted by decode/verify")
+        self._prefill_c = r.counter(
+            "engine_prefill_tokens_total", "prompt tokens absorbed")
+        self._draft_c = r.counter(
+            "engine_draft_tokens_total", "speculative tokens drafted")
+        self._accept_c = r.counter(
+            "engine_accepted_tokens_total", "drafted tokens accepted")
+        self._rollback_c = r.counter(
+            "engine_rollbacks_total", "slots restored from snapshot")
+        self._cached_c = r.counter(
+            "engine_cached_prefix_tokens_total",
+            "prompt tokens served by the prefix cache at admission")
+        self._completed_c = r.counter(
+            "engine_completed_requests_total", "requests finished")
+        self._queue_g = r.gauge(
+            "engine_queue_depth", "admission queue depth after the step")
+        self._occupancy_g = r.gauge(
+            "engine_slot_occupancy", "fraction of slots held")
+        self._ttft_h = r.histogram(
+            "engine_ttft_seconds", "time to first token per request")
+        self._itl_h = r.histogram(
+            "engine_itl_seconds", "inter-token latency per emitted token")
+        self._wall_h = r.histogram(
+            "engine_step_wall_seconds", "wall time per engine step")
 
     def record_step(self, m: StepMetrics) -> None:
         self.steps.append(m)
+        self._steps_c.inc()
+        self._decode_c.inc(m.decode_tokens)
+        self._prefill_c.inc(m.prefill_tokens)
+        self._draft_c.inc(m.draft_tokens)
+        self._accept_c.inc(m.accepted_tokens)
+        self._rollback_c.inc(m.rollbacks)
+        self._cached_c.inc(m.cached_prefix_tokens)
+        self._queue_g.set(m.queue_depth)
+        self._occupancy_g.set(m.occupancy)
+        self._wall_h.observe(m.wall_s)
 
     def record_first_token(self, ttft: float) -> None:
-        self.ttfts.append(ttft)
+        self._ttft_h.observe(ttft)
+
+    def record_itl(self, itl: float) -> None:
+        self._itl_h.observe(itl)
 
     def record_finish(self) -> None:
-        self.completed += 1
+        self._completed_c.inc()
+
+    # views kept for callers that predate the registry migration
+    @property
+    def ttfts(self) -> list[float]:
+        return list(self._ttft_h.samples)
+
+    @property
+    def itls(self) -> list[float]:
+        return list(self._itl_h.samples)
+
+    @property
+    def completed(self) -> int:
+        return int(self._completed_c.value)
 
     def summary(self) -> dict:
-        wall = sum(m.wall_s for m in self.steps)
-        dec = sum(m.decode_tokens for m in self.steps)
-        pre = sum(m.prefill_tokens for m in self.steps)
-        drafted = sum(m.draft_tokens for m in self.steps)
-        accepted = sum(m.accepted_tokens for m in self.steps)
+        wall = self._wall_h.sum
+        dec = int(self._decode_c.value)
+        pre = int(self._prefill_c.value)
+        drafted = int(self._draft_c.value)
+        accepted = int(self._accept_c.value)
+        ttft, itl = self._ttft_h, self._itl_h
         out = {
-            "steps": len(self.steps),
+            "steps": int(self._steps_c.value),
             "completed_requests": self.completed,
             "wall_s": wall,
             "decode_tokens": dec,
             "prefill_tokens": pre,
             "decode_tok_s": dec / wall if wall else 0.0,
             "prefill_tok_s": pre / wall if wall else 0.0,
-            "ttft_mean_s": statistics.mean(self.ttfts) if self.ttfts else 0.0,
-            "ttft_max_s": max(self.ttfts) if self.ttfts else 0.0,
+            "ttft_mean_s": (statistics.mean(ttft.samples)
+                            if ttft.samples else 0.0),
+            "ttft_max_s": max(ttft.samples) if ttft.samples else 0.0,
+            "ttft_p50_s": ttft.quantile(0.50),
+            "ttft_p95_s": ttft.quantile(0.95),
+            "ttft_p99_s": ttft.quantile(0.99),
+            "itl_mean_s": itl.mean,
+            "itl_p50_s": itl.quantile(0.50),
+            "itl_p95_s": itl.quantile(0.95),
+            "itl_p99_s": itl.quantile(0.99),
             "mean_occupancy": (statistics.mean(m.occupancy
                                                for m in self.steps)
                                if self.steps else 0.0),
@@ -98,14 +183,23 @@ class EngineStats:
                 "draft_tokens": drafted,
                 "accepted_tokens": accepted,
                 "acceptance_rate": accepted / drafted,
-                "rollbacks": sum(m.rollbacks for m in self.steps),
+                "rollbacks": int(self._rollback_c.value),
                 "mean_speculate_k": statistics.mean(
                     m.speculate_k for m in self.steps if m.speculate_k),
             })
-        cached = sum(m.cached_prefix_tokens for m in self.steps)
         if self.prefix_cache is not None:   # shared-prefix cache enabled
-            out["cached_prefix_tokens"] = cached
-            out["prefix_cache"] = self.prefix_cache
+            out["cached_prefix_tokens"] = int(self._cached_c.value)
+            out["prefix_cache"] = dict(self.prefix_cache)
+            base = self.prefix_cache_baseline or {}
+            since = {k: self.prefix_cache[k] - base.get(k, 0)
+                     for k in _CACHE_COUNTER_KEYS
+                     if k in self.prefix_cache}
+            since["hit_rate"] = (since["hits"] / since["lookups"]
+                                 if since.get("lookups") else 0.0)
+            since["token_reuse"] = (
+                since["hit_tokens"] / since["lookup_tokens"]
+                if since.get("lookup_tokens") else 0.0)
+            out["prefix_cache"]["since_reset"] = since
         return out
 
 
@@ -120,12 +214,25 @@ class Scheduler:
     (their chunks simply never appear in the sequence's plan), which is
     what lets a cache-hit engine spend its budget on other sequences'
     work instead.
+
+    ``registry`` (optional, rebindable — the engine re-points it at the
+    fresh registry on ``reset_metrics``): planning counters published
+    per ``plan()`` call; observational only, never read back.
     """
 
-    def __init__(self, token_budget: int):
+    def __init__(self, token_budget: int,
+                 registry: MetricsRegistry | None = None):
         if token_budget < 1:
             raise ValueError("token_budget must be >= 1")
         self.token_budget = token_budget
+        self.registry = registry
+
+    def bind_registry(self, registry: MetricsRegistry | None) -> None:
+        self.registry = registry
+        if registry is not None:
+            registry.gauge("scheduler_token_budget",
+                           "per-step scheduled-token ceiling"
+                           ).set(self.token_budget)
 
     @staticmethod
     def decode_cost(n_decoding: int, draft_k: int = 0) -> int:
@@ -145,4 +252,12 @@ class Scheduler:
         prefill = sorted((s for s in sequences
                           if s.status is SequenceStatus.PREFILLING),
                          key=lambda s: s.t_submit)
+        if self.registry is not None:
+            r = self.registry
+            r.counter("scheduler_plans_total",
+                      "step plans produced").inc()
+            r.counter("scheduler_decode_slots_planned_total",
+                      "decoding sequences planned").inc(len(decode))
+            r.counter("scheduler_prefill_seqs_planned_total",
+                      "prefilling sequences planned").inc(len(prefill))
         return StepPlan(decode=decode, prefill=prefill)

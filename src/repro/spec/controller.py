@@ -17,12 +17,23 @@ throughput, never the stream.
 from __future__ import annotations
 
 from repro.configs.base import SpecConfig
+from repro.obs.metrics import MetricsRegistry
 
 
 class DraftController:
-    """Tracks acceptance and serves the current draft length ``k``."""
+    """Tracks acceptance and serves the current draft length ``k``.
 
-    def __init__(self, cap: int, spec: SpecConfig | None = None):
+    With a ``registry`` (the engine passes its ``EngineStats``
+    registry), observations publish into ``spec_*`` metrics —
+    ``spec_drafted_tokens_total`` / ``spec_accepted_tokens_total``
+    counters and ``spec_draft_k`` / ``spec_acceptance_ewma`` gauges —
+    instead of living only in controller attributes; the attributes
+    remain as views for existing callers. Observational only: the
+    resize policy reads its own EWMA, never the registry.
+    """
+
+    def __init__(self, cap: int, spec: SpecConfig | None = None,
+                 registry: MetricsRegistry | None = None):
         if cap < 1:
             raise ValueError("draft-length cap must be >= 1")
         self.cap = cap
@@ -31,6 +42,22 @@ class DraftController:
         # neutral prior between the two thresholds: no resize until
         # real observations push the EWMA out of the dead band
         self.rate = 0.5 * (self.spec.grow_above + self.spec.shrink_below)
+        self._drafted_c = self._accepted_c = None
+        self._k_g = self._rate_g = None
+        if registry is not None:
+            self._drafted_c = registry.counter(
+                "spec_drafted_tokens_total",
+                "drafted tokens observed by the controller")
+            self._accepted_c = registry.counter(
+                "spec_accepted_tokens_total",
+                "drafted tokens accepted by greedy verification")
+            self._k_g = registry.gauge(
+                "spec_draft_k", "current adaptive draft length")
+            self._k_g.set(self.k)
+            self._rate_g = registry.gauge(
+                "spec_acceptance_ewma",
+                "acceptance EWMA driving draft-length resizing")
+            self._rate_g.set(self.rate)
         self.observed_drafted = 0
         self.observed_accepted = 0
 
@@ -44,12 +71,18 @@ class DraftController:
         self.observed_accepted += accepted
         w = self.spec.ewma
         self.rate = (1.0 - w) * self.rate + w * (accepted / drafted)
+        if self._drafted_c is not None:
+            self._drafted_c.inc(drafted)
+            self._accepted_c.inc(accepted)
+            self._rate_g.set(self.rate)
         if not self.spec.adaptive:
             return
         if self.rate > self.spec.grow_above:
             self.k = min(self.k * 2, self.cap)
         elif self.rate < self.spec.shrink_below:
             self.k = max(self.k // 2, 1)
+        if self._k_g is not None:
+            self._k_g.set(self.k)
 
     @property
     def acceptance_rate(self) -> float:

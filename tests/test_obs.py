@@ -1,0 +1,363 @@
+"""Observability layer (src/repro/obs/): tracer, metrics, decisions.
+
+Three invariants matter:
+  * off = free and invisible — a disabled tracer/decision-log allocates
+    nothing and the instrumented code paths behave identically
+    (tests/test_serve.py carries the end-to-end bit-identical-streams
+    check);
+  * on = well-formed — traces pass the Chrome-trace validator, the
+    exposition passes the Prometheus validator, decision records carry
+    the full audit schema;
+  * views agree — ``EngineStats.summary()`` numbers are the registry's
+    numbers, and ``since_reset`` prefix-cache deltas are
+    self-consistent after ``reset_metrics()``.
+"""
+
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import backend as B
+from repro.models import model as M
+from repro.obs import decisions as OD
+from repro.obs import validate as V
+from repro.obs.metrics import (Histogram, MetricsRegistry, render_all)
+from repro.obs.trace import Tracer
+from repro.serve import Engine, EngineConfig, Request
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+def test_tracer_disabled_allocates_nothing():
+    tr = Tracer()
+    with tr.span("outer", foo=1) as sp:
+        sp.set("bar", 2)
+        tr.instant("marker")
+    assert tr.events == []
+    # the null span is one shared singleton, not a per-call allocation
+    assert tr.span("a") is tr.span("b")
+
+
+def test_tracer_nesting_and_chrome_validity():
+    tr = Tracer()
+    tr.enable()
+    with tr.span("step", step_num=0):
+        with tr.span("admit"):
+            pass
+        with tr.span("decode", compile_key=("decode", 2), slots=2):
+            pass
+    with tr.span("step", step_num=1):
+        with tr.span("decode", compile_key=("decode", 2)):
+            pass
+    doc = tr.export()
+    assert V.validate_chrome_trace(
+        doc, require_spans=("step", "admit", "decode")) == []
+    # B/E pairs per span, in nesting order
+    phs = [(e["name"], e["ph"]) for e in doc["traceEvents"]]
+    assert phs == [("step", "B"), ("admit", "B"), ("admit", "E"),
+                   ("decode", "B"), ("decode", "E"), ("step", "E"),
+                   ("step", "B"), ("decode", "B"), ("decode", "E"),
+                   ("step", "E")]
+    # first dispatch per compile_key is tagged, repeats are not
+    decodes = [e for e in doc["traceEvents"]
+               if e["name"] == "decode" and e["ph"] == "B"]
+    assert decodes[0]["args"]["compile"] is True
+    assert "compile" not in decodes[1].get("args", {})
+
+
+def test_tracer_error_span_still_closes():
+    tr = Tracer()
+    tr.enable()
+    with pytest.raises(RuntimeError):
+        with tr.span("boom"):
+            raise RuntimeError("x")
+    doc = tr.export()
+    assert V.validate_chrome_trace(doc) == []
+    end = doc["traceEvents"][-1]
+    assert end["ph"] == "E" and end["args"]["error"] == "RuntimeError"
+
+
+def test_trace_validator_rejects_malformed():
+    bad_nesting = {"traceEvents": [
+        {"name": "a", "ph": "B", "ts": 1, "pid": 1, "tid": 1},
+        {"name": "b", "ph": "E", "ts": 2, "pid": 1, "tid": 1}]}
+    assert V.validate_chrome_trace(bad_nesting)
+    unclosed = {"traceEvents": [
+        {"name": "a", "ph": "B", "ts": 1, "pid": 1, "tid": 1}]}
+    assert V.validate_chrome_trace(unclosed)
+    backwards = {"traceEvents": [
+        {"name": "a", "ph": "B", "ts": 5, "pid": 1, "tid": 1},
+        {"name": "a", "ph": "E", "ts": 4, "pid": 1, "tid": 1}]}
+    assert V.validate_chrome_trace(backwards)
+    assert V.validate_chrome_trace({"traceEvents": []})
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_counters_gauges_labels():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs_total", "requests")
+    c.inc()
+    c.inc(3)
+    assert reg.value("reqs_total") == 4
+    with pytest.raises(ValueError):
+        c.inc(-1)                       # counters are monotone
+    # create-or-return: second registration is the same object
+    assert reg.counter("reqs_total") is c
+    with pytest.raises(ValueError):
+        reg.gauge("reqs_total")         # a name can never change kind
+
+    g = reg.gauge("depth")
+    g.set(5)
+    g.dec(2)
+    assert reg.value("depth") == 3
+
+    fam = reg.counter("by_site_total", "per site", labelnames=("site",))
+    fam.labels(site="decode").inc(2)
+    fam.labels(site="prefill").inc()
+    assert fam.labels(site="decode").value == 2
+    text = reg.render()
+    assert 'by_site_total{site="decode"} 2' in text
+    assert V.validate_prometheus_text(
+        text, require_metrics=("reqs_total", "depth", "by_site_total")) == []
+
+
+def test_histogram_percentiles_exact_then_bucketed():
+    h = Histogram(buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.2, 0.3, 0.4, 5.0):
+        h.observe(v)
+    assert h.quantile(0.0) == pytest.approx(0.05)
+    assert h.quantile(0.5) == pytest.approx(0.3)   # exact from samples
+    assert h.quantile(1.0) == pytest.approx(5.0)
+    assert h.mean == pytest.approx(sum((0.05, 0.2, 0.3, 0.4, 5.0)) / 5)
+
+    # past the cap: bucket interpolation, still monotone and bounded
+    h2 = Histogram(buckets=(0.1, 1.0, 10.0))
+    h2.MAX_SAMPLES = 4
+    orig, Histogram.MAX_SAMPLES = Histogram.MAX_SAMPLES, 4
+    try:
+        for v in (0.05, 0.2, 0.3, 0.4, 5.0, 0.5):
+            h2.observe(v)
+    finally:
+        Histogram.MAX_SAMPLES = orig
+    assert len(h2.samples) < h2.count
+    qs = [h2.quantile(q) for q in (0.1, 0.5, 0.9, 1.0)]
+    assert qs == sorted(qs)
+    assert 0.0 <= qs[0] and qs[-1] <= 10.0
+
+
+def test_histogram_exposition_cumulative():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_seconds", "latency", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 2.0):
+        h.observe(v)
+    text = reg.render()
+    assert V.validate_prometheus_text(text) == []
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="1"} 2' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 3' in text
+    assert "lat_seconds_count 3" in text
+
+
+def test_render_all_rejects_duplicates():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("x_total")
+    b.counter("x_total")
+    with pytest.raises(ValueError, match="duplicate"):
+        render_all(a, b)
+    c = MetricsRegistry()
+    c.counter("y_total")
+    assert V.validate_prometheus_text(render_all(a, c)) == []
+
+
+def test_prometheus_validator_rejects_malformed():
+    assert V.validate_prometheus_text("x_total{bad 1\n")      # unparseable
+    assert V.validate_prometheus_text("x_total 1\n")          # no TYPE
+    assert V.validate_prometheus_text(
+        "# TYPE x gauge\nx NaN\n")                            # NaN
+    noncum = ("# TYPE h histogram\n"
+              'h_bucket{le="0.1"} 5\nh_bucket{le="+Inf"} 3\nh_count 3\n')
+    assert V.validate_prometheus_text(noncum)
+
+
+# ---------------------------------------------------------------------------
+# Decision log
+# ---------------------------------------------------------------------------
+
+def test_select_backend_records_decisions(tmp_path):
+    cfg = get_config("stablelm-1.6b").reduced()
+    with OD.log.capture() as records:
+        for site, n in (("full", 64), ("prefill", 64), ("decode", 1)):
+            B.select_backend(cfg, N=n, d=cfg.dim_head, site=site)
+        B.select_backend(cfg, N=1, d=cfg.dim_head, site="decode",
+                         cache_kind="kv")
+    assert not OD.log.enabled            # capture() restored the state
+    assert V.validate_decision_log(records) == []
+    sites = [r["site"] for r in records]
+    assert sites == ["full", "prefill", "decode", "decode"]
+    assert records[-1]["cache_kind"] == "kv"
+    assert records[-1]["backend"] == "direct"
+    for r in records:
+        assert r["n0"] > r["n1"] > 0     # Eq. (7)/(9) attached to every row
+
+    path = tmp_path / "decisions.jsonl"
+    OD.log.records[:] = records
+    OD.log.write_jsonl(str(path))
+    assert OD.read_jsonl(str(path)) == records
+
+    from benchmarks.crossover import audit_decision_log
+    audit = audit_decision_log(records)
+    assert audit["n0_n1_mismatches"] == []
+    for dv in audit["divergences"]:
+        assert dv["reason"]              # every divergence is explained
+    OD.log.records.clear()
+
+
+def test_decision_validator_rejects_malformed():
+    assert V.validate_decision_log([])
+    assert V.validate_decision_log([{"seq": 0}])
+    good = {k: 1 for k in V.DECISION_KEYS}
+    assert V.validate_decision_log([dict(good, seq=0),
+                                    dict(good, seq=2)])  # not dense
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: trace coverage, exposition, since_reset view
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_artifacts(tmp_path_factory):
+    """One traced engine session; every downstream assertion reads these.
+
+    Prompts share a prefix and the cache is on, so admission exercises
+    prefix_lookup; two requests and gen=6 exercise batched decode."""
+    from repro.obs.trace import tracer
+
+    cfg = get_config("stablelm-1.6b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=2, prefill_chunk=8, token_budget=24, max_seq_len=48,
+        prefix_cache_mb=8.0))
+    shared = [int(t) for t in jax.random.randint(
+        jax.random.PRNGKey(5), (16,), 0, cfg.vocab)]
+
+    def run(tag):
+        for i in range(2):
+            eng.submit(Request(f"{tag}{i}", shared + [7 + i],
+                               max_new_tokens=6))
+        for _ in eng.run():
+            pass
+
+    tracer.clear()
+    tracer.enable()
+    try:
+        run("a")                         # cold: inserts the shared prefix
+        eng.reset_metrics()
+        run("b")                         # warm: hits it, post-reset
+    finally:
+        tracer.disable()
+    doc = tracer.export()
+    tracer.clear()
+    return eng, doc, eng.render_metrics(), eng.stats.summary()
+
+
+def test_engine_trace_covers_phases(engine_artifacts):
+    _, doc, _, _ = engine_artifacts
+    assert V.validate_chrome_trace(doc, require_spans=(
+        "engine_step", "admit", "prefix_lookup", "prefill_chunk",
+        "decode_batch")) == []
+    compiles = [e for e in doc["traceEvents"]
+                if e.get("args", {}).get("compile")]
+    assert compiles, "no first-dispatch span was tagged compile=true"
+    assert json.dumps(doc)               # JSON-serializable end to end
+
+
+def test_engine_exposition_valid(engine_artifacts):
+    _, _, text, _ = engine_artifacts
+    assert V.validate_prometheus_text(text, require_metrics=(
+        "engine_steps_total", "engine_decode_tokens_total",
+        "engine_ttft_seconds", "engine_itl_seconds",
+        "prefix_cache_lookups_total", "prefix_cache_hits_total",
+        "scheduler_plans_total")) == []
+
+
+def test_summary_is_registry_view(engine_artifacts):
+    eng, _, _, s = engine_artifacts
+    reg = eng.stats.registry
+    assert s["decode_tokens"] == reg.value("engine_decode_tokens_total")
+    assert s["completed_requests"] == reg.value(
+        "engine_completed_requests_total")
+    for k in ("ttft_p50_s", "ttft_p95_s", "ttft_p99_s",
+              "itl_p50_s", "itl_p95_s", "itl_p99_s"):
+        assert k in s and s[k] >= 0.0
+    assert s["ttft_p50_s"] <= s["ttft_p95_s"] <= s["ttft_p99_s"]
+
+
+def test_prefix_cache_since_reset_self_consistent(engine_artifacts):
+    """Post-reset summaries must be self-consistent: the lifetime
+    counters keep the cold run's traffic, since_reset holds only the
+    warm run's — and its hit_rate is computed from its own deltas."""
+    eng, _, _, s = engine_artifacts
+    pc = s["prefix_cache"]
+    sr = pc["since_reset"]
+    assert sr["lookups"] == 2 and sr["hits"] == 2
+    assert sr["hit_rate"] == pytest.approx(1.0)
+    assert pc["lookups"] == 4            # lifetime: cold misses + warm hits
+    assert pc["hits"] == 2
+    assert sr["inserts"] == 0            # warm run inserted nothing new
+    assert pc["inserts"] >= 1
+
+
+def test_itl_tracked_per_request(engine_artifacts):
+    """Each request's per-token gaps land in its result and the
+    histogram: 2 runs x 2 requests x (6 tokens - 1 first) = 20 gaps
+    lifetime, 10 since the reset."""
+    eng, _, _, s = engine_artifacts
+    assert len(eng.stats.itls) == 10     # registry was reset mid-session
+    for res in eng.results.values():
+        assert len(res.itls) == 5
+        assert all(g >= 0.0 for g in res.itls)
+
+
+# ---------------------------------------------------------------------------
+# Serving benchmark document schema
+# ---------------------------------------------------------------------------
+
+def _cell():
+    return {"batch": 2, "prompt_len": 64, "gen_len": 16,
+            "naive_tok_s": 10.0, "engine_tok_s": 20.0,
+            "engine_kv_tok_s": 15.0, "speedup_vs_naive": 2.0,
+            "ttft_mean_s": 0.1, "ttft_p50_s": 0.1, "ttft_p95_s": 0.2,
+            "ttft_p99_s": 0.2, "itl_p50_s": 0.01, "itl_p95_s": 0.02,
+            "itl_p99_s": 0.02}
+
+
+def test_serving_doc_schema():
+    from benchmarks.run import validate_serving_doc
+
+    doc = {"name": "serving_throughput", "config": {}, "cells": [_cell()]}
+    assert validate_serving_doc(doc) == []
+
+    missing = {"name": "serving_throughput", "config": {},
+               "cells": [{k: v for k, v in _cell().items()
+                          if k != "itl_p99_s"}]}
+    assert any("itl_p99_s" in p for p in validate_serving_doc(missing))
+
+    nan = {"name": "serving_throughput", "config": {},
+           "cells": [dict(_cell(), engine_tok_s=float("nan"))]}
+    assert any("non-finite" in p for p in validate_serving_doc(nan))
+
+    spec_missing_ledger = {
+        "name": "serving_decode_heavy", "config": {},
+        "cells": [{"batch": 1, "drafter": "ngram", "speculate_k": 4,
+                   "tok_s": 5.0, "speedup": 1.2}]}
+    assert any("acceptance_rate" in p
+               for p in validate_serving_doc(spec_missing_ledger))
+
+    assert validate_serving_doc({"name": "nope"})

@@ -307,6 +307,51 @@ def test_prefill_state_parity_under_seq_mesh(setup):
     assert toks_mesh == toks_ref
 
 
+def test_observability_is_purely_observational(setup):
+    """The §4.6 contract: tracing, metrics resets, and the decision log
+    never leak into scheduling/selection/sampling. A greedy 2-request
+    session with reset_metrics() mid-run AND tracing/decision-logging
+    toggled mid-run streams bit-identical tokens vs an uninstrumented
+    engine."""
+    from repro.obs import decisions as OD
+    from repro.obs.trace import tracer
+
+    cfg, params = setup
+    prompts = {f"r{i}": _prompt(cfg, 12 + 5 * i, seed=40 + i)
+               for i in range(2)}
+    ecfg = EngineConfig(n_slots=2, prefill_chunk=8, token_budget=24,
+                        max_seq_len=64)
+
+    def session(instrumented):
+        eng = Engine(cfg, params, ecfg)
+        for rid, p in prompts.items():
+            eng.submit(Request(rid, p, max_new_tokens=8))
+        step = 0
+        while not eng.idle:
+            if instrumented:          # toggle everything mid-stream
+                if step == 1:
+                    tracer.enable()
+                    OD.log.enable()
+                if step == 3:
+                    eng.reset_metrics()
+                if step == 5:
+                    tracer.disable()
+                    OD.log.disable()
+            eng.step()
+            step += 1
+        return {rid: eng.results[rid].out_tokens for rid in prompts}
+
+    plain = session(instrumented=False)
+    try:
+        traced = session(instrumented=True)
+    finally:                          # never leak global switches
+        tracer.disable()
+        tracer.clear()
+        OD.log.disable()
+        OD.log.records.clear()
+    assert traced == plain
+
+
 def test_plan_chunks():
     assert plan_chunks(24, 8) == [8, 8, 8]
     assert plan_chunks(21, 8) == [8, 8, 4, 1]
