@@ -74,9 +74,52 @@ def crossover_n1(d: int) -> float:
     )
 
 
-def pick_mode(N: int, d: int, *, optimize_for: str = "speed") -> str:
-    """Paper's "and Back": choose direct vs efficient from the crossover."""
-    thresh = crossover_n0(d) if optimize_for == "speed" else crossover_n1(d)
+# Measured-crossover override hook (repro.tune installs one): a callable
+# ``hook(d, kind) -> float | None`` where kind is "n0" (speed, Eq. 7) or
+# "n1" (memory, Eq. 9). None falls through to the analytic value, so an
+# installed-but-sparse calibration table only overrides the head dims it
+# actually measured. Module-global on purpose: every pick_mode caller —
+# select_backend, select_serve_plan, attention-layer re-derivations at
+# trace time — must see the same thresholds or routing decisions split.
+_CROSSOVER_HOOK = None
+
+
+def set_crossover_hook(hook) -> None:
+    """Install (or with ``None`` clear) the measured-crossover hook."""
+    global _CROSSOVER_HOOK
+    _CROSSOVER_HOOK = hook
+
+
+def effective_n0(d: int) -> float:
+    """N0 with any calibrated override applied (else Eq. 7)."""
+    if _CROSSOVER_HOOK is not None:
+        v = _CROSSOVER_HOOK(d, "n0")
+        if v is not None:
+            return float(v)
+    return crossover_n0(d)
+
+
+def effective_n1(d: int) -> float:
+    """N1 with any calibrated override applied (else Eq. 9)."""
+    if _CROSSOVER_HOOK is not None:
+        v = _CROSSOVER_HOOK(d, "n1")
+        if v is not None:
+            return float(v)
+    return crossover_n1(d)
+
+
+def pick_mode(N: int, d: int, *, optimize_for: str = "speed",
+              n0: float | None = None, n1: float | None = None) -> str:
+    """Paper's "and Back": choose direct vs efficient from the crossover.
+
+    ``n0``/``n1`` pin explicit (e.g. site-calibrated) thresholds;
+    otherwise the effective values — calibrated when a tuning table is
+    installed (:func:`set_crossover_hook`), analytic Eq. (7)/(9) else —
+    decide."""
+    if optimize_for == "speed":
+        thresh = n0 if n0 is not None else effective_n0(d)
+    else:
+        thresh = n1 if n1 is not None else effective_n1(d)
     return "efficient" if N >= thresh else "direct"
 
 

@@ -85,10 +85,16 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_nom, acc_den, *,
                                              "out_scale", "interpret",
                                              "m_valid", "raw"))
 def taylor_direct_attention(q, k, v, *, causal: bool = False,
-                            block_q: int = 128, block_k: int = 128,
+                            block_q: int | None = None,
+                            block_k: int | None = None,
                             out_scale: bool = True, interpret: bool = False,
                             m_valid: int | None = None, raw: bool = False):
     """q, k, v: (BH, N, d) — q, k pre-normalized and α-scaled.
+
+    ``block_q``/``block_k``: grid block shapes; ``None`` (the default)
+    resolves through the installed tuning table's calibrated sweep
+    (repro.tune, falling back to 128). Resolution happens at trace
+    time — install the table before the first dispatch.
 
     ``m_valid``: number of real keys when k/v are zero-padded up to a
     block multiple (ops.py pad-and-mask path); keys ≥ m_valid are masked
@@ -101,6 +107,11 @@ def taylor_direct_attention(q, k, v, *, causal: bool = False,
     bh, n, d = q.shape
     m = k.shape[1]
     m_valid = m if m_valid is None else m_valid
+    if block_q is None or block_k is None:
+        from repro.tune.table import kernel_blocks
+        tq, tk = kernel_blocks(d)
+        block_q = tq if block_q is None else block_q
+        block_k = tk if block_k is None else block_k
     block_q = min(block_q, n)
     block_k = min(block_k, m)
     assert n % block_q == 0 and m % block_k == 0

@@ -186,12 +186,17 @@ def build_vhat(v, m_valid: int) -> jnp.ndarray:
 @functools.partial(jax.jit, static_argnames=("block_q", "block_k",
                                              "out_scale", "interpret",
                                              "m_valid"))
-def taylor_efficient_attention(q, k, v, *, block_q: int = 128,
-                               block_k: int = 128, out_scale: bool = True,
+def taylor_efficient_attention(q, k, v, *, block_q: int | None = None,
+                               block_k: int | None = None,
+                               out_scale: bool = True,
                                interpret: bool = False,
                                m_valid: int | None = None):
     """Non-causal efficient-TaylorShift, fused. q,k: α-scaled normalized
     (BH, N, d); v: (BH, M, d) raw values.
+
+    ``block_q``/``block_k``: ``None`` (the default) resolves through
+    the installed tuning table's calibrated block sweep (repro.tune,
+    falling back to 128); resolution happens at trace time.
 
     ``m_valid``: number of real keys when inputs are zero-padded up to a
     block multiple (ops.py pad-and-mask path). A padded key only enters
@@ -202,6 +207,11 @@ def taylor_efficient_attention(q, k, v, *, block_q: int = 128,
     bh, n, d = q.shape
     m = k.shape[1]
     m_valid = m if m_valid is None else m_valid
+    if block_q is None or block_k is None:
+        from repro.tune.table import kernel_blocks
+        tq, tk = kernel_blocks(d)
+        block_q = tq if block_q is None else block_q
+        block_k = tk if block_k is None else block_k
     block_q = min(block_q, n)
     block_k = min(block_k, m)
     assert n % block_q == 0 and m % block_k == 0

@@ -40,6 +40,7 @@ from repro.models import model as M
 from repro.obs import decisions as OD
 from repro.obs.trace import tracer
 from repro.serve import Engine, EngineConfig, Request
+from repro.tune import table as TT
 
 
 def serve_metrics_http(engine: Engine, port: int):
@@ -190,11 +191,35 @@ def main():
                          "http://localhost:PORT/metrics (0 = off)")
     ap.add_argument("--decision-log", default=None, metavar="PATH",
                     help="write every select_backend decision as JSONL")
+    ap.add_argument("--tuning-table", default=None, metavar="PATH",
+                    help="install a repro.tune calibration table: "
+                         "select_backend uses its measured N0/N1 instead "
+                         "of the analytic crossovers, and the Pallas "
+                         "kernels pick its swept block shapes")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run a quick calibration sweep on this backend "
+                         "before serving and install the result (pair "
+                         "with --tuning-table to also persist it)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced().with_(
         d_model=args.d_model, n_layers=args.n_layers)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    # calibration comes up FIRST: kernel block shapes resolve through
+    # the installed table at trace time, and the engine's ServePlan
+    # consults the measured crossovers when it picks the cache layout
+    if args.autotune:
+        from repro.tune.calibrate import calibrate
+        table = calibrate([cfg.head_dim], quick=True, verbose=True)
+        if args.tuning_table:
+            table.save(args.tuning_table)
+            print(f"calibration table -> {args.tuning_table}")
+        TT.install(table)
+    elif args.tuning_table:
+        TT.install(TT.TuningTable.load(args.tuning_table))
+        print(f"installed tuning table {args.tuning_table} "
+              f"({len(TT.active().entries)} entries)")
 
     # observability switches come up BEFORE the engine exists so the
     # ServePlan's select_backend calls land in the decision log and the

@@ -53,6 +53,7 @@ from typing import Callable
 from repro.core import taylor as T
 from repro.distributed import ctx
 from repro.obs import decisions as D
+from repro.tune import table as TU
 
 
 # ---------------------------------------------------------------------------
@@ -139,9 +140,10 @@ class Selection:
     seq_shards: int      # >1: run the causal scan sequence-parallel
     scan: str            # causal-scan core: sequential|parallel|seq-parallel
     chunk: int           # causal-scan chunk size (0 = n/a)
-    n0: float            # analytic crossovers at this head dim
-    n1: float
+    n0: float            # crossovers that governed this decision — analytic
+    n1: float            #   Eq. (7)/(9), or measured when a tuning table hit
     reason: str
+    provenance: str = "analytic"   # analytic | calibrated (repro.tune table)
 
     @property
     def name(self) -> str:
@@ -152,13 +154,15 @@ class Selection:
 # Cost model / mode resolution
 # ---------------------------------------------------------------------------
 
-def resolved_mode(cfg, N: int, d: int, *, causal: bool, c=None) -> str:
+def resolved_mode(cfg, N: int, d: int, *, causal: bool, c=None,
+                  n0: float | None = None, n1: float | None = None) -> str:
     """Pinned config mode, else the paper crossover with the mesh twist
-    (§Perf iteration 4) for non-causal sites."""
+    (§Perf iteration 4) for non-causal sites. ``n0``/``n1`` pin
+    calibrated thresholds from a measured-override table."""
     tc = cfg.taylor
     if tc.mode != "auto":
         return tc.mode
-    base = T.pick_mode(N, d, optimize_for=tc.optimize_for)
+    base = T.pick_mode(N, d, optimize_for=tc.optimize_for, n0=n0, n1=n1)
     c = c or ctx.get()
     if (base == "direct" and not causal and c.enabled
             and c.mesh is not None):
@@ -212,18 +216,34 @@ def select_backend(cfg, *, N: int, d: int, site: str = "full",
     tc = cfg.taylor
     gqa = cfg.kv_heads != cfg.n_heads
     n0, n1 = T.crossover_n0(d), T.crossover_n1(d)
+    # measured-override table (repro.tune): the most specific entry for
+    # (d, H, site) replaces the analytic thresholds BEFORE any routing
+    # below reads them, and the provenance travels with the Selection —
+    # the decision log shows exactly which choices ran on measurements
+    provenance, cal_n0, cal_n1 = "analytic", None, None
+    table = TU.active()
+    if table is not None:
+        entry = table.lookup(d=d, H=cfg.n_heads, site=site)
+        if entry is not None and (entry.n0 is not None
+                                  or entry.n1 is not None):
+            provenance = "calibrated"
+            cal_n0, cal_n1 = entry.n0, entry.n1
+            if entry.n0 is not None:
+                n0 = float(entry.n0)
+            if entry.n1 is not None:
+                n1 = float(entry.n1)
 
     def sel(name, mode="", repeat_kv=False, seq_shards=1, scan="",
             chunk=0, reason=""):
         s = Selection(REGISTRY[name], mode, repeat_kv, seq_shards,
-                      scan, chunk, n0, n1, reason)
+                      scan, chunk, n0, n1, reason, provenance)
         if D.log.enabled:   # audit every resolved selection (obs/decisions)
             D.log.record(site=site, N=N, d=d, H=cfg.n_heads,
                          kv_heads=cfg.kv_heads, causal=causal,
                          cache_kind=cache_kind, backend=s.name, mode=s.mode,
                          repeat_kv=s.repeat_kv, seq_shards=s.seq_shards,
                          scan=s.scan, chunk=s.chunk, n0=s.n0, n1=s.n1,
-                         reason=s.reason)
+                         reason=s.reason, provenance=s.provenance)
         return s
 
     if site == "decode":
@@ -268,7 +288,8 @@ def select_backend(cfg, *, N: int, d: int, site: str = "full",
                           "(causal_taylorshift initial_state=…)")
 
     # --- full-sequence -----------------------------------------------------
-    mode = resolved_mode(cfg, N, d, causal=causal, c=c)
+    mode = resolved_mode(cfg, N, d, causal=causal, c=c,
+                         n0=cal_n0, n1=cal_n1)
     kernel_ok = (tc.use_kernel and tc.normalize_inputs
                  and not c.multi_device)
     if kernel_ok and causal and mode != "direct":
@@ -325,9 +346,13 @@ def select_serve_plan(cfg, *, max_seq_len: int, prefill_chunk: int,
     d = cfg.dim_head
     reason = "cache_kind pinned by config"
     if cache_kind == "auto":
+        # effective_n1 consults the installed tuning-table hook, so a
+        # calibrated memory crossover moves the "and Back" cache choice
+        n1 = T.effective_n1(d)
         mode = T.pick_mode(max_seq_len, d, optimize_for="memory")
+        how = "measured" if n1 != T.crossover_n1(d) else "analytic"
         cache_kind = "taylor" if mode == "efficient" else "kv"
-        reason = (f"memory crossover N1(d={d})={T.crossover_n1(d):.0f} vs "
+        reason = (f"{how} memory crossover N1(d={d})={n1:.0f} vs "
                   f"max_seq_len={max_seq_len} -> {cache_kind}")
     return ServePlan(
         cache_kind=cache_kind,
@@ -367,5 +392,6 @@ def report(cfg, *, N: int, d: int, mesh=None) -> dict:
         s = select_backend(cfg, N=n, d=d, site=site, causal=causal,
                            mesh=mesh)
         out[site] = {"backend": s.name, "mode": s.mode,
-                     "seq_shards": s.seq_shards, "reason": s.reason}
+                     "seq_shards": s.seq_shards, "reason": s.reason,
+                     "provenance": s.provenance}
     return out

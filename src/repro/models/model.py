@@ -765,6 +765,91 @@ def cache_reset_slot(cache, slot):
     return cache_scatter_slot(cache, jax.tree.map(jnp.zeros_like, sub), slot)
 
 
+def cache_merge_slots(mask, new, old):
+    """Per-slot select between two pool caches: slot i takes ``new``
+    where ``mask[i]`` and keeps ``old`` otherwise — the write-back of a
+    batched pool-level prefill, protecting decoding slots whose rows
+    computed on throwaway tokens. ``mask``: (slots,) bool."""
+    def sel(axis):
+        def f(n, o):
+            m = mask.reshape((1,) * axis + (-1,)
+                             + (1,) * (n.ndim - axis - 1))
+            return jnp.where(m, n, o)
+        return f
+    return {
+        "groups": [jax.tree.map(sel(1), gn, go)
+                   for gn, go in zip(new["groups"], old["groups"])],
+        "rem": [jax.tree.map(sel(0), rn, ro)
+                for rn, ro in zip(new["rem"], old["rem"])],
+        "pos": jnp.where(mask, new["pos"], old["pos"]),
+    }
+
+
+def _map_counters(tree, fn):
+    """Apply ``fn`` to every position-counter leaf of a decode cache:
+    ``pos`` dict entries (the top-level counter and each kv layer's) and
+    TaylorState ``n``. Non-counter leaves pass through untouched."""
+    if isinstance(tree, T.TaylorState):
+        return tree._replace(n=fn(tree.n))
+    if isinstance(tree, dict):
+        return {k: (fn(v) if k == "pos" else _map_counters(v, fn))
+                for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_map_counters(x, fn) for x in tree)
+    return tree
+
+
+def cache_slot_to_sequence(sub):
+    """Normalize a :func:`cache_gather_slot` result (size-1 slot dims,
+    per-slot counters) to the canonical single-sequence layout a private
+    :func:`prefill_chunk` produces — scalar/(layers,) counters. Needed
+    when a pool-resident prefill boundary becomes a prefix-cache entry:
+    entries must be layout-identical whichever path built them, so a
+    later hit resumes through the scalar-counter (bit-exact prefill)
+    body."""
+    return _map_counters(sub, lambda a: jnp.squeeze(a, -1))
+
+
+def cache_truncate(cache, n_tokens: int):
+    """Clamp every position counter of a kv decode cache to
+    ``n_tokens`` — the partial-prefix reuse primitive. kv rows are
+    positionally addressed and the cache attends with an exact-zero
+    mask at ``index >= pos``, so rows beyond the clamped counter are
+    unobservable: resuming prefill from the truncated cache is
+    bit-identical to a cold prefill of the matching ``n_tokens``-token
+    prefix. Taylor states are running sums, not positional rows — they
+    cannot be truncated (callers gate on ``cache_kind == "kv"``;
+    TaylorState leaves here raise)."""
+    for leaf in jax.tree.leaves(cache, is_leaf=lambda x: isinstance(
+            x, T.TaylorState)):
+        if isinstance(leaf, T.TaylorState):
+            raise ValueError("cache_truncate: Taylor states are prefix "
+                             "sums, not positional rows — kv caches only")
+    return _map_counters(cache, lambda a: jnp.minimum(a, n_tokens))
+
+
+def prefill_slots(params, cfg: ModelConfig, batch, cache, slot_mask):
+    """Batched pool-level prefill: absorb a (slots, C) token block
+    directly into the slot pool, advancing only the slots ``slot_mask``
+    selects. One dispatch covers every same-chunk-length prefilling
+    sequence; unselected slots (decoding, free) compute on throwaway
+    tokens and are restored bit-exactly by :func:`cache_merge_slots` —
+    the same fixed-shape discipline as the batched decode step.
+
+    The per-slot-counter body this runs (:func:`verify_chunk`'s) is
+    bit-identical to the scalar prefill body for Taylor caches — rows
+    are computationally independent, so batching cannot change a row's
+    float ops — which is what keeps pooled prefill streams equal to
+    per-sequence ones token for token. (kv caches attend over a
+    different extent per body and are NOT bit-identical across the two;
+    the engine keeps them on the per-sequence path.)
+
+    Returns (logits (slots, C, vocab), merged pool cache).
+    """
+    logits, new = prefill_from_state(params, cfg, batch, cache)
+    return logits, cache_merge_slots(slot_mask, new, cache)
+
+
 # ---------------------------------------------------------------------------
 # Analytic parameter counts (for MODEL_FLOPS = 6·N·D)
 # ---------------------------------------------------------------------------

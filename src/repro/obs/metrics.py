@@ -121,11 +121,17 @@ class Histogram(_Child):
         self.sum = 0.0
         self.count = 0
         self.samples: list[float] = []
+        self._min = math.inf
+        self._max = -math.inf
 
     def observe(self, value: float) -> None:
         self.sum += value
         self.count += 1
         self.bucket_counts[bisect.bisect_left(self.buckets, value)] += 1
+        if value < self._min:
+            self._min = value
+        if value > self._max:
+            self._max = value
         if len(self.samples) < self.MAX_SAMPLES:
             self.samples.append(value)
 
@@ -134,42 +140,49 @@ class Histogram(_Child):
         return self.sum / self.count if self.count else 0.0
 
     @property
+    def min(self) -> float:
+        return self._min if self.count else 0.0
+
+    @property
     def max(self) -> float:
-        if self.samples and len(self.samples) == self.count:
-            return max(self.samples)
-        # capped: the top bucket edge below the largest non-empty bucket
-        for i in range(len(self.bucket_counts) - 1, -1, -1):
-            if self.bucket_counts[i]:
-                return (self.buckets[i] if i < len(self.buckets)
-                        else float("inf"))
-        return 0.0
+        return self._max if self.count else 0.0
 
     def quantile(self, q: float) -> float:
-        """q in [0, 1]; 0 with no observations."""
+        """q in [0, 1]; nan with no observations."""
         if not 0.0 <= q <= 1.0:
             raise ValueError(f"quantile {q} outside [0, 1]")
         if not self.count:
-            return 0.0
+            return math.nan
         if self.samples and len(self.samples) == self.count:
             s = sorted(self.samples)
             pos = q * (len(s) - 1)
             lo = int(pos)
             hi = min(lo + 1, len(s) - 1)
             return s[lo] + (s[hi] - s[lo]) * (pos - lo)
-        # bucket interpolation on the cumulative counts
+        # bucket interpolation on the cumulative counts; the extreme
+        # quantiles and the interpolated value are pinned to the
+        # *observed* min/max (tracked in observe) so the fallback never
+        # extrapolates past values that actually occurred — quantile(1.0)
+        # of a capped histogram is the real max, not a bucket edge
+        if q == 0.0:
+            return self._min
+        if q == 1.0:
+            return self._max
         target = q * self.count
         cum = 0
         prev_edge = 0.0
+        est = self.buckets[-1]
         for i, n in enumerate(self.bucket_counts):
             if cum + n >= target and n:
                 edge = (self.buckets[i] if i < len(self.buckets)
                         else self.buckets[-1])
                 frac = (target - cum) / n
-                return prev_edge + (edge - prev_edge) * frac
+                est = prev_edge + (edge - prev_edge) * frac
+                break
             cum += n
             if i < len(self.buckets):
                 prev_edge = self.buckets[i]
-        return self.buckets[-1]
+        return min(max(est, self._min), self._max)
 
 
 class _Family:

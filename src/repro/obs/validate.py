@@ -173,7 +173,7 @@ def validate_prometheus_text(text: str, *,
 # ---------------------------------------------------------------------------
 
 DECISION_KEYS = ("seq", "site", "N", "d", "H", "cache_kind", "backend",
-                 "mode", "n0", "n1", "reason")
+                 "mode", "n0", "n1", "reason", "provenance")
 
 
 def validate_decision_log(records: list[dict]) -> list[str]:

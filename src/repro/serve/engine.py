@@ -76,6 +76,11 @@ class EngineConfig:
     seed: int = 0
     speculate_k: int = 0         # max draft length; 0 = no speculation
     spec: SpecConfig = field(default_factory=SpecConfig)
+    batch_prefill: bool = True   # pool-resident batched prefill: group
+    #   same-chunk-length prefilling sequences into ONE pool-level
+    #   dispatch per step (Taylor pools only — the per-slot body is
+    #   bit-identical to the scalar one there; kv pools keep the
+    #   per-sequence path)
     prefix_cache_mb: float = 0.0  # shared-prefix cache byte budget in MB
     #   (0 = cache off; <0 = on, unbounded)
     prefix: PrefixCacheConfig = field(default_factory=PrefixCacheConfig)
@@ -167,7 +172,11 @@ class Engine:
                 if econf.prefix_cache_mb > 0 else 0
             self.prefix_cache = PrefixCache(
                 econf.prefill_chunk,
-                budget_bytes=budget, max_entries=econf.prefix.max_entries)
+                budget_bytes=budget, max_entries=econf.prefix.max_entries,
+                # kv rows are positionally addressed, so entries can be
+                # truncated to any matching token depth (partial-prefix
+                # hits); Taylor prefix sums cannot
+                kv_partial=(self.plan.cache_kind == "kv"))
         self.sequences: dict[str, Sequence] = {}
         self.results: dict[str, Sequence] = {}
         self._slots: list[Sequence | None] = [None] * econf.n_slots
@@ -176,25 +185,68 @@ class Engine:
         # params travel as a jit *argument* (not a closure capture) so
         # the weights aren't baked into the jaxpr as constants
         self._params = params
+        # Pool-resident batched prefill is gated on the Taylor cache
+        # kind: for Taylor states the per-slot-counter prefill body is
+        # bit-identical to the scalar one (rows are computationally
+        # independent), so pooling cannot change any stream; kv caches
+        # attend over a different extent per body and stay per-sequence.
+        self._batch_prefill = (econf.batch_prefill
+                               and self.plan.cache_kind == "taylor")
         prefill_jit = jax.jit(
             lambda p, toks, cache: M.prefill_from_state(p, cfg,
                                                         {"tokens": toks},
                                                         cache))
-        decode_jit = jax.jit(
-            lambda p, toks, cache: M.decode_step(p, cfg,
-                                                 {"tokens": toks}, cache))
-        verify_jit = jax.jit(
-            lambda p, toks, cache: M.verify_chunk(p, cfg,
-                                                  {"tokens": toks}, cache))
+        if self._batch_prefill:
+            # Partially-prefilled state now lives in pool slots between
+            # steps, so whole-pool writers (decode/verify) must merge
+            # through a slot mask — unselected live slots keep their
+            # state bit-exactly instead of absorbing throwaway tokens.
+            def _masked(fn):
+                def run(p, toks, mask, cache):
+                    lg, nc = fn(p, cfg, {"tokens": toks}, cache)
+                    return lg, M.cache_merge_slots(mask, nc, cache)
+                return run
+            decode_jit = jax.jit(_masked(M.decode_step))
+            verify_jit = jax.jit(_masked(M.verify_chunk))
+            pool_prefill_jit = jax.jit(
+                lambda p, toks, mask, cache: M.prefill_slots(
+                    p, cfg, {"tokens": toks}, cache, mask))
+            self._pool_prefill_fn = lambda toks, mask, cache: \
+                pool_prefill_jit(self._params, toks, mask, cache)
+            # singleton groups bypass the full-batch dispatch: one
+            # gathered slot, batch-1 per-slot body, same bits. The
+            # gather -> prefill -> scatter round trip is fused into a
+            # single jit (slot index is a traced argument) so a
+            # singleton chunk costs exactly one dispatch, like the
+            # private-cache path; the canonical sequence-layout state
+            # comes back too, ready for a prefix-cache insert.
+            def _slot_prefill(p, toks, cache, slot):
+                sub = M.cache_gather_slot(cache, slot)
+                logits, sub = M.prefill_from_state(
+                    p, cfg, {"tokens": toks}, sub)
+                return (logits, M.cache_scatter_slot(cache, sub, slot),
+                        M.cache_slot_to_sequence(sub))
+            slot_prefill_jit = jax.jit(_slot_prefill)
+            self._slot_prefill_fn = lambda toks, cache, slot: \
+                slot_prefill_jit(self._params, toks, cache, slot)
+        else:
+            decode_jit = jax.jit(
+                lambda p, toks, mask, cache: M.decode_step(
+                    p, cfg, {"tokens": toks}, cache))
+            verify_jit = jax.jit(
+                lambda p, toks, mask, cache: M.verify_chunk(
+                    p, cfg, {"tokens": toks}, cache))
+            self._pool_prefill_fn = None
+            self._slot_prefill_fn = None
         rollback_jit = jax.jit(
             lambda p, cache, snap, slot, toks: M.verify_rollback(
                 p, cfg, cache, snap, slot, {"tokens": toks}))
         self._prefill_fn = lambda toks, cache: prefill_jit(
             self._params, toks, cache)
-        self._decode_fn = lambda toks, cache: decode_jit(
-            self._params, toks, cache)
-        self._verify_fn = lambda toks, cache: verify_jit(
-            self._params, toks, cache)
+        self._decode_fn = lambda toks, mask, cache: decode_jit(
+            self._params, toks, mask, cache)
+        self._verify_fn = lambda toks, mask, cache: verify_jit(
+            self._params, toks, mask, cache)
         self._rollback_fn = lambda cache, snap, slot, toks: rollback_jit(
             self._params, cache, snap, slot, toks)
         # speculative machinery (lazy import: repro.spec builds on the
@@ -303,7 +355,8 @@ class Engine:
                                      request=seq.request_id) as lk:
                         PF.start_prefill(seq, self.pool,
                                          self.econf.prefill_chunk,
-                                         self.prefix_cache)
+                                         self.prefix_cache,
+                                         pool_resident=self._batch_prefill)
                         lk.set("cached_tokens", seq.cached_tokens)
                     cached_tokens += seq.cached_tokens
                     admitted += 1
@@ -319,7 +372,7 @@ class Engine:
             # drafts, so an all-sampled batch takes the plain decode path
             # (one token per slot, no draft/verify/rollback work, no
             # budget surcharge).
-            decode_tokens = 0
+            decode_tokens = decode_charge = 0
             draft_tokens = accepted_tokens = rollbacks = k_step = 0
             spec_step = (self.drafter is not None
                          and any(self._temp(s) <= 0.0 for s in plan.decode))
@@ -328,17 +381,27 @@ class Engine:
                 (decode_tokens, draft_tokens, accepted_tokens,
                  rollbacks) = self._speculative_decode(plan.decode, k_step,
                                                        events)
-                budget -= self.scheduler.decode_cost(len(plan.decode),
-                                                     k_step)
+                # charge the k the controller actually used, then refund
+                # the verified-and-rolled-back drafts: the net equals
+                # the tokens that advanced a stream, so speculation plus
+                # prefix-cache hits can no longer double-charge the
+                # budget relative to the work that really ran
+                decode_charge = self.scheduler.decode_cost(
+                    len(plan.decode), k_step,
+                    rejected=draft_tokens - accepted_tokens)
+                budget -= decode_charge
             elif plan.decode:
                 with tracer.span("decode_batch",
                                  compile_key=("decode", self.pool.n_slots),
                                  slots=len(plan.decode)):
                     tokens = np.zeros((self.pool.n_slots, 1), np.int32)
+                    mask = np.zeros((self.pool.n_slots,), bool)
                     for s in plan.decode:
                         tokens[s.slot, 0] = s.next_token
+                        mask[s.slot] = True
                     logits, self.pool.cache = self._decode_fn(
-                        jnp.asarray(tokens), self.pool.cache)
+                        jnp.asarray(tokens), jnp.asarray(mask),
+                        self.pool.cache)
                     last = logits[:, -1]
                     # one batched argmax + one device sync covers every
                     # greedy row; skipped when the whole batch is sampled
@@ -352,39 +415,75 @@ class Engine:
                             events.append(
                                 self._emit(s, self._sample(s, last[s.slot])))
                 decode_tokens = len(plan.decode)
-                budget -= self.scheduler.decode_cost(len(plan.decode))
+                decode_charge = self.scheduler.decode_cost(len(plan.decode))
+                budget -= decode_charge
 
             # 3. chunked prefill under the remaining budget
             prefill_tokens = 0
             first = True
-            for s in plan.prefill:
-                while not s.prefill_done:
-                    c = s.next_chunk
-                    if not first and c > budget:
+            if self._batch_prefill:
+                # prefix-hit sequences resume on the private path
+                # (zero-copy seed, see prefill.start_prefill) and run
+                # first: a resumed suffix is the cheapest way to turn
+                # budget into a first token
+                resident = [s for s in plan.prefill if s.pool_resident]
+                for s in plan.prefill:
+                    if s.pool_resident:
+                        continue
+                    while not s.prefill_done:
+                        c = s.next_chunk
+                        if not first and c > budget:
+                            break
+                        with tracer.span(
+                                "prefill_chunk",
+                                compile_key=("prefill", c),
+                                request=s.request_id, chunk=c):
+                            prefill_tokens += PF.advance_prefill(
+                                s, self._prefill_fn, self.prefix_cache)
+                        budget -= c
+                        first = False
+                    if not s.prefill_done:
                         break
+                # then rounds of same-chunk-length groups over the
+                # pool-resident (cold) sequences, each ONE pooled
+                # dispatch over the full slot batch (fixed shapes)
+                while True:
+                    group = self.scheduler.group_prefill(
+                        resident, budget, first_exempt=first)
+                    if not group:
+                        break
+                    c = group[0].next_chunk
                     with tracer.span(
-                            "prefill_chunk",
-                            compile_key=("prefill", c),
-                            request=s.request_id, chunk=c):
-                        prefill_tokens += PF.advance_prefill(
-                            s, self._prefill_fn, self.prefix_cache)
-                    budget -= c
+                            "prefill_batch",
+                            compile_key=(("prefill_pool", c)
+                                         if len(group) > 1
+                                         else ("prefill_slot", c)),
+                            slots=len(group), chunk=c):
+                        prefill_tokens += PF.advance_prefill_batch(
+                            group, self.pool, self._pool_prefill_fn,
+                            self.prefix_cache, self._slot_prefill_fn)
+                    budget -= len(group) * c
                     first = False
-                if not s.prefill_done:
-                    break
-                # prompt fully absorbed: hand the state to the decode path
-                # and sample the first token from the last chunk's logits
-                self.pool.scatter(s.cache, s.slot)
-                s.cache = None
-                s.status = SequenceStatus.DECODING
-                if self.drafter is not None:
-                    self.drafter.on_ready(s)
-                s.t_first_token = time.perf_counter()
-                self.stats.record_first_token(s.ttft)
-                events.append(self._emit(s,
-                                         self._sample(s, s.last_logits[0, -1]),
-                                         first=True))
-                s.last_logits = None
+                for s in plan.prefill:
+                    if s.prefill_done:
+                        self._begin_decode(s, events)
+            else:
+                for s in plan.prefill:
+                    while not s.prefill_done:
+                        c = s.next_chunk
+                        if not first and c > budget:
+                            break
+                        with tracer.span(
+                                "prefill_chunk",
+                                compile_key=("prefill", c),
+                                request=s.request_id, chunk=c):
+                            prefill_tokens += PF.advance_prefill(
+                                s, self._prefill_fn, self.prefix_cache)
+                        budget -= c
+                        first = False
+                    if not s.prefill_done:
+                        break
+                    self._begin_decode(s, events)
 
         m = StepMetrics(
             step=self._step_idx, wall_s=time.perf_counter() - t0,
@@ -393,7 +492,8 @@ class Engine:
             active_decoding=len(plan.decode),
             draft_tokens=draft_tokens, accepted_tokens=accepted_tokens,
             rollbacks=rollbacks, speculate_k=k_step,
-            cached_prefix_tokens=cached_tokens)
+            cached_prefix_tokens=cached_tokens,
+            scheduled_tokens=decode_charge + prefill_tokens)
         self.stats.record_step(m)
         if self.prefix_cache is not None:
             self.stats.prefix_cache = self.prefix_cache.stats()
@@ -447,14 +547,16 @@ class Engine:
                          slots=len(decoding)):
             drafts = self.drafter.draft(decoding, k)
         tokens = np.zeros((self.pool.n_slots, k + 1), np.int32)
+        mask = np.zeros((self.pool.n_slots,), bool)
         for s in decoding:
             tokens[s.slot, 0] = s.next_token
             tokens[s.slot, 1:] = drafts[s.slot]
+            mask[s.slot] = True
         snap = self.pool.cache          # O(1): arrays are immutable
         with tracer.span("verify", compile_key=("verify", k + 1), k=k,
                          slots=len(decoding)):
             logits, self.pool.cache = self._verify_fn(
-                jnp.asarray(tokens), self.pool.cache)
+                jnp.asarray(tokens), jnp.asarray(mask), self.pool.cache)
             greedy = np.asarray(jnp.argmax(logits, axis=-1))  # (slots, k+1)
 
         # every decoding slot's k drafts are scored (and budgeted),
@@ -495,6 +597,23 @@ class Engine:
     # ------------------------------------------------------------------
     # Sampling / lifecycle internals
     # ------------------------------------------------------------------
+
+    def _begin_decode(self, s: Sequence, events: list[TokenEvent]) -> None:
+        """Prompt fully absorbed: hand the state to the decode path and
+        sample the first token from the last chunk's logits. Pool-
+        resident sequences already live in their slot; private ones
+        scatter in here."""
+        if not s.pool_resident:
+            self.pool.scatter(s.cache, s.slot)
+            s.cache = None
+        s.status = SequenceStatus.DECODING
+        if self.drafter is not None:
+            self.drafter.on_ready(s)
+        s.t_first_token = time.perf_counter()
+        self.stats.record_first_token(s.ttft)
+        events.append(self._emit(s, self._sample(s, s.last_logits[0, -1]),
+                                 first=True))
+        s.last_logits = None
 
     def _temp(self, seq: Sequence) -> float:
         """Effective temperature: per-request override, engine default."""

@@ -25,7 +25,9 @@ are never cached.
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
+from repro.models import model as M
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.request import Sequence
 
@@ -47,7 +49,8 @@ def plan_chunks(prompt_len: int, chunk: int) -> list[int]:
 
 
 def start_prefill(seq: Sequence, pool, prefill_chunk: int,
-                  prefix_cache: PrefixCache | None = None) -> None:
+                  prefix_cache: PrefixCache | None = None, *,
+                  pool_resident: bool = False) -> None:
     """Attach a cache and a chunk plan to a just-admitted sequence.
 
     With a prefix cache, the longest cached prefix of the prompt seeds
@@ -55,17 +58,30 @@ def start_prefill(seq: Sequence, pool, prefill_chunk: int,
     suffix is planned; a full-prompt hit leaves an empty plan and
     restores the boundary logits so the engine can emit the first token
     without any prefill dispatch.
+
+    ``pool_resident`` (batched multi-slot prefill): the sequence
+    prefills directly in its pool slot instead of a private cache —
+    a cold start needs no seeding at all (released slots are
+    zero-reset, exactly the fresh-cache state). ``seq.cache`` stays
+    ``None``. Prefix *hits* opt out and resume on the private path
+    even when the engine batches: the cached snapshot seeds
+    ``seq.cache`` zero-copy (a slot scatter is a real dispatch that
+    would land squarely on TTFT), the short resumed suffix runs the
+    cheapest per-chunk dispatch, and the state reaches the pool once,
+    at decode start — exactly the cold-path cost profile the cache is
+    supposed to beat.
     """
     hit = prefix_cache.lookup(seq.request.prompt) if prefix_cache else None
+    seq.pool_resident = pool_resident and hit is None
     if hit is not None:
-        seq.cache = hit.state
         seq.consumed = seq.cached_tokens = hit.n_tokens
         rest = len(seq.request.prompt) - hit.n_tokens
         seq.chunks = plan_chunks(rest, prefill_chunk) if rest else []
         if not rest:              # full-prompt hit: boundary logits are
             seq.last_logits = hit.logits   # the prompt's next-token row
+        seq.cache = hit.state
     else:
-        seq.cache = pool.new_sequence_cache()
+        seq.cache = None if pool_resident else pool.new_sequence_cache()
         seq.chunks = plan_chunks(len(seq.request.prompt), prefill_chunk)
         seq.consumed = 0
         seq.cached_tokens = 0
@@ -92,3 +108,67 @@ def advance_prefill(seq: Sequence, prefill_fn,
         prefix_cache.insert(seq.request.prompt, seq.consumed, seq.cache,
                             seq.last_logits[:, -1:])
     return c
+
+
+def advance_prefill_batch(group: list[Sequence], pool, pool_prefill_fn,
+                          prefix_cache: PrefixCache | None = None,
+                          slot_prefill_fn=None) -> int:
+    """Run one same-length prompt chunk for every sequence in ``group``
+    as a single pool-level dispatch. Returns tokens consumed.
+
+    ``pool_prefill_fn(tokens (slots, C) int32, mask (slots,) bool,
+    pool_cache) -> (logits, pool_cache)`` — the engine's jitted closure
+    over ``model.prefill_slots``. The dispatch always covers the full
+    slot batch (fixed shapes, no recompiles as group size varies);
+    non-member slots compute on zero tokens and keep their state
+    bit-exactly via the mask merge.
+
+    A *singleton* group takes ``slot_prefill_fn(tokens (1, C),
+    pool_cache, slot) -> (logits, pool_cache, seq_state)`` instead:
+    the full-batch dispatch would burn ``n_slots×`` the FLOPs of the
+    one chunk that matters — on a compute-bound host that waste dwarfs
+    the dispatch saving the pooled path exists for. The engine fuses
+    the gather -> batch-1 prefill -> scatter round trip into one jit,
+    so a singleton chunk costs exactly one dispatch, like the
+    private-cache path. The gathered sub-cache keeps its per-slot
+    ``(1,)`` counters, so the same verify body runs at batch 1 — rows
+    are computationally independent, so both paths stay bit-identical
+    to the scalar prefill. ``seq_state`` is the slot's post-chunk state
+    already normalized to the canonical single-sequence layout, ready
+    for a prefix-cache insert.
+
+    Full-chunk-grid boundaries are inserted into ``prefix_cache`` in
+    the canonical single-sequence layout (``cache_slot_to_sequence``),
+    so pooled and per-sequence prefill build interchangeable entries.
+    """
+    c = group[0].next_chunk
+    if len(group) == 1 and slot_prefill_fn is not None:
+        s = group[0]
+        lo = s.consumed
+        toks = jnp.asarray([s.request.prompt[lo:lo + c]], jnp.int32)
+        logits, pool.cache, state = slot_prefill_fn(toks, pool.cache,
+                                                    s.slot)
+        s.last_logits = logits
+        s.chunk_idx += 1
+        s.consumed += c
+        if prefix_cache is not None and c == prefix_cache.chunk_tokens:
+            prefix_cache.insert(s.request.prompt, s.consumed, state,
+                                s.last_logits[:, -1:])
+        return c
+    toks = np.zeros((pool.n_slots, c), np.int32)
+    mask = np.zeros((pool.n_slots,), bool)
+    for s in group:
+        lo = s.consumed
+        toks[s.slot] = s.request.prompt[lo:lo + c]
+        mask[s.slot] = True
+    logits, pool.cache = pool_prefill_fn(
+        jnp.asarray(toks), jnp.asarray(mask), pool.cache)
+    for s in group:
+        s.last_logits = logits[s.slot:s.slot + 1]
+        s.chunk_idx += 1
+        s.consumed += c
+        if prefix_cache is not None and c == prefix_cache.chunk_tokens:
+            state = M.cache_slot_to_sequence(pool.gather(s.slot))
+            prefix_cache.insert(s.request.prompt, s.consumed, state,
+                                s.last_logits[:, -1:])
+    return c * len(group)

@@ -41,7 +41,7 @@ sub-dict re-based on the last reset) and the Prometheus exposition.
 
 from __future__ import annotations
 
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from dataclasses import dataclass
 from typing import Sequence as Seq
 
@@ -105,6 +105,8 @@ class _CacheMetrics:
         "inserts": "new entries stored",
         "duplicate_inserts": "boundary already cached (touch only)",
         "evictions": "entries dropped by LRU/budget",
+        "partial_hits": "hits served by truncating a kv entry",
+        "truncated_tokens": "kv rows discarded by partial-hit truncation",
     }
     _GAUGES = {
         "bytes": "current resident entry bytes",
@@ -157,16 +159,32 @@ class PrefixCache:
     ``max_entries`` (0 = unbounded) bounds the entry count
     independently — useful when Taylor entries are so small the byte
     budget alone would let the trie grow wide.
+
+    ``kv_partial`` (kv caches only): kv rows are positionally
+    addressed, so an entry whose prompt shares only the first ``m``
+    tokens with a new prompt is still usable after clamping its
+    position counters to ``m`` (``models.model.cache_truncate``) — the
+    attend masks rows at ``index >= pos`` with exact zeros, so the
+    stale tail is unobservable and the resumed stream stays
+    bit-identical to a cold prefill. Partial hits return an
+    *ephemeral* ``CacheEntry`` (``logits=None``, ``n_tokens=m`` capped
+    at ``len(prompt) - 1`` so at least the final prompt token — whose
+    boundary logits no entry holds — is re-run); nothing new is
+    stored. Taylor states are running sums, not positional rows — the
+    flag must stay off for them (the engine gates it on the pool's
+    cache kind).
     """
 
     def __init__(self, chunk_tokens: int, budget_bytes: int = 0,
                  max_entries: int = 0,
-                 registry: MetricsRegistry | None = None):
+                 registry: MetricsRegistry | None = None,
+                 kv_partial: bool = False):
         if chunk_tokens < 1:
             raise ValueError("chunk_tokens must be >= 1")
         self.chunk_tokens = chunk_tokens
         self.budget_bytes = budget_bytes
         self.max_entries = max_entries
+        self.kv_partial = kv_partial
         self.root = _Node()
         self._lru: OrderedDict[_Node, None] = OrderedDict()
         # lifetime-scoped registry (NOT the engine's resettable stats
@@ -183,16 +201,26 @@ class PrefixCache:
                 for i in range(0, (len(prompt) // C) * C, C)]
 
     def lookup(self, prompt: Seq[int]) -> CacheEntry | None:
-        """Longest cached prefix of ``prompt`` on the chunk grid."""
+        """Longest cached prefix of ``prompt`` on the chunk grid —
+        extended past the grid by truncating a kv entry when
+        ``kv_partial`` (deepest match wins either way)."""
         self.stats_.inc("lookups")
         self.stats_.inc("lookup_tokens", len(prompt))
-        node, best = self.root, None
+        node, best, depth = self.root, None, 0
         for key in self._chunks(prompt):
-            node = node.children.get(key)
-            if node is None:
+            nxt = node.children.get(key)
+            if nxt is None:
                 break
+            node = nxt
+            depth += 1
             if node.entry is not None:
                 best = node
+        if self.kv_partial:
+            part = self._partial_entry(
+                prompt, node, depth,
+                best.entry.n_tokens if best is not None else 0)
+            if part is not None:
+                return part
         if best is None:
             self.stats_.inc("misses")
             return None
@@ -200,6 +228,57 @@ class PrefixCache:
         self.stats_.inc("hits")
         self.stats_.inc("hit_tokens", best.entry.n_tokens)
         return best.entry
+
+    def _partial_entry(self, prompt: Seq[int], node: _Node, depth: int,
+                       best_n: int) -> CacheEntry | None:
+        """Partial-prefix hit off the chunk grid: the exact walk stopped
+        at ``node`` (``depth`` chunks matched); find the child edge
+        sharing the longest token prefix with the remaining prompt and
+        truncate any entry below it to the match depth ``m``. Every
+        entry under that edge absorbed the same first ``m`` tokens, so
+        its kv rows ``[0, m)`` are exactly the rows a cold prefill of
+        ``prompt[:m]`` would write — the clamped-counter resume is
+        bit-identical. Only taken when it beats the best exact hit."""
+        base = depth * self.chunk_tokens
+        rest = [int(t) for t in prompt[base:]]
+        child, best_extra = None, 0
+        for edge, ch in node.children.items():
+            m = 0
+            for a, b in zip(edge, rest):
+                if a != b:
+                    break
+                m += 1
+            if m > best_extra:
+                child, best_extra = ch, m
+        if child is None:
+            return None
+        m = min(base + best_extra, len(prompt) - 1)
+        if m <= base or m <= best_n:
+            return None
+        holder = self._subtree_entry(child)
+        if holder is None:
+            return None
+        from repro.models.model import cache_truncate
+        self._touch(holder)
+        self.stats_.inc("hits")
+        self.stats_.inc("hit_tokens", m)
+        self.stats_.inc("partial_hits")
+        self.stats_.inc("truncated_tokens", holder.entry.n_tokens - m)
+        return CacheEntry(state=cache_truncate(holder.entry.state, m),
+                          logits=None, n_tokens=m,
+                          nbytes=holder.entry.nbytes)
+
+    @staticmethod
+    def _subtree_entry(node: _Node) -> _Node | None:
+        """Shallowest entry-holding node under ``node`` (BFS — less
+        truncation waste than a deep one; any entry would be correct)."""
+        q = deque([node])
+        while q:
+            n = q.popleft()
+            if n.entry is not None:
+                return n
+            q.extend(n.children.values())
+        return None
 
     def insert(self, prompt: Seq[int], n_tokens: int, state, logits) -> bool:
         """Cache the prefill state at boundary ``n_tokens``. Returns

@@ -78,6 +78,9 @@ class Sequence:
     out_tokens: list[int] = field(default_factory=list)
     # chunked-prefill bookkeeping (set on admission)
     cache: object = None         # private batch=1 cache during prefill
+    #   (None when pool_resident: state lives in the slot pool instead)
+    pool_resident: bool = False  # prefilling directly in the pool slot
+    #   (batched multi-slot prefill — engine seeds the slot at admission)
     chunks: list[int] = field(default_factory=list)
     chunk_idx: int = 0
     consumed: int = 0            # prompt tokens absorbed so far

@@ -48,6 +48,12 @@ class StepMetrics:
     # --- shared-prefix cache (0 when the cache is off) ----------------------
     cached_prefix_tokens: int = 0  # prompt tokens served from the prefix
     #   cache at admission this step (never scheduled, never charged)
+    scheduled_tokens: int = 0    # tokens actually charged against the
+    #   budget this step: decode_cost(...) net of the rejected-token
+    #   refund, plus every prefill chunk at its length.  Invariant:
+    #   scheduled_tokens == decode_tokens + draft rejections' refund
+    #   complement + prefill_tokens, and never exceeds the budget
+    #   except for the one-chunk-per-step starvation exemption.
 
 
 # keys in ``PrefixCache.stats()`` that accumulate monotonically (the
@@ -56,7 +62,7 @@ class StepMetrics:
 # point-in-time resident values and pass through undiffed)
 _CACHE_COUNTER_KEYS = ("lookups", "hits", "misses", "hit_tokens",
                        "lookup_tokens", "inserts", "duplicate_inserts",
-                       "evictions")
+                       "evictions", "partial_hits", "truncated_tokens")
 
 
 @dataclass
@@ -167,13 +173,13 @@ class EngineStats:
             "ttft_mean_s": (statistics.mean(ttft.samples)
                             if ttft.samples else 0.0),
             "ttft_max_s": max(ttft.samples) if ttft.samples else 0.0,
-            "ttft_p50_s": ttft.quantile(0.50),
-            "ttft_p95_s": ttft.quantile(0.95),
-            "ttft_p99_s": ttft.quantile(0.99),
+            "ttft_p50_s": ttft.quantile(0.50) if ttft.count else 0.0,
+            "ttft_p95_s": ttft.quantile(0.95) if ttft.count else 0.0,
+            "ttft_p99_s": ttft.quantile(0.99) if ttft.count else 0.0,
             "itl_mean_s": itl.mean,
-            "itl_p50_s": itl.quantile(0.50),
-            "itl_p95_s": itl.quantile(0.95),
-            "itl_p99_s": itl.quantile(0.99),
+            "itl_p50_s": itl.quantile(0.50) if itl.count else 0.0,
+            "itl_p95_s": itl.quantile(0.95) if itl.count else 0.0,
+            "itl_p99_s": itl.quantile(0.99) if itl.count else 0.0,
             "mean_occupancy": (statistics.mean(m.occupancy
                                                for m in self.steps)
                                if self.steps else 0.0),
@@ -235,7 +241,8 @@ class Scheduler:
                            ).set(self.token_budget)
 
     @staticmethod
-    def decode_cost(n_decoding: int, draft_k: int = 0) -> int:
+    def decode_cost(n_decoding: int, draft_k: int = 0,
+                    rejected: int = 0) -> int:
         """Scheduled-token cost of one decode/verify pass.
 
         Without speculation each decoding slot scores one token. With a
@@ -243,8 +250,17 @@ class Scheduler:
         drafted tokens do real model work whether or not they are
         accepted, so they count against the step budget exactly like
         prefill tokens (otherwise speculation would silently starve
-        prefill under a 'one token per slot' assumption)."""
-        return n_decoding * (draft_k + 1)
+        prefill under a 'one token per slot' assumption).
+
+        ``rejected`` is the verified-and-rejected draft count for the
+        step: those tokens were scored but their model state was rolled
+        back, so the engine refunds them — the net charge equals the
+        tokens that actually advanced a stream.  The caller must pass
+        the draft length the controller *actually used* for this step
+        (captured before ``DraftController.update`` runs), not the
+        config ceiling, or the budget double-charges after the
+        controller halves k."""
+        return n_decoding * (draft_k + 1) - rejected
 
     def plan(self, sequences: list[Sequence]) -> StepPlan:
         decode = [s for s in sequences
@@ -261,3 +277,35 @@ class Scheduler:
             r.counter("scheduler_prefill_seqs_planned_total",
                       "prefilling sequences planned").inc(len(prefill))
         return StepPlan(decode=decode, prefill=prefill)
+
+    @staticmethod
+    def group_prefill(prefill: list[Sequence], budget: int,
+                      *, first_exempt: bool = True) -> list[Sequence]:
+        """Sequences whose next chunk can run as ONE pooled dispatch.
+
+        FIFO head first: the oldest prefilling sequence fixes the chunk
+        length ``c0``; every later sequence whose next chunk is also
+        ``c0`` long joins, as long as the accumulated charge fits the
+        remaining ``budget`` (the FIFO head itself rides the usual
+        one-chunk-per-step starvation exemption when ``first_exempt``).
+        Same-length chunks are the batching condition because the
+        pooled ``prefill_from_state`` call is a single (slots, c0)
+        token block — ragged chunks would need padding, which changes
+        the dispatch shape and costs real FLOPs.  Pure: no sequence or
+        budget mutation; the engine charges per member as it executes.
+        """
+        group: list[Sequence] = []
+        c0 = None
+        for s in prefill:
+            if s.prefill_done:
+                continue
+            c = s.next_chunk
+            if c0 is None:
+                if c > budget and not first_exempt:
+                    break     # FIFO head can't fit: wait, don't skip ahead
+                group.append(s)
+                c0 = c
+                continue
+            if c == c0 and (len(group) + 1) * c0 <= budget:
+                group.append(s)
+        return group

@@ -1,0 +1,24 @@
+"""Empirical autotuning for backend selection (docs/benchmarks.md).
+
+``repro.tune`` closes the loop between the paper's *analytic* crossover
+points N0/N1 (core/taylor.py Eq. 7/9) and what the target backend
+actually measures: ``calibrate`` runs crossover.py-style timing sweeps
+plus a Pallas block-shape sweep and persists per-(backend, d, H, site)
+overrides to a JSON :class:`TuningTable`; ``install`` makes
+``models.backend.select_backend`` consult the table before falling back
+to the algebra, with the provenance ("analytic" vs "calibrated")
+recorded in every Selection and obs decision-log record.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.tune --calibrate --out tuning.json
+    PYTHONPATH=src python -m repro.tune --check tuning.json
+"""
+
+from repro.tune.table import (SCHEMA, TuneEntry, TuningTable, active,
+                              install, kernel_blocks, uninstall,
+                              validate_table)
+from repro.tune.calibrate import calibrate
+
+__all__ = ["SCHEMA", "TuneEntry", "TuningTable", "active", "install",
+           "uninstall", "kernel_blocks", "validate_table", "calibrate"]

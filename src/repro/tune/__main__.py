@@ -1,0 +1,111 @@
+"""CLI: calibrate, validate, and smoke-check tuning tables.
+
+  # measure crossovers + kernel blocks, persist the table
+  PYTHONPATH=src python -m repro.tune --calibrate --out tuning.json
+
+  # tiny CI sweep (coarse grids, 1 rep)
+  PYTHONPATH=src python -m repro.tune --calibrate --quick --out t.json
+
+  # validate schema + assert select_backend honors the table
+  PYTHONPATH=src python -m repro.tune --check t.json
+
+``--decision-log PATH`` seeds ``--calibrate`` with the head dims whose
+recorded choices diverged from the analytic N0 (PR 6 obs machinery as
+ground truth).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _check(path: str) -> None:
+    """Schema-validate, install, and assert select_backend consults it."""
+    from repro.configs import get_config
+    from repro.models import backend as B
+    from repro.tune import table as TT
+
+    with open(path) as f:
+        doc = json.load(f)
+    problems = TT.validate_table(doc)
+    if problems:
+        raise SystemExit(f"{path}: invalid table:\n  "
+                         + "\n  ".join(problems))
+    table = TT.TuningTable.from_doc(doc)
+    print(f"{path}: schema OK ({len(table.entries)} entries, "
+          f"backend={table.backend})")
+    if not table.entries:
+        print("table is empty — nothing to assert against select_backend")
+        return
+    TT.install(table, strict=False)
+    try:
+        e = table.entries[0]
+        cfg = get_config("stablelm-1.6b").reduced()
+        cfg = cfg.with_(head_dim=e.d)
+        n = int(e.n0) if e.n0 else 64
+        s = B.select_backend(cfg, N=n, d=e.d, site="full")
+        if s.provenance != "calibrated":
+            raise SystemExit(
+                f"select_backend ignored the installed table at d={e.d} "
+                f"(provenance={s.provenance!r})")
+        want_n0 = e.n0 if e.n0 is not None else s.n0
+        if e.n0 is not None and abs(s.n0 - e.n0) > 0.5:
+            raise SystemExit(f"selection n0={s.n0} != table n0={want_n0}")
+        print(f"select_backend honors the table: d={e.d} -> "
+              f"provenance=calibrated, n0={s.n0:.0f}, n1={s.n1:.0f}")
+    finally:
+        TT.uninstall()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="python -m repro.tune")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run the measurement sweep")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the calibrated table here (JSON)")
+    ap.add_argument("--d", type=int, nargs="*", default=[16, 32],
+                    help="head dims to sweep")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="coarse grids, 1 rep — the CI smoke mode")
+    ap.add_argument("--no-blocks", action="store_true",
+                    help="skip the Pallas block-shape sweep")
+    ap.add_argument("--decision-log", default=None, metavar="PATH",
+                    help="seed the sweep with dims whose recorded "
+                         "decisions diverged from the analytic N0")
+    ap.add_argument("--check", default=None, metavar="PATH",
+                    help="validate a table and assert select_backend "
+                         "honors it")
+    args = ap.parse_args(argv)
+
+    if args.check:
+        _check(args.check)
+        return
+    if not args.calibrate:
+        ap.error("pass --calibrate (with --out) or --check PATH")
+
+    from repro.tune.calibrate import calibrate, divergent_dims
+
+    ds = list(args.d)
+    if args.decision_log:
+        from repro.obs.decisions import read_jsonl
+        seeds = divergent_dims(read_jsonl(args.decision_log))
+        if seeds:
+            print(f"decision log flags divergent head dims: {sorted(seeds)}")
+            ds = sorted(set(ds) | seeds)
+    reps = 1 if args.quick else args.reps
+    table = calibrate(ds, reps=reps, quick=args.quick,
+                      blocks=not args.no_blocks, verbose=True)
+    doc = table.to_doc()
+    if args.out:
+        table.save(args.out)
+        print(f"wrote {args.out} ({len(table.entries)} entries)")
+    else:
+        json.dump(doc, sys.stdout, indent=2, sort_keys=True)
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+"""The persisted measured-override table ``select_backend`` consults.
+
+A :class:`TuningTable` is a list of :class:`TuneEntry` rows keyed on
+``(backend_platform, d, H, site)`` with two wildcard axes: ``H=None``
+matches any head count and ``site="*"`` matches any attention site.
+``lookup`` resolves most-specific-first, so a site-specific measurement
+beats a whole-model one and both beat the analytic fallback (which is
+simply "no entry found").
+
+Entries carry the *measured* crossovers ``n0``/``n1`` (either may be
+None — a timing sweep that never saw a sign change leaves the analytic
+value in charge) plus optional Pallas block shapes ``block_q``/
+``block_k`` for the fused kernels. Installation is process-global and
+two-pronged:
+
+* ``models.backend.select_backend`` asks the active table per site and
+  stamps ``Selection.provenance = "calibrated"`` when an override
+  applied (visible in the obs decision log);
+* ``core.taylor.set_crossover_hook`` is pointed at the table's
+  wildcard rows, so *every* ``pick_mode`` caller — including
+  ``select_serve_plan``'s cache_kind="auto" memory resolution and the
+  attention layers' trace-time re-derivations — sees the same measured
+  thresholds. One global, or routing decisions would split.
+
+The JSON schema (``validate_table`` is the CI gate)::
+
+    {"schema": "repro.tune/v1",
+     "backend": "cpu",                  # jax.default_backend() at calibration
+     "meta": {...},                     # free-form provenance
+     "entries": [{"d": 16, "H": null, "site": "*",
+                  "n0": 1234.0, "n1": 301.0,
+                  "block_q": 128, "block_k": 128,
+                  "source": "measured"}, ...]}
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+
+from repro.core import taylor as T
+
+SCHEMA = "repro.tune/v1"
+SITES = ("full", "prefill", "decode", "verify", "*")
+
+
+@dataclass(frozen=True)
+class TuneEntry:
+    """One measured override row. ``H=None`` / ``site="*"`` wildcard."""
+    d: int
+    H: int | None = None
+    site: str = "*"
+    n0: float | None = None       # measured speed crossover (None = analytic)
+    n1: float | None = None       # measured memory crossover
+    block_q: int | None = None    # Pallas kernel block shapes (None = default)
+    block_k: int | None = None
+    source: str = "measured"
+
+
+@dataclass
+class TuningTable:
+    backend: str                  # jax platform the sweeps ran on
+    entries: list[TuneEntry] = field(default_factory=list)
+    meta: dict = field(default_factory=dict)
+
+    def lookup(self, *, d: int, H: int | None = None,
+               site: str = "*") -> TuneEntry | None:
+        """Most-specific entry for (d, H, site), wildcards last.
+
+        Precedence: exact (d, H, site) > (d, H, "*") > (d, None, site)
+        > (d, None, "*"). A stored ``H=None`` row matches any requested
+        H; a stored concrete H only matches itself.
+        """
+        best, best_rank = None, -1
+        for e in self.entries:
+            if e.d != d:
+                continue
+            if e.H is not None and e.H != H:
+                continue
+            if e.site != "*" and e.site != site:
+                continue
+            rank = (2 if e.H is not None else 0) + (1 if e.site != "*" else 0)
+            if rank > best_rank:
+                best, best_rank = e, rank
+        return best
+
+    # -- persistence --------------------------------------------------------
+
+    def to_doc(self) -> dict:
+        return {"schema": SCHEMA, "backend": self.backend,
+                "meta": dict(self.meta),
+                "entries": [asdict(e) for e in self.entries]}
+
+    @classmethod
+    def from_doc(cls, doc: dict) -> "TuningTable":
+        problems = validate_table(doc)
+        if problems:
+            raise ValueError("invalid tuning table:\n  "
+                             + "\n  ".join(problems))
+        return cls(backend=doc["backend"],
+                   entries=[TuneEntry(**e) for e in doc["entries"]],
+                   meta=dict(doc.get("meta", {})))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_doc(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "TuningTable":
+        with open(path) as f:
+            return cls.from_doc(json.load(f))
+
+
+_ENTRY_FIELDS = {"d", "H", "site", "n0", "n1", "block_q", "block_k",
+                 "source"}
+
+
+def validate_table(doc) -> list[str]:
+    """Schema check; returns problem strings (empty = valid)."""
+    problems: list[str] = []
+    if not isinstance(doc, dict):
+        return ["table document is not an object"]
+    if doc.get("schema") != SCHEMA:
+        problems.append(f"schema {doc.get('schema')!r} != {SCHEMA!r}")
+    if not isinstance(doc.get("backend"), str) or not doc.get("backend"):
+        problems.append("backend missing or not a string")
+    entries = doc.get("entries")
+    if not isinstance(entries, list):
+        return problems + ["entries missing or not a list"]
+    for i, e in enumerate(entries):
+        if not isinstance(e, dict):
+            problems.append(f"entry {i}: not an object")
+            continue
+        extra = set(e) - _ENTRY_FIELDS
+        if extra:
+            problems.append(f"entry {i}: unknown fields {sorted(extra)}")
+        if not isinstance(e.get("d"), int) or e.get("d", 0) < 1:
+            problems.append(f"entry {i}: d must be a positive int")
+        if e.get("H") is not None and (not isinstance(e["H"], int)
+                                       or e["H"] < 1):
+            problems.append(f"entry {i}: H must be null or a positive int")
+        if e.get("site", "*") not in SITES:
+            problems.append(f"entry {i}: site {e.get('site')!r} not in "
+                            f"{SITES}")
+        for k in ("n0", "n1"):
+            v = e.get(k)
+            if v is not None and (not isinstance(v, (int, float))
+                                  or v <= 0):
+                problems.append(f"entry {i}: {k} must be null or > 0")
+        for k in ("block_q", "block_k"):
+            v = e.get(k)
+            if v is not None and (not isinstance(v, int) or v < 1
+                                  or v & (v - 1)):
+                problems.append(f"entry {i}: {k} must be null or a "
+                                "positive power of two")
+        if e.get("n0") is None and e.get("n1") is None \
+                and e.get("block_q") is None and e.get("block_k") is None:
+            problems.append(f"entry {i}: overrides nothing")
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# Process-global installation
+# ---------------------------------------------------------------------------
+
+_ACTIVE: TuningTable | None = None
+
+
+def active() -> TuningTable | None:
+    return _ACTIVE
+
+
+def _hook(d: int, kind: str):
+    """core.taylor crossover hook over the active table's wildcard rows
+    (no site/H context exists at a bare ``pick_mode`` call)."""
+    if _ACTIVE is None:
+        return None
+    e = _ACTIVE.lookup(d=d)
+    if e is None:
+        return None
+    return e.n0 if kind == "n0" else e.n1
+
+
+def install(table: TuningTable, *, strict: bool = True) -> None:
+    """Make ``table`` the process-global measured-override source.
+
+    ``strict`` refuses a table calibrated on a different jax platform —
+    a cpu-measured crossover says nothing about a TPU. Install before
+    the first traced dispatch: jitted callers resolve overrides at
+    trace time and will not retrace on a later install."""
+    import jax
+    platform = jax.default_backend()
+    if strict and table.backend != platform:
+        raise ValueError(
+            f"tuning table was calibrated on {table.backend!r} but this "
+            f"process runs {platform!r}; pass strict=False to force")
+    global _ACTIVE
+    _ACTIVE = table
+    T.set_crossover_hook(_hook)
+
+
+def uninstall() -> None:
+    """Clear the active table; everything falls back to Eq. (7)/(9)."""
+    global _ACTIVE
+    _ACTIVE = None
+    T.set_crossover_hook(None)
+
+
+def kernel_blocks(d: int, *, default: int = 128) -> tuple[int, int]:
+    """(block_q, block_k) for the fused Pallas kernels at head dim d —
+    the calibrated sweep's pick when a table is installed, ``default``
+    otherwise. Kernel entry points call this when the caller left the
+    block shape unspecified."""
+    if _ACTIVE is not None:
+        e = _ACTIVE.lookup(d=d)
+        if e is not None:
+            return (e.block_q or default, e.block_k or default)
+    return (default, default)

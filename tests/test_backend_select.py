@@ -280,6 +280,94 @@ class TestLauncherHelpers:
             assert r[site]["backend"] in B.REGISTRY
 
 
+class TestCalibratedOverrides:
+    """repro.tune measured overrides vs the analytic Eq. (7)/(9)
+    fallback: an installed table must move the routing thresholds AND
+    stamp ``Selection.provenance = "calibrated"``; uninstalling must
+    restore the analytic world bit-for-bit."""
+
+    @pytest.fixture(autouse=True)
+    def clean_install(self):
+        from repro.tune import table as TU
+        TU.uninstall()
+        yield
+        TU.uninstall()
+
+    def _install(self, *entries):
+        from repro.tune.table import TuneEntry, TuningTable
+        from repro.tune import table as TU
+        TU.install(TuningTable(backend=jax.default_backend(),
+                               entries=[TuneEntry(**e) for e in entries]))
+
+    def test_calibrated_n0_overrides_routing(self):
+        cfg = cfg_with()
+        d = cfg.dim_head
+        n = int(T.crossover_n0(d)) + 64       # analytically "efficient"
+        base = B.select_backend(cfg, N=n, d=d, site="full", causal=False)
+        assert base.name == "efficient" and base.provenance == "analytic"
+        self._install({"d": d, "n0": float(n + 128)})
+        cal = B.select_backend(cfg, N=n, d=d, site="full", causal=False)
+        assert cal.name == "direct"           # measured threshold moved
+        assert cal.provenance == "calibrated"
+        assert cal.n0 == pytest.approx(n + 128)
+        assert cal.n1 == pytest.approx(T.crossover_n1(d))  # not measured
+
+    def test_uninstall_restores_analytic(self):
+        from repro.tune import table as TU
+        cfg = cfg_with()
+        d = cfg.dim_head
+        self._install({"d": d, "n0": 1e9})
+        TU.uninstall()
+        s = B.select_backend(cfg, N=int(T.crossover_n0(d)) + 64, d=d,
+                             site="full", causal=False)
+        assert s.name == "efficient" and s.provenance == "analytic"
+        assert s.n0 == pytest.approx(T.crossover_n0(d))
+
+    def test_site_specific_entry_beats_wildcard(self):
+        cfg = cfg_with()
+        d = cfg.dim_head
+        n = int(T.crossover_n0(d)) + 64
+        self._install({"d": d, "n0": 1.0},                     # wildcard
+                      {"d": d, "site": "full", "n0": float(n + 128)})
+        s = B.select_backend(cfg, N=n, d=d, site="full", causal=False)
+        assert s.name == "direct" and s.n0 == pytest.approx(n + 128)
+
+    def test_unmeasured_head_dim_stays_analytic(self):
+        cfg = cfg_with()
+        d = cfg.dim_head
+        self._install({"d": d + 1, "n0": 1e9})    # wrong head dim
+        s = B.select_backend(cfg, N=int(T.crossover_n0(d)) + 64, d=d,
+                             site="full", causal=False)
+        assert s.name == "efficient" and s.provenance == "analytic"
+
+    def test_calibrated_n1_moves_serve_plan_cache(self):
+        """The 'and Back' memory resolution (cache_kind='auto') runs on
+        the measured N1 when one is installed — through the taylor
+        crossover hook, the same global select_backend reads."""
+        cfg = cfg_with()
+        d = cfg.dim_head
+        L = int(T.crossover_n1(d)) // 2       # analytically kv territory
+        assert B.select_serve_plan(cfg, max_seq_len=L, prefill_chunk=16,
+                                   cache_kind="auto").cache_kind == "kv"
+        self._install({"d": d, "n1": float(L // 2)})
+        assert B.select_serve_plan(cfg, max_seq_len=L, prefill_chunk=16,
+                                   cache_kind="auto").cache_kind == "taylor"
+
+    def test_decision_log_carries_provenance(self):
+        from repro.obs import decisions as D
+        cfg = cfg_with()
+        d = cfg.dim_head
+        self._install({"d": d, "n0": 1e9})
+        D.log.enable()
+        try:
+            B.select_backend(cfg, N=64, d=d, site="full", causal=False)
+            recs = list(D.log.records)
+        finally:
+            D.log.disable()
+            D.log.clear()
+        assert recs and recs[-1]["provenance"] == "calibrated"
+
+
 class TestAmbientContext:
     def test_defaults_to_ctx(self):
         """select_backend with no mesh reads the ambient sharding ctx

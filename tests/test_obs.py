@@ -270,7 +270,7 @@ def engine_artifacts(tmp_path_factory):
 def test_engine_trace_covers_phases(engine_artifacts):
     _, doc, _, _ = engine_artifacts
     assert V.validate_chrome_trace(doc, require_spans=(
-        "engine_step", "admit", "prefix_lookup", "prefill_chunk",
+        "engine_step", "admit", "prefix_lookup", "prefill_batch",
         "decode_batch")) == []
     compiles = [e for e in doc["traceEvents"]
                 if e.get("args", {}).get("compile")]

@@ -330,3 +330,198 @@ def test_prefill_from_state_per_slot_matches_private_resume(setup):
 def test_tree_nbytes_counts_every_leaf():
     tree = {"a": np.zeros((4, 2), np.float32), "b": [np.zeros(3, np.int32)]}
     assert tree_nbytes(tree) == 4 * 2 * 4 + 3 * 4
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-slot prefill (pool-resident, taylor pools)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_batched_prefill_streams_bit_identical(setup):
+    """Pooled same-chunk-length prefill dispatch vs the per-sequence
+    path: greedy streams must match token for token, prefix cache on
+    and off — the per-slot prefill body is bit-identical to the scalar
+    one for Taylor states."""
+    cfg, params = setup
+    prefix = _toks(cfg, 16, seed=500)
+    reqs = [Request("a", prefix + _toks(cfg, 7, seed=501), 6),
+            Request("b", prefix + _toks(cfg, 7, seed=502), 6),
+            Request("c", _toks(cfg, 21, seed=503), 6),
+            Request("d", prefix + _toks(cfg, 7, seed=501), 6)]
+
+    def run(batch_prefill, cache_mb):
+        eng = Engine(cfg, params, EngineConfig(
+            n_slots=3, prefill_chunk=8, token_budget=32, max_seq_len=64,
+            batch_prefill=batch_prefill, prefix_cache_mb=cache_mb))
+        return eng.generate([Request(r.request_id, r.prompt,
+                                     r.max_new_tokens) for r in reqs]), eng
+
+    for cache_mb in (0.0, -1.0):
+        pooled, eng = run(True, cache_mb)
+        per_seq, _ = run(False, cache_mb)
+        assert pooled == per_seq
+        if cache_mb:
+            # pooled boundaries entered the trie in the canonical
+            # single-sequence layout and were actually usable
+            assert eng.prefix_cache.stats()["inserts"] >= 1
+
+
+@pytest.mark.slow
+def test_batched_prefill_groups_share_one_dispatch(setup):
+    """Same-length prompts admitted together must prefill as grouped
+    pool dispatches, not one dispatch per sequence."""
+    from repro.obs.trace import tracer
+
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=3, prefill_chunk=8, token_budget=64, max_seq_len=64))
+    assert eng._batch_prefill
+    tracer.enable()
+    try:
+        eng.generate([Request(f"r{i}", _toks(cfg, 16, seed=510 + i), 2)
+                      for i in range(3)])
+        spans = [e for e in tracer.export()["traceEvents"]
+                 if e.get("name") == "prefill_batch" and e["ph"] == "B"]
+    finally:
+        tracer.disable()
+        tracer.clear()
+    # 3 sequences x 2 chunks each = 6 per-seq dispatches; grouped they
+    # collapse to 2 (one per chunk round, all 3 slots per dispatch)
+    assert len(spans) == 2
+    assert all(s["args"]["slots"] == 3 for s in spans)
+
+
+def test_batched_prefill_gated_off_for_kv_pools(setup):
+    """kv caches attend over a different extent in the per-slot body —
+    not bit-identical to the scalar one — so the engine must keep them
+    on the per-sequence path even with batch_prefill requested."""
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(
+        n_slots=2, prefill_chunk=8, max_seq_len=64,
+        cache_kind="kv", batch_prefill=True))
+    assert not eng._batch_prefill
+
+
+@pytest.mark.slow
+def test_pool_resident_prefill_survives_interleaved_decode(setup):
+    """A partially-prefilled pool slot must keep its state bit-exactly
+    across decode/verify steps of other slots (the mask merge): a long
+    prompt arriving while another sequence decodes is the aliasing
+    worst case."""
+    cfg, params = setup
+    reqs = [Request("short", _toks(cfg, 4, seed=520), 12),
+            Request("long", _toks(cfg, 56, seed=521), 4)]
+
+    def run(batch_prefill):
+        eng = Engine(cfg, params, EngineConfig(
+            n_slots=2, prefill_chunk=8, token_budget=8, max_seq_len=64,
+            batch_prefill=batch_prefill))
+        eng.submit(reqs[0])
+        eng.step()                      # "short" reaches DECODING first
+        eng.submit(reqs[1])             # "long" prefills across many steps
+        while not eng.idle:
+            eng.step()
+        return {r.request_id: eng.results[r.request_id].out_tokens
+                for r in reqs}
+
+    assert run(True) == run(False)
+
+
+# ---------------------------------------------------------------------------
+# kv partial-prefix reuse (positional truncation)
+# ---------------------------------------------------------------------------
+
+def test_partial_lookup_truncates_counters():
+    """Trie unit: a prompt diverging mid-chunk hits the cached branch
+    at the shared token depth, counters clamped, nothing new stored."""
+    pc = PrefixCache(4, kv_partial=True)
+    cached = list(range(12))
+    state = {"pos": np.asarray(8), "k": np.arange(6.0)}
+    pc.insert(cached, 8, state, _arr(1))
+    # shares chunk [0..4) plus 2 tokens of chunk [4..8)
+    probe = cached[:6] + [99] * 6
+    hit = pc.lookup(probe)
+    assert hit is not None and hit.n_tokens == 6
+    assert hit.logits is None                      # always re-runs a chunk
+    assert int(hit.state["pos"]) == 6              # clamped
+    assert np.array_equal(hit.state["k"], state["k"])  # rows untouched
+    s = pc.stats()
+    assert s["partial_hits"] == 1 and s["truncated_tokens"] == 2
+    assert s["hits"] == 1 and s["hit_tokens"] == 6
+    assert s["entries"] == 1                       # ephemeral, not stored
+
+
+def test_partial_lookup_prefers_deeper_exact_hit():
+    pc = PrefixCache(4, kv_partial=True)
+    cached = list(range(12))
+    pc.insert(cached, 4, {"pos": np.asarray(4)}, _arr(1))
+    pc.insert(cached, 8, {"pos": np.asarray(8)}, _arr(1))
+    # diverges after 5 tokens: partial depth 5 < exact boundary 8? No —
+    # probe shares both full chunks, then diverges: exact 8 beats 8+0
+    probe = cached[:8] + [99] * 4
+    hit = pc.lookup(probe)
+    assert hit.n_tokens == 8 and hit.logits is not None
+    assert pc.stats()["partial_hits"] == 0
+    # diverging inside the SECOND chunk: partial 6 beats exact 4
+    probe2 = cached[:6] + [99] * 6
+    assert pc.lookup(probe2).n_tokens == 6
+    assert pc.stats()["partial_hits"] == 1
+
+
+def test_partial_lookup_caps_below_full_prompt():
+    """A prompt that is a strict prefix of a cached longer prompt must
+    leave at least one token to prefill — no entry holds its boundary
+    logits."""
+    pc = PrefixCache(4, kv_partial=True)
+    cached = list(range(12))
+    pc.insert(cached, 12, {"pos": np.asarray(12)}, _arr(1))
+    hit = pc.lookup(cached[:6])
+    assert hit is not None
+    assert hit.n_tokens == 5                       # len(prompt) - 1
+    assert int(hit.state["pos"]) == 5
+
+
+def test_partial_lookup_off_by_default():
+    pc = PrefixCache(4)
+    cached = list(range(8))
+    pc.insert(cached, 8, {"pos": np.asarray(8)}, _arr(1))
+    assert pc.lookup(cached[:6] + [99, 99]) is None
+
+
+def test_cache_truncate_rejects_taylor_states():
+    from repro.core import taylor as T
+
+    state = T.TaylorState.zeros((1, 2, 1), 4, n_dims=())
+    with pytest.raises(ValueError, match="kv caches only"):
+        M.cache_truncate({"groups": [state], "rem": [],
+                          "pos": jnp.asarray(8)}, 4)
+
+
+@pytest.mark.slow
+def test_kv_partial_hit_streams_bit_identical(setup):
+    """Engine level: kv pools serve diverging prompts from truncated
+    entries (partial_hits > 0) and the streams still match a cold
+    engine exactly — clamped counters mask the stale rows with exact
+    zeros."""
+    cfg, params = setup
+    shared = _toks(cfg, 21, seed=600)     # 2 full chunks + 5 off-grid
+    reqs = [Request("warm", shared + _toks(cfg, 6, seed=601), 5),
+            Request("part", shared + _toks(cfg, 9, seed=602), 5)]
+
+    def run(cache_mb):
+        eng = _engine(cfg, params, cache_mb=cache_mb, cache_kind="kv",
+                      n_slots=1)
+        out = {}
+        for r in reqs:
+            out.update(eng.generate([Request(r.request_id, r.prompt,
+                                             r.max_new_tokens)]))
+            eng.results.clear()
+        return out, eng
+
+    cold, _ = run(0.0)
+    hot, eng = run(-1.0)
+    assert cold == hot
+    s = eng.prefix_cache.stats()
+    assert s["partial_hits"] >= 1
+    assert s["truncated_tokens"] >= 1
+    assert s["hit_tokens"] >= 21
