@@ -31,6 +31,13 @@ if __name__ == "__main__":
     _ap.add_argument("--chunk", type=int, default=256)
     _ap.add_argument("--grad", action="store_true",
                      help="also time the backward (custom-VJP recompute)")
+    _ap.add_argument("--composed", nargs="*", default=None,
+                     metavar="D,P,S",
+                     help="also time the composed 3D train gradient "
+                          "(distributed/composed.py) on these "
+                          "(data, pipe, seq) mesh triplets, e.g. "
+                          "--composed 2,2,2 1,2,4")
+    _ap.add_argument("--global-batch", type=int, default=4)
     ARGS = _ap.parse_args()
     os.environ["XLA_FLAGS"] = (
         f"--xla_force_host_platform_device_count={ARGS.devices} "
@@ -88,6 +95,49 @@ def run(seq_lens, shards_list, *, d, heads, chunk, grad=False):
     return results
 
 
+def run_composed(seq_lens, triplets, *, global_batch=4, d_model=64):
+    """Wall-clock of the composed 3D loss+grad (one fully-manual
+    shard_map: FSDP gather + GPipe ring + seq-sharded scan) across mesh
+    shapes — same model at every shape, so rows are comparable."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.distributed import composed as Cmp
+    from repro.launch.mesh import make_composed_mesh
+    from repro.models import model as M
+
+    results = {}
+    for n in seq_lens:
+        for dd, pp, ss in triplets:
+            if dd * pp * ss > len(jax.devices()) or n % max(ss, 1):
+                continue
+            cfg = get_config("taylorshift-lra").reduced().with_(
+                n_layers=2, d_model=d_model, n_heads=2, n_kv_heads=2,
+                d_ff=2 * d_model, max_seq_len=n, dtype="float32",
+                causal=True, remat=True)
+            cfg = cfg.with_(taylor=dataclasses.replace(
+                cfg.taylor, mode="efficient", use_kernel=False))
+            mesh = make_composed_mesh(data=dd, pipe=pp, seq=ss)
+            mb = max(1, min(2 * pp, global_batch // dd))
+            grad_fn, _ = Cmp.build_composed_grad_fn(
+                cfg, mesh, global_batch=global_batch, seq_len=n,
+                n_microbatches=mb, fsdp=True)
+            split = Cmp.split_params(
+                cfg, M.init_params(cfg, jax.random.PRNGKey(0)), pp)
+            pshard = Cmp.composed_param_shardings(split, mesh, fsdp=True)
+            split = jax.device_put(split, pshard)
+            tok = jax.random.randint(jax.random.PRNGKey(n),
+                                     (global_batch, n), 0, cfg.vocab)
+            batch = {"tokens": tok, "labels": jnp.roll(tok, -1, axis=1)}
+            with mesh:
+                dt, _ = timeit(jax.jit(grad_fn), split, batch,
+                               warmup=1, iters=2)
+            emit(f"composed_grad_n{n}_mesh{dd}x{pp}x{ss}", dt * 1e6,
+                 f"microbatches={mb};tok_s={global_batch * n / dt:.0f}")
+            results[(n, dd, pp, ss)] = dt
+    return results
+
+
 if __name__ == "__main__":
     shards = [s for s in ARGS.shards if s <= len(jax.devices())]
     if shards != ARGS.shards:
@@ -98,3 +148,8 @@ if __name__ == "__main__":
     if ARGS.grad:
         run(ARGS.seq_lens, shards, d=ARGS.d, heads=ARGS.heads,
             chunk=ARGS.chunk, grad=True)
+    if ARGS.composed is not None:
+        triplets = [tuple(int(x) for x in t.split(","))
+                    for t in (ARGS.composed or ["2,2,2", "1,2,4"])]
+        run_composed(ARGS.seq_lens, triplets,
+                     global_batch=ARGS.global_batch)

@@ -21,6 +21,13 @@ trajectory in BENCH_serving.json stays machine-readable for the
 ROADMAP's autotuning pass; ``serving_throughput --json`` runs it before
 writing, and ``python -m benchmarks.run --validate PATH`` re-checks an
 existing file (the CI ``obs`` job does).
+
+``validate_training_doc`` is the training-side twin for
+BENCH_training.json (train_step_memory --composed --json): beyond the
+structural checks it enforces the paper's memory claim as a regression
+gate — the composed path's activation-bytes log-log slope must stay
+sub-linear (≤ 0.6 measured; gate at < 1.2) while the direct baseline is
+quadratic (> 1.7). ``--validate`` dispatches on the document's name.
 """
 
 import json
@@ -93,12 +100,70 @@ def check_serving_doc(doc: dict) -> None:
                          + "\n  ".join(problems))
 
 
+TRAINING_CELL_KEYS = {
+    "training_composed": (
+        "seq_len", "mesh_data", "mesh_pipe", "mesh_seq", "microbatches",
+        "composed_temp_bytes", "step_time_s", "tokens_per_s"),
+}
+
+# the memory claim as numbers: composed per-device activation bytes must
+# grow sub-linearly in N (weak scaling shards the sequence as it grows),
+# the direct-attention baseline quadratically
+TRAINING_SLOPE_GATES = {"composed_activation": (None, 0.8),
+                        "direct_activation": (1.7, None)}
+
+
+def validate_training_doc(doc: dict) -> list[str]:
+    """Problems in a training benchmark document ([] = valid)."""
+    problems: list[str] = []
+    name = doc.get("name")
+    if name not in TRAINING_CELL_KEYS:
+        return [f"unknown doc name {name!r}"]
+    if not isinstance(doc.get("config"), dict):
+        problems.append(f"{name}: missing config")
+    cells = doc.get("cells")
+    if not isinstance(cells, list) or not cells:
+        problems.append(f"{name}: cells missing or empty")
+        cells = []
+    for i, cell in enumerate(cells):
+        missing = [k for k in TRAINING_CELL_KEYS[name] if k not in cell]
+        if missing:
+            problems.append(f"{name}.cells[{i}]: missing keys {missing}")
+    slopes = doc.get("slopes")
+    if not isinstance(slopes, dict):
+        problems.append(f"{name}: missing slopes")
+        slopes = {}
+    for key, (lo, hi) in TRAINING_SLOPE_GATES.items():
+        s = slopes.get(key)
+        if not isinstance(s, (int, float)) or not math.isfinite(s):
+            problems.append(f"{name}.slopes.{key}: missing or non-finite")
+        elif lo is not None and s < lo:
+            problems.append(f"{name}.slopes.{key}={s:.2f} below gate {lo}")
+        elif hi is not None and s > hi:
+            problems.append(f"{name}.slopes.{key}={s:.2f} above gate {hi}"
+                            " — composed activation memory regressed")
+    _finite(doc, name or "doc", problems)
+    return problems
+
+
+def check_training_doc(doc: dict) -> None:
+    problems = validate_training_doc(doc)
+    if problems:
+        raise ValueError("BENCH_training schema violation:\n  "
+                         + "\n  ".join(problems))
+
+
 def main() -> None:
     if "--validate" in sys.argv:
         path = sys.argv[sys.argv.index("--validate") + 1]
         with open(path) as f:
-            check_serving_doc(json.load(f))
-        print(f"{path}: serving benchmark schema OK")
+            doc = json.load(f)
+        if doc.get("name") in TRAINING_CELL_KEYS:
+            check_training_doc(doc)
+            print(f"{path}: training benchmark schema OK")
+        else:
+            check_serving_doc(doc)
+            print(f"{path}: serving benchmark schema OK")
         return
     fast = "--fast" in sys.argv
     print("name,us_per_call,derived")

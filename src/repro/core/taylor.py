@@ -265,6 +265,52 @@ def _vhat_unit(v: jnp.ndarray, n_keys: int) -> jnp.ndarray:
     return jnp.concatenate([ones, v], axis=-1).astype(jnp.float32) / n_keys
 
 
+def efficient_taylorshift_sharded(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    tau: jnp.ndarray | float = 1.0,
+    axis_name: str | None = None,
+    n_global: int | None = None,
+    normalize_inputs: bool = True,
+    output_scale: bool = True,
+) -> jnp.ndarray:
+    """Algorithm 1 with the key axis sharded over mesh axis ``axis_name``.
+
+    For callers already inside a fully-manual shard_map region (the
+    composed 3D train step): k/v hold this shard's keys, and the three
+    key-side sums (A_mod, K^T V̂, ΣV̂) — each O(d³) floats, independent
+    of sequence length — are the *only* cross-shard traffic, one psum
+    apiece. ``n_global`` is the full (unsharded) key count; V̂'s 1/N and
+    sqrt(d/N) factors use it so the psum of per-shard partial sums equals
+    the single-device result exactly. Readout stays per-shard per-query.
+    Differentiable by plain autodiff: psum's transpose is the true
+    adjoint (cross-shard cotangents sum), so ∇k/∇v match the reference.
+    """
+    d = q.shape[-1]
+    n_global = n_global if n_global is not None else k.shape[-2]
+    alpha = d ** 0.25
+    if normalize_inputs:
+        q, k = normalize_qk(q, k, tau)
+    q = (q * alpha).astype(jnp.float32)
+    k = (k * alpha).astype(jnp.float32)
+    vh = _vhat(v, n_global, d) if output_scale else _vhat_unit(v, n_global)
+
+    a_mod = jnp.einsum("...me,...mf->...ef", boxtimes(k, k), vh)   # (d², d+1)
+    kv = jnp.einsum("...md,...mf->...df", k, vh)                    # (d, d+1)
+    s0 = jnp.sum(vh, axis=-2, keepdims=True)                        # (1, d+1)
+    if axis_name is not None:
+        a_mod = jax.lax.psum(a_mod, axis_name)
+        kv = jax.lax.psum(kv, axis_name)
+        s0 = jax.lax.psum(s0, axis_name)
+    y_hat = 0.5 * jnp.einsum("...ne,...ef->...nf", boxtimes(q, q), a_mod)
+    y_hat += (alpha**2) * jnp.einsum("...nd,...df->...nf", q, kv)
+    y_hat += (alpha**4) * s0
+    denom, nom = y_hat[..., :1], y_hat[..., 1:]
+    return (nom / denom).astype(v.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Causal TaylorShift (beyond paper): chunkwise prefix states
 # ---------------------------------------------------------------------------

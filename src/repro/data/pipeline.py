@@ -108,6 +108,22 @@ _GENERATORS: dict[str, Callable] = {
 }
 
 
+def device_put_batch(batch: dict, mesh=None) -> dict:
+    """Place a host batch on devices in the layout the train steps
+    consume: batch dim over the data axes, token dim over ``seq`` when
+    the mesh carries one (so composed-mesh steps read their
+    ``P("data", "seq")`` shards without an all-to-all). ``mesh=None``
+    falls back to a plain ``device_put``. jax and the sharding rules
+    import lazily — this module stays numpy-only for host-side tests."""
+    import jax
+
+    if mesh is None:
+        return jax.device_put(batch)
+    from repro.distributed.sharding import batch_shardings
+
+    return jax.device_put(batch, batch_shardings(batch, mesh))
+
+
 # ---------------------------------------------------------------------------
 # Prefetching loader
 # ---------------------------------------------------------------------------

@@ -18,6 +18,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -29,12 +30,24 @@ def make_pp_mesh(n_stages: int, data: int = 1):
 
 
 def pipeline_forward(stage_fn: Callable, params_stacked, x,
-                     mesh: Mesh, *, n_microbatches: int):
+                     mesh: Mesh, *, n_microbatches: int,
+                     remainder: str = "error"):
     """Run ``stage_fn(stage_params, h) -> h`` over S stages.
 
     params_stacked: pytree with leading dim S (stage-sharded).
-    x: (B, ...) global batch; B divisible by n_microbatches.
+    x: (B, ...) global batch.
     Returns y with the same shape as stage_fn's composition.
+
+    ``remainder`` makes the ``B % n_microbatches != 0`` case an explicit
+    policy instead of a shape accident:
+
+      * ``"error"`` (default): raise — the caller sized the batch wrong;
+      * ``"pad"``: zero-pad B up to the next multiple, run the padded
+        schedule, slice the pad rows off the output (all B rows kept;
+        costs up to one extra row per microbatch);
+      * ``"drop"``: truncate to the largest multiple and return only the
+        kept rows (output batch may be smaller than B — the caller
+        owns loss re-weighting).
 
     GPipe schedule via shard_map: each device holds one stage; the
     activation ring rotates with ppermute. T = M + S - 1 ticks.
@@ -42,16 +55,31 @@ def pipeline_forward(stage_fn: Callable, params_stacked, x,
     S = mesh.shape["stage"]
     M = n_microbatches
     B = x.shape[0]
-    assert B % M == 0
-    mb = x.reshape(M, B // M, *x.shape[1:])
+    n_keep = B
+    if B % M:
+        if remainder == "error":
+            raise ValueError(
+                f"batch {B} not divisible by n_microbatches {M}; pass "
+                f"remainder='pad' or 'drop' for an explicit policy")
+        if remainder == "pad":
+            pad = M - B % M
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], axis=0)
+        elif remainder == "drop":
+            n_keep = (B // M) * M
+            x = x[:n_keep]
+        else:
+            raise ValueError(f"unknown remainder policy {remainder!r}")
+    mb = x.reshape(M, x.shape[0] // M, *x.shape[1:])
 
     def body(params, mb):
         # params: (1, ...) local stage slice; mb: (M, b, ...) replicated
         stage = jax.lax.axis_index("stage")
         p_local = jax.tree.map(lambda a: a[0], params)
-        buf = jax.lax.pvary(jnp.zeros_like(mb[0]), ("stage",))
-        outs = jax.lax.pvary(jnp.zeros_like(mb), ("stage",))
-        mb = jax.lax.pvary(mb, ("stage",))
+        # check_rep=False: no replication annotations needed (pvary is
+        # not available on this jax version)
+        buf = jnp.zeros_like(mb[0])
+        outs = jnp.zeros_like(mb)
         T = M + S - 1
 
         def tick(t, carry):
@@ -78,13 +106,14 @@ def pipeline_forward(stage_fn: Callable, params_stacked, x,
             jnp.where(stage == S - 1, outs, jnp.zeros_like(outs)), "stage")
         return outs
 
-    shmap = jax.shard_map(
-        body, mesh=mesh,
+    shmap = shard_map(
+        body, mesh,
         in_specs=(P("stage"), P()),
         out_specs=P(),
+        check_rep=False,
     )
     y = shmap(params_stacked, mb)
-    return y.reshape(B, *y.shape[2:])
+    return y.reshape(-1, *y.shape[2:])[:n_keep]
 
 
 def bubble_fraction(n_stages: int, n_microbatches: int) -> float:

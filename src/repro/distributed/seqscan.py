@@ -97,6 +97,43 @@ def _seq_scan_bwd(mesh, axis, res, cot):
 _seq_scan.defvjp(_seq_scan_fwd, _seq_scan_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _axis_scan(axis, axis_size, qm, km, vm, s2_0, s1_0, s0_0):
+    return T._causal_scan_par_impl(qm, km, vm, s2_0, s1_0, s0_0,
+                                   axis_name=axis, axis_size=axis_size)
+
+
+def _axis_scan_fwd(axis, axis_size, qm, km, vm, s2_0, s1_0, s0_0):
+    out = _axis_scan(axis, axis_size, qm, km, vm, s2_0, s1_0, s0_0)
+    return out, (qm, km, vm, s2_0, s1_0, s0_0)
+
+
+def _axis_scan_bwd(axis, axis_size, res, cot):
+    qm, km, vm, s2_0, s1_0, s0_0 = res
+    yb, dS2_f, dS1_f, dS0_f = cot
+    return T._causal_scan_par_bwd_impl(
+        qm, km, vm, s2_0, s1_0, s0_0, yb, dS2_f, dS1_f, dS0_f,
+        axis_name=axis, axis_size=axis_size)
+
+
+_axis_scan.defvjp(_axis_scan_fwd, _axis_scan_bwd)
+
+
+def make_axis_seq_scan(axis: str, axis_size: int):
+    """A ``scan_fn`` for callers *already inside* a fully-manual
+    shard_map region over ``axis`` — the composed 3D train step
+    (distributed/composed.py), where the pipeline ring, FSDP gathers and
+    this scan all live in one manual region and a nested shard_map is
+    unavailable. Same boundary-exchange impls as :func:`make_seq_scan`,
+    same recompute custom VJP, minus the mesh wrapper: the prefix/suffix
+    state exchange runs over the ambient named axis, so Taylor-state
+    continuity holds across seq shards at every pipeline stage."""
+    def scan_fn(qm, km, vm, s2_0, s1_0, s0_0):
+        return _axis_scan(axis, axis_size, qm, km, vm, s2_0, s1_0, s0_0)
+
+    return scan_fn
+
+
 def make_seq_scan(mesh, axis: str = "seq"):
     """A ``scan_fn`` for :func:`core.taylor.causal_taylorshift`: the
     chunk scan sharded over ``mesh``'s ``axis``. Requires the leading

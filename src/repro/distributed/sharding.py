@@ -210,3 +210,51 @@ def zero1_shardings(param_shardings_tree, shapes_tree, mesh: Mesh):
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Composed (data, pipe, seq) mesh — distributed/composed.py
+# ---------------------------------------------------------------------------
+
+def composed_fsdp_dim(shape: tuple[int, ...], data: int) -> int:
+    """FSDP shard dim for a stage-stacked leaf ``(S, L, ...)`` on the
+    composed mesh, or -1 for replicated-over-data.
+
+    Only weight matrices (ndim ≥ 4 after stage/layer stacking) shard:
+    norm scales and tau vectors are a rounding error of the footprint
+    and all-gathering them per tick costs more latency than the bytes
+    save. First trailing dim divisible by the data-axis size wins.
+    """
+    if len(shape) < 4:
+        return -1
+    for dim in range(2, len(shape)):
+        if shape[dim] % data == 0 and shape[dim] >= data:
+            return dim
+    return -1
+
+
+def composed_param_specs(split_tree, mesh: Mesh, *, fsdp: bool = False):
+    """PartitionSpecs for the composed ``{"outer", "stages"}`` tree.
+
+    outer (embed/pos/final_norm/unembed) is replicated — it is touched
+    once per step, not once per layer, so FSDP buys little there.
+    stages leaves ``(S, L, ...)`` shard dim 0 over ``pipe``; with
+    ``fsdp`` the :func:`composed_fsdp_dim` dim additionally shards over
+    ``data``, to be all-gathered just-in-time inside the composed step
+    (the gather's transpose is the gradient reduce-scatter — ZeRO-3).
+    """
+    data = mesh.shape["data"]
+
+    def stage_spec(leaf):
+        shape = tuple(leaf.shape)
+        spec: list[Any] = ["pipe"] + [None] * (len(shape) - 1)
+        if fsdp:
+            dim = composed_fsdp_dim(shape, data)
+            if dim >= 0:
+                spec[dim] = "data"
+        return P(*spec)
+
+    return {
+        "outer": jax.tree.map(lambda _: P(), split_tree["outer"]),
+        "stages": jax.tree.map(stage_spec, split_tree["stages"]),
+    }

@@ -319,6 +319,54 @@ def select_backend(cfg, *, N: int, d: int, site: str = "full",
                       if tc.mode == "auto" else "mode pinned by config")
 
 
+def select_composed_scan(cfg, *, N: int, d: int, causal: bool,
+                         mesh) -> Selection:
+    """Resolve the attention path *inside* the composed (data, pipe, seq)
+    manual region (distributed/composed.py).
+
+    Only the linear-memory forms are eligible — the composed path exists
+    to hold the activation-memory slope at long N, so the direct O(N²)
+    form is never selected here regardless of the N0 crossover; kernels
+    are gated off (pallas_call has no partitioning rule under a
+    multi-device mesh). Causal picks the boundary-exchange chunk scan
+    (seq-parallel when the seq axis is non-trivial, the per-shard
+    sequential scan otherwise); non-causal picks Algorithm 1 with its
+    key-side sums psum'd across the seq axis. The decision is audited to
+    the same log as every other dispatch (site="composed").
+    """
+    c = dataclasses.replace(ctx.get(), enabled=True, mesh=mesh)
+    tc = cfg.taylor
+    shards = c.seq_size
+    n0, n1 = T.crossover_n0(d), T.crossover_n1(d)
+
+    def sel(name, scan="", chunk=0, reason=""):
+        s = Selection(REGISTRY[name], "efficient", False, shards, scan,
+                      chunk, n0, n1, reason, "analytic")
+        if D.log.enabled:
+            D.log.record(site="composed", N=N, d=d, H=cfg.n_heads,
+                         kv_heads=cfg.kv_heads, causal=causal,
+                         cache_kind="taylor", backend=s.name, mode=s.mode,
+                         repeat_kv=False, seq_shards=shards, scan=s.scan,
+                         chunk=s.chunk, n0=n0, n1=n1, reason=s.reason,
+                         provenance=s.provenance)
+        return s
+
+    if causal:
+        if shards > 1 and N % shards == 0:
+            return sel("causal-scan", scan="seq-parallel",
+                       chunk=plan_chunk(N, tc.chunk, seq_shards=shards),
+                       reason=f"composed mesh: boundary-exchange chunk "
+                              f"scan ×{shards} inside the manual region")
+        return sel("causal-scan", scan="sequential",
+                   chunk=plan_chunk(N, tc.chunk),
+                   reason="composed mesh: trivial seq axis — per-shard "
+                          "sequential chunk scan")
+    return sel("efficient",
+               reason=(f"non-causal: Algorithm 1, key-side sums psum'd "
+                       f"×{shards}" if shards > 1
+                       else "non-causal: Algorithm 1 per shard"))
+
+
 # ---------------------------------------------------------------------------
 # Serving plan ("and Back" for the cache, satellite of the engine)
 # ---------------------------------------------------------------------------

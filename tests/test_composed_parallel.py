@@ -1,0 +1,162 @@
+"""Composed 3D-parallel training (distributed/composed.py).
+
+The composed step runs FSDP × GPipe pipeline × sequence-parallel Taylor
+scan in ONE fully-manual shard_map with `value_and_grad` inside the
+body. The evidence here mirrors how the step is argued correct:
+
+  1. Parameter layout: `split_params` ⟷ `merge_params` round-trips
+     bit-for-bit, and invalid configs fail loudly (single device).
+  2. Divisibility contracts raise clear errors instead of shape
+     accidents (single device).
+  3. Loss AND gradients of the composed step match the single-device
+     `model.loss_fn` reference at ≤1e-4 across mesh shapes, causal and
+     non-causal, with and without FSDP/remat — this is what certifies
+     that the collective transposes (psum/ppermute/all_gather) used by
+     the in-body autodiff are the true adjoints on this jax version.
+  4. The full jitted train step (grad + adamw) decreases the loss with
+     params resting sharded (pipe on dim 0, FSDP over data).
+
+Multi-device cases run under the CI ``train-parallel`` job
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``); they skip on
+fewer devices. Pure jnp — no `kernels` marker.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed import composed as C
+from repro.launch import mesh as MESH
+from repro.launch.steps import default_opt_config
+from repro.models import model as M
+
+jax.config.update("jax_enable_x64", False)
+
+N_DEV = len(jax.devices())
+needs8 = pytest.mark.skipif(
+    N_DEV < 8, reason="needs 8 devices (CI train-parallel job sets "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+GB, N = 8, 256
+
+
+def _cfg(causal=True, n_layers=2, remat=False):
+    cfg = get_config("taylorshift-lra").reduced()
+    cfg = cfg.with_(n_layers=n_layers, d_model=32, n_heads=2, n_kv_heads=2,
+                    d_ff=64, max_seq_len=N, dtype="float32", remat=remat,
+                    causal=causal)
+    # fp32 + jnp reference attention: parity tolerances are about the
+    # parallel decomposition, not mixed-precision noise
+    return cfg.with_(taylor=dataclasses.replace(
+        cfg.taylor, mode="efficient", use_kernel=False))
+
+
+def _batch(cfg):
+    tok = jax.random.randint(jax.random.PRNGKey(1), (GB, N), 0, cfg.vocab)
+    lab = jax.random.randint(jax.random.PRNGKey(2), (GB, N), 0, cfg.vocab)
+    return {"tokens": tok, "labels": lab}
+
+
+# ---------------------------------------------------------------------------
+# 1+2. Layout round-trip and loud contracts (single device)
+# ---------------------------------------------------------------------------
+
+def test_split_merge_roundtrip():
+    cfg = _cfg(n_layers=4)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    split = C.split_params(cfg, params, 2)
+    leaf = jax.tree.leaves(split["stages"])[0]
+    assert leaf.shape[:2] == (2, 2)          # (S, L_per, ...)
+    merged = C.merge_params(split)
+    jax.tree.map(np.testing.assert_array_equal, merged, params)
+
+
+def test_split_rejects_indivisible_layers():
+    cfg = _cfg(n_layers=2)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="not divisible"):
+        C.split_params(cfg, params, 4)
+
+
+def test_grad_fn_rejects_bad_batch():
+    cfg = _cfg()
+    mesh = MESH.make_composed_mesh(data=1, pipe=1, seq=1)
+    with pytest.raises(ValueError, match="microbatches"):
+        C.build_composed_grad_fn(cfg, mesh, global_batch=7, seq_len=N,
+                                 n_microbatches=2)
+
+
+# ---------------------------------------------------------------------------
+# 3. Loss + gradient parity vs the single-device reference
+# ---------------------------------------------------------------------------
+
+def _parity(cfg, data, pipe, seq, *, fsdp, mb):
+    mesh = MESH.make_composed_mesh(data=data, pipe=pipe, seq=seq)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    split = C.split_params(cfg, params, pipe)
+    grad_fn, _ = C.build_composed_grad_fn(
+        cfg, mesh, global_batch=GB, seq_len=N, n_microbatches=mb,
+        fsdp=fsdp)
+    batch = _batch(cfg)
+    pshard = C.composed_param_shardings(split, mesh, fsdp=fsdp)
+    with mesh:
+        loss, grads = jax.jit(grad_fn)(jax.device_put(split, pshard),
+                                       batch)
+    ref_loss, ref_grads = jax.value_and_grad(
+        lambda p: M.loss_fn(p, cfg, batch))(params)
+    gm = C.merge_params(grads)
+    gerr = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))
+                           / (jnp.max(jnp.abs(b)) + 1e-8)),
+        gm, ref_grads)))
+    return abs(float(loss) - float(ref_loss)), gerr
+
+
+@needs8
+@pytest.mark.parametrize(
+    "causal,data,pipe,seq,fsdp,mb,remat,n_layers",
+    [
+        (True, 2, 2, 2, True, 2, False, 2),    # full 3D + FSDP
+        (True, 1, 2, 4, False, 4, False, 2),   # pipe × deep seq
+        (True, 1, 1, 8, True, 1, False, 2),    # pure context parallel
+        (False, 2, 2, 2, True, 2, False, 2),   # non-causal psum'd sums
+        (True, 4, 2, 1, True, 2, True, 2),     # FSDP-heavy + remat
+        (False, 1, 4, 2, True, 4, True, 4),    # 4 stages, remat
+    ])
+def test_composed_matches_single_device(causal, data, pipe, seq, fsdp,
+                                        mb, remat, n_layers):
+    cfg = _cfg(causal=causal, remat=remat, n_layers=n_layers)
+    loss_diff, gerr = _parity(cfg, data, pipe, seq, fsdp=fsdp, mb=mb)
+    assert loss_diff <= 1e-4, f"loss diff {loss_diff:.2e}"
+    assert gerr <= 1e-4, f"max rel grad err {gerr:.2e}"
+
+
+# ---------------------------------------------------------------------------
+# 4. Full train step: optimization progresses, params rest sharded
+# ---------------------------------------------------------------------------
+
+@needs8
+def test_composed_train_step_decreases_loss():
+    cfg = _cfg(causal=True, remat=True)
+    mesh = MESH.make_composed_mesh(data=2, pipe=2, seq=2)
+    init_fn, step_fn, _ = C.build_composed_train_step(
+        cfg, default_opt_config(cfg), mesh, global_batch=GB, seq_len=N,
+        n_microbatches=2, fsdp=True)
+    params, opt_state = init_fn(jax.random.PRNGKey(0))
+
+    leaf = jax.tree.leaves(params["stages"])[0]
+    assert leaf.sharding.spec[0] == "pipe"
+
+    tok = jax.random.randint(jax.random.PRNGKey(1), (GB, N), 0, cfg.vocab)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, axis=1)}
+    losses = []
+    for _ in range(6):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert int(opt_state["step"]) == 6
+    assert losses[-1] < losses[0], losses
+    assert {"loss", "grad_norm", "lr"} <= set(metrics)

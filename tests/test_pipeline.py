@@ -35,3 +35,45 @@ def test_pipeline_matches_sequential():
         h = stage_fn(jax.tree.map(lambda a: a[s], params), h)
     np.testing.assert_allclose(np.asarray(y), np.asarray(h),
                                rtol=1e-5, atol=1e-5)
+
+
+def _remainder_setup():
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        pytest.skip("needs >= 2 devices (run under dryrun env for more)")
+    S = 2
+    mesh = make_pp_mesh(S)
+    params = {"w": jnp.stack([jnp.full((4, 4), 2.0),
+                              jnp.full((4, 4), 0.5)])}
+
+    def stage_fn(p, h):
+        return jnp.tanh(h @ p["w"])
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (7, 4))   # 7 % 4 != 0
+    h = x
+    for s in range(S):
+        h = stage_fn(jax.tree.map(lambda a: a[s], params), h)
+    return mesh, params, stage_fn, x, np.asarray(h)
+
+
+def test_pipeline_remainder_error_by_default():
+    mesh, params, stage_fn, x, _ = _remainder_setup()
+    with pytest.raises(ValueError, match="n_microbatches"):
+        pipeline_forward(stage_fn, params, x, mesh, n_microbatches=4)
+
+
+def test_pipeline_remainder_pad_keeps_all_rows():
+    mesh, params, stage_fn, x, ref = _remainder_setup()
+    y = pipeline_forward(stage_fn, params, x, mesh, n_microbatches=4,
+                         remainder="pad")
+    assert y.shape == x.shape
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-5, atol=1e-5)
+
+
+def test_pipeline_remainder_drop_truncates():
+    mesh, params, stage_fn, x, ref = _remainder_setup()
+    y = pipeline_forward(stage_fn, params, x, mesh, n_microbatches=4,
+                         remainder="drop")
+    assert y.shape[0] == 4          # largest multiple of 4 below 7
+    np.testing.assert_allclose(np.asarray(y), ref[:4], rtol=1e-5,
+                               atol=1e-5)
