@@ -28,6 +28,13 @@ structural checks it enforces the paper's memory claim as a regression
 gate — the composed path's activation-bytes log-log slope must stay
 sub-linear (≤ 0.6 measured; gate at < 1.2) while the direct baseline is
 quadratic (> 1.7). ``--validate`` dispatches on the document's name.
+
+``compare_docs`` / ``--compare OLD NEW`` is the perf-regression
+sentinel: cells are matched by their identity keys, each curated
+metric (direction-aware — tok/s up is good, tail latency up is bad) is
+compared with a relative tolerance band, and every regressed cell is
+listed; the CLI exits nonzero when any regressed. CI runs it with a
+fresh benchmark doc against the committed BENCH_* baselines.
 """
 
 import json
@@ -153,6 +160,97 @@ def check_training_doc(doc: dict) -> None:
                          + "\n  ".join(problems))
 
 
+# ---------------------------------------------------------------------------
+# Perf-regression sentinel (--compare)
+# ---------------------------------------------------------------------------
+
+# per document: how cells are identified, and which metrics regress in
+# which direction. Curated rather than exhaustive — keys like
+# prompt_len are identity, means duplicate the percentiles, and
+# "naive_tok_s" regressing is not *our* regression.
+COMPARE_SPEC = {
+    "serving_throughput": {
+        "key": ("batch", "prompt_len", "gen_len"),
+        "higher": ("engine_tok_s", "speedup_vs_naive"),
+        "lower": ("ttft_p95_s", "itl_p95_s"),
+    },
+    "serving_decode_heavy": {
+        "key": ("batch", "drafter", "speculate_k"),
+        "higher": ("tok_s", "speedup"),
+        "lower": (),
+    },
+    "serving_shared_prefix": {
+        "key": ("overlap", "shared_len"),
+        "higher": ("ttft_speedup",),
+        "lower": ("ttft_cached_s",),
+    },
+    "training_composed": {
+        "key": ("seq_len", "mesh_data", "mesh_pipe", "mesh_seq",
+                "microbatches"),
+        "higher": ("tokens_per_s",),
+        "lower": ("step_time_s", "composed_temp_bytes"),
+    },
+}
+
+
+def compare_docs(old: dict, new: dict, *, tolerance: float = 0.25
+                 ) -> list[str]:
+    """Regressed cells of ``new`` vs baseline ``old`` ([] = clean).
+
+    A higher-is-better metric regresses when ``new < old*(1-tol)``; a
+    lower-is-better one when ``new > old*(1+tol)``. Cells present only
+    on one side are reported (coverage loss is a regression too — a
+    silently dropped cell would otherwise read as "no regression").
+    Nested sub-documents (``decode_heavy``/``shared_prefix``) recurse.
+    """
+    name = old.get("name")
+    if name != new.get("name"):
+        return [f"document name changed: {name!r} -> {new.get('name')!r}"]
+    spec = COMPARE_SPEC.get(name)
+    problems: list[str] = []
+    if spec is not None:
+        def cell_key(cell):
+            return tuple(cell.get(k) for k in spec["key"])
+
+        def key_str(key):
+            return ",".join(f"{k}={v}" for k, v in zip(spec["key"], key))
+
+        old_cells = {cell_key(c): c for c in old.get("cells", [])}
+        new_cells = {cell_key(c): c for c in new.get("cells", [])}
+        for key in old_cells.keys() - new_cells.keys():
+            problems.append(f"{name}[{key_str(key)}]: cell missing from "
+                            "the new document")
+        for key, nc in new_cells.items():
+            oc = old_cells.get(key)
+            if oc is None:
+                continue    # new coverage is never a regression
+            for metric, better in [(m, "higher") for m in spec["higher"]] \
+                    + [(m, "lower") for m in spec["lower"]]:
+                ov, nv = oc.get(metric), nc.get(metric)
+                if not isinstance(ov, (int, float)) \
+                        or not isinstance(nv, (int, float)):
+                    continue
+                if better == "higher" and nv < ov * (1 - tolerance):
+                    problems.append(
+                        f"{name}[{key_str(key)}].{metric}: "
+                        f"{ov:.4g} -> {nv:.4g} "
+                        f"({(nv / ov - 1) * 100:+.1f}% < -{tolerance:.0%})")
+                elif better == "lower" and nv > ov * (1 + tolerance):
+                    problems.append(
+                        f"{name}[{key_str(key)}].{metric}: "
+                        f"{ov:.4g} -> {nv:.4g} "
+                        f"({(nv / ov - 1) * 100:+.1f}% > +{tolerance:.0%})")
+    for sub in ("decode_heavy", "shared_prefix"):
+        if sub in old:
+            if sub not in new:
+                problems.append(f"{name}: sub-document {sub!r} missing "
+                                "from the new document")
+            else:
+                problems += compare_docs(old[sub], new[sub],
+                                         tolerance=tolerance)
+    return problems
+
+
 def main() -> None:
     if "--validate" in sys.argv:
         path = sys.argv[sys.argv.index("--validate") + 1]
@@ -164,6 +262,25 @@ def main() -> None:
         else:
             check_serving_doc(doc)
             print(f"{path}: serving benchmark schema OK")
+        return
+    if "--compare" in sys.argv:
+        i = sys.argv.index("--compare")
+        old_path, new_path = sys.argv[i + 1], sys.argv[i + 2]
+        tolerance = (float(sys.argv[sys.argv.index("--tolerance") + 1])
+                     if "--tolerance" in sys.argv else 0.25)
+        with open(old_path) as f:
+            old = json.load(f)
+        with open(new_path) as f:
+            new = json.load(f)
+        problems = compare_docs(old, new, tolerance=tolerance)
+        if problems:
+            print(f"{new_path} regressed vs {old_path} "
+                  f"(tolerance {tolerance:.0%}):")
+            for p in problems:
+                print(f"  {p}")
+            raise SystemExit(1)
+        print(f"{new_path}: no regressions vs {old_path} "
+              f"(tolerance {tolerance:.0%})")
         return
     fast = "--fast" in sys.argv
     print("name,us_per_call,derived")

@@ -368,3 +368,53 @@ def build_composed_train_step(cfg, opt_cfg, mesh, *, global_batch: int,
         return composed_param_shardings(split, mesh, fsdp=fsdp)
 
     return init_fn, step_fn, shard_fn
+
+
+def measure_seq_exchange(mesh, *, d: int, heads: int = 1,
+                         seq_axis: str = "seq", repeats: int = 3) -> dict:
+    """One-shot probe of the seq-axis chunk-boundary state exchange.
+
+    Times a jitted shard_map whose body performs the same communication
+    pattern as the scan's boundary exchange (seqscan.py): a log-depth
+    ``ppermute`` chain plus one final ``psum``, each hop moving one
+    TaylorState-sized segment total — ``(d², d+1) + (d, d+1) + (1,
+    d+1)`` floats per head, independent of sequence length. Runs once
+    at trainer startup (never inside the step), so the published
+    ``train_seq_exchange_*`` gauges cost nothing on the training path.
+
+    Returns ``{"seconds", "bytes_per_device", "rounds"}``; bytes are
+    the analytic per-device wire total (state bytes × (rounds + 1)).
+    """
+    import time as _time
+
+    S_seq = int(mesh.shape[seq_axis]) if seq_axis in mesh.shape else 1
+    if S_seq <= 1:
+        return {"seconds": 0.0, "bytes_per_device": 0, "rounds": 0}
+    rounds = int(math.ceil(math.log2(S_seq)))
+    state = (jnp.zeros((heads, d * d, d + 1), jnp.float32),
+             jnp.zeros((heads, d, d + 1), jnp.float32),
+             jnp.zeros((heads, 1, d + 1), jnp.float32))
+
+    def body(s2, s1, s0):
+        st = (s2, s1, s0)
+        hop = 1
+        while hop < S_seq:
+            perm = [(i, (i + hop) % S_seq) for i in range(S_seq)]
+            st = tuple(x + jax.lax.ppermute(x, seq_axis, perm)
+                       for x in st)
+            hop *= 2
+        return tuple(jax.lax.psum(x, seq_axis) for x in st)
+
+    f = jax.jit(shard_map(body, mesh, in_specs=(P(), P(), P()),
+                          out_specs=(P(), P(), P()), check_rep=False))
+    jax.block_until_ready(f(*state))            # compile + warm
+    t0 = _time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = f(*state)
+    jax.block_until_ready(out)
+    seconds = (_time.perf_counter() - t0) / repeats
+    state_bytes = 4 * heads * (d * d + d + 1) * (d + 1)
+    return {"seconds": seconds,
+            "bytes_per_device": state_bytes * (rounds + 1),
+            "rounds": rounds}

@@ -118,3 +118,20 @@ def pipeline_forward(stage_fn: Callable, params_stacked, x,
 
 def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
     return (n_stages - 1) / (n_microbatches + n_stages - 1)
+
+
+def stage_occupancy(n_stages: int, n_microbatches: int) -> list[dict]:
+    """Per-stage tick attribution of the GPipe schedule.
+
+    The forward schedule runs ``T = M + S - 1`` ticks; stage ``s`` is
+    busy exactly on ticks ``[s, s + M - 1]`` — ``s`` idle warmup ticks
+    (waiting for the first microbatch to arrive) and ``S - 1 - s`` idle
+    drain ticks (done while later stages finish). Deterministic, so the
+    trainer publishes it as the per-stage bubble breakdown instead of
+    timing inside the compiled scan.
+    """
+    ticks = n_microbatches + n_stages - 1
+    return [{"stage": s, "warmup_idle": s, "busy": n_microbatches,
+             "drain_idle": n_stages - 1 - s,
+             "idle_fraction": (n_stages - 1) / ticks}
+            for s in range(n_stages)]

@@ -25,6 +25,15 @@ PATH`` writes every ``select_backend`` record as JSONL — replaying
 exactly how the engine's ServePlan and each trace-time attention site
 were chosen. All of it observational: streams are bit-identical with
 every flag on or off.
+
+Fleet mode: ``--replica NAME`` names this process (the trace's
+process-name track and the snapshot's gauge tag) and
+``--metrics-snapshot PATH`` writes the mergeable ``repro.obs/v1``
+snapshot at exit. Run N replicas, then::
+
+    python -m repro.obs --request req0 r0_trace.json r1_trace.json
+    python -m repro.obs --merge-snapshots r0.snap r1.snap --prom fleet.prom
+    python -m repro.obs.slo --check --snapshot r0.snap --snapshot r1.snap
 """
 
 from __future__ import annotations
@@ -186,6 +195,13 @@ def main():
                          "a simultaneous device profile)")
     ap.add_argument("--metrics-file", default=None, metavar="PATH",
                     help="write the Prometheus text exposition at exit")
+    ap.add_argument("--metrics-snapshot", default=None, metavar="PATH",
+                    help="write the mergeable repro.obs/v1 metrics "
+                         "snapshot at exit (fleet aggregation / SLO "
+                         "input: python -m repro.obs / repro.obs.slo)")
+    ap.add_argument("--replica", default=None, metavar="NAME",
+                    help="name this replica: tags the trace's process "
+                         "track and the snapshot's gauges")
     ap.add_argument("--metrics-port", type=int, default=0, metavar="PORT",
                     help="serve the exposition live on "
                          "http://localhost:PORT/metrics (0 = off)")
@@ -224,6 +240,8 @@ def main():
     # observability switches come up BEFORE the engine exists so the
     # ServePlan's select_backend calls land in the decision log and the
     # first-dispatch (compile=true) spans land in the trace
+    if args.replica:
+        tracer.set_process_name(args.replica)
     if args.trace:
         tracer.enable(annotate_steps=args.annotate_steps)
     if args.decision_log:
@@ -264,6 +282,11 @@ def main():
         with open(args.metrics_file, "w") as f:
             f.write(engine.render_metrics())
         print(f"metrics exposition -> {args.metrics_file}")
+    if args.metrics_snapshot:
+        from repro.obs import aggregate as OA
+        OA.save_snapshot(engine.snapshot_metrics(replica=args.replica),
+                         args.metrics_snapshot)
+        print(f"metrics snapshot -> {args.metrics_snapshot}")
     if args.decision_log:
         OD.log.write_jsonl(args.decision_log)
         OD.log.disable()

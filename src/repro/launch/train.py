@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import argparse
 import logging
+import platform
 import time
 
 import jax
@@ -72,21 +73,94 @@ class TrainObs:
             "train_pipeline_bubble_fraction",
             "(S-1)/(M+S-1) of the GPipe schedule; 0 off the composed "
             "path")
+        # per-axis deep metrics (composed path, PR 9): bubble
+        # attribution per stage from the deterministic GPipe schedule,
+        # FSDP collective bytes from the compiled HLO, the seq-axis
+        # boundary-exchange probe, and a per-host step gauge whose
+        # spread across fleet snapshots is the straggler signal
+        self.stage_busy = r.gauge(
+            "train_pipeline_stage_busy_ticks",
+            "GPipe ticks stage s computes (= microbatches)",
+            labelnames=("stage",))
+        self.stage_warmup = r.gauge(
+            "train_pipeline_stage_warmup_ticks",
+            "idle ticks before the first microbatch reaches stage s",
+            labelnames=("stage",))
+        self.stage_drain = r.gauge(
+            "train_pipeline_stage_drain_ticks",
+            "idle ticks after stage s's last microbatch",
+            labelnames=("stage",))
+        self.collective_count = r.gauge(
+            "train_collective_count",
+            "collectives per compiled step, from the post-SPMD HLO",
+            labelnames=("op",))
+        self.collective_bytes = r.gauge(
+            "train_collective_buffer_bytes",
+            "per-device buffer bytes per collective kind (FSDP "
+            "all-gather / reduce-scatter live here)", labelnames=("op",))
+        self.collective_wire = r.gauge(
+            "train_collective_wire_bytes_per_device",
+            "modeled per-device wire bytes of one compiled step")
+        self.seq_exchange_s = r.gauge(
+            "train_seq_exchange_seconds",
+            "measured seq-axis boundary-exchange time (log-depth "
+            "ppermute + psum probe, distributed/composed.py)")
+        self.seq_exchange_b = r.gauge(
+            "train_seq_exchange_bytes_per_device",
+            "analytic per-device bytes of one boundary exchange")
+        self.host_step = r.gauge(
+            "train_host_step_seconds",
+            "last step wall time on this host (fleet straggler signal)",
+            labelnames=("host",))
+        self._host = platform.node() or "host0"
 
     def record_compiled(self, step_fn, *example_args) -> None:
-        """AOT-lower the step to read XLA's activation-memory figure.
-        Costs one extra compile, so only runs when obs is requested."""
+        """AOT-lower the step to read XLA's activation-memory figure
+        and the per-collective byte accounting (hlo_analysis). Costs
+        one extra compile, so only runs when obs is requested."""
         try:
-            mem = step_fn.lower(*example_args).compile().memory_analysis()
+            compiled = step_fn.lower(*example_args).compile()
+        except Exception:   # pragma: no cover — backend without AOT
+            log.debug("AOT compile unavailable", exc_info=True)
+            return
+        try:
+            mem = compiled.memory_analysis()
             self.activation_bytes.set(float(mem.temp_size_in_bytes))
         except Exception:   # pragma: no cover — backend without analysis
             log.debug("memory_analysis unavailable", exc_info=True)
+        try:
+            from repro.distributed.hlo_analysis import collective_stats
+            stats = collective_stats(compiled.as_text())
+            for op, n in stats.counts.items():
+                self.collective_count.labels(op=op).set(n)
+            for op, b in stats.buffer_bytes.items():
+                self.collective_bytes.labels(op=op).set(b)
+            self.collective_wire.set(stats.wire_bytes_per_device)
+        except Exception:   # pragma: no cover — no post-SPMD text
+            log.debug("collective_stats unavailable", exc_info=True)
+
+    def record_pipeline(self, n_stages: int, n_microbatches: int) -> None:
+        """Whole-schedule bubble plus the per-stage warmup/busy/drain
+        tick split (distributed/pipeline.py:stage_occupancy)."""
+        from repro.distributed.pipeline import (bubble_fraction,
+                                                stage_occupancy)
+        self.bubble.set(bubble_fraction(n_stages, n_microbatches))
+        for occ in stage_occupancy(n_stages, n_microbatches):
+            s = str(occ["stage"])
+            self.stage_busy.labels(stage=s).set(occ["busy"])
+            self.stage_warmup.labels(stage=s).set(occ["warmup_idle"])
+            self.stage_drain.labels(stage=s).set(occ["drain_idle"])
+
+    def record_seq_exchange(self, probe: dict) -> None:
+        self.seq_exchange_s.set(probe["seconds"])
+        self.seq_exchange_b.set(probe["bytes_per_device"])
 
     def observe(self, *, dt: float, tokens: int, loss: float) -> None:
         self.step_time.observe(dt)
         self.tokens_per_sec.set(tokens / max(dt, 1e-9))
         self.loss.set(loss)
         self.steps_total.inc()
+        self.host_step.labels(host=self._host).set(dt)
 
     def write(self, path: str) -> None:
         with open(path, "w") as f:
@@ -132,7 +206,8 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
             opt_state = jax.device_put(init_opt(params), oshard)
 
         loader = DataLoader(data_cfg, start_step=start_step)
-        detector = StragglerDetector()
+        detector = StragglerDetector(
+            registry=obs.registry if obs is not None else None)
         losses = []
         obs_compiled = obs is None
         with PreemptionHandler() as pre:
@@ -204,7 +279,14 @@ def train_composed(cfg, *, steps: int, global_batch: int, seq_len: int,
              dict(mesh.shape), sel.scan, sel.chunk, n_microbatches,
              bubble_fraction(S_pipe, n_microbatches), fsdp, sel.reason)
     if obs is not None:
-        obs.bubble.set(bubble_fraction(S_pipe, n_microbatches))
+        obs.record_pipeline(S_pipe, n_microbatches)
+        if S_seq > 1:
+            # one-shot startup probe — never inside the step loop
+            obs.record_seq_exchange(C.measure_seq_exchange(
+                mesh, d=cfg.dim_head, heads=cfg.n_heads))
+        else:
+            obs.record_seq_exchange(
+                {"seconds": 0.0, "bytes_per_device": 0, "rounds": 0})
 
     init_fn, step_fn, _ = C.build_composed_train_step(
         cfg, opt_cfg, mesh, global_batch=global_batch, seq_len=seq_len,
@@ -226,7 +308,8 @@ def train_composed(cfg, *, steps: int, global_batch: int, seq_len: int,
             params, opt_state = init_fn(jax.random.PRNGKey(seed))
 
         loader = DataLoader(data_cfg, start_step=start_step)
-        detector = StragglerDetector()
+        detector = StragglerDetector(
+            registry=obs.registry if obs is not None else None)
         losses = []
         obs_compiled = obs is None
         with tracer.span("composed_schedule", stages=S_pipe, seq=S_seq,

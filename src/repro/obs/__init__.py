@@ -1,31 +1,48 @@
-"""Unified observability: tracing, metrics, and decision auditing.
+"""Unified observability: tracing, metrics, decision auditing, and the
+fleet layer on top (docs/observability.md).
 
-Three pillars (docs/observability.md):
+Process-local pillars:
 
 * ``obs.trace``     — nested span tracer, Chrome-trace/Perfetto export,
   jit-compile tagging, optional ``jax.profiler`` step correlation;
-  global instance ``obs.tracer``.
+  global instance ``obs.tracer``. Fleet-aware: real ``os.getpid()``
+  stamps, process-name metadata events, epoch offsets for
+  cross-process merge.
 * ``obs.metrics``   — counters/gauges/histograms with labels +
   Prometheus text exposition; the engine's ``EngineStats`` is a view
-  over a ``MetricsRegistry``.
+  over a ``MetricsRegistry``; ``obs.metrics.default_registry`` hosts
+  process-lifetime infrastructure metrics (ft heartbeats).
 * ``obs.decisions`` — structured audit log of every
   ``models/backend.py:select_backend`` call; global ``obs.decisions.log``.
 
-Invariant (design.md §4.6): purely observational. All three pillars are
+Fleet layers (offline — they read exported artifacts, never the hot
+path):
+
+* ``obs.aggregate`` — versioned ``repro.obs/v1`` metrics snapshots,
+  associative cross-replica merge, fleet Prometheus rendering.
+* ``obs.slo``       — declarative SLO targets + error budgets over a
+  registry or snapshot; ``python -m repro.obs.slo --check`` for CI.
+* ``python -m repro.obs`` — trace merge + per-request cross-process
+  timelines + snapshot aggregation CLI.
+
+Invariant (design.md §4.6): purely observational. The pillars are
 write-only from the serving/dispatch hot paths — nothing reads them
 back into scheduling, selection, or sampling — and everything except
 the always-on metrics counters is off by default with one-flag-check
-overhead.
+overhead. Aggregation and SLO evaluation read metrics *offline* (a
+snapshot or exported file), never from the hot path.
 """
 
-from repro.obs import decisions, metrics, trace, validate  # noqa: F401
+from repro.obs import (aggregate, decisions, metrics,  # noqa: F401
+                       slo, trace, validate)
 from repro.obs.decisions import DecisionLog
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
-                               render_all)
-from repro.obs.trace import Tracer, tracer
+                               default_registry, render_all)
+from repro.obs.trace import Tracer, merge_traces, request_spans, tracer
 
 __all__ = [
-    "decisions", "metrics", "trace", "validate",
+    "aggregate", "decisions", "metrics", "slo", "trace", "validate",
     "DecisionLog", "Counter", "Gauge", "Histogram", "MetricsRegistry",
-    "render_all", "Tracer", "tracer",
+    "default_registry", "render_all", "Tracer", "merge_traces",
+    "request_spans", "tracer",
 ]

@@ -1,0 +1,107 @@
+"""Fleet CLI: cross-process trace merge, request timelines, snapshot
+aggregation.
+
+  # one request's timeline reconstructed across N replica traces
+  python -m repro.obs --request req0 r0_trace.json r1_trace.json
+
+  # merge traces into one epoch-aligned Chrome trace (open in Perfetto)
+  python -m repro.obs --merge fleet_trace.json r0.json r1.json
+
+  # fold replica metrics snapshots into one fleet view
+  python -m repro.obs --merge-snapshots r0.snap r1.snap \
+      --out fleet.snap [--prom fleet.prom]
+
+SLO evaluation lives one module down: ``python -m repro.obs.slo``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs import aggregate as A
+from repro.obs import trace as T
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _print_timeline(request_id: str, paths: list[str]) -> int:
+    merged = T.merge_traces(*(_load(p) for p in paths))
+    names = T.process_names(merged)
+    spans = T.request_spans(merged, request_id)
+    if not spans:
+        print(f"request {request_id!r}: no spans in {len(paths)} trace(s)")
+        return 1
+    t0 = spans[0]["ts"]
+    print(f"request {request_id} — {len(spans)} spans across "
+          f"{len({s['pid'] for s in spans})} process(es), "
+          f"t0 = {t0 / 1e6:.6f} unix")
+    print(f"{'t+ms':>10} {'dur ms':>9}  {'replica':<14} event")
+    for s in spans:
+        where = names.get(s["pid"], f"pid {s['pid']}")
+        args = {k: v for k, v in s["args"].items()
+                if k not in ("request", "requests")}
+        extra = (" " + " ".join(f"{k}={v}" for k, v in args.items())
+                 if args else "")
+        print(f"{(s['ts'] - t0) / 1e3:>10.3f} {s['dur'] / 1e3:>9.3f}  "
+              f"{where:<14} {s['name']}{extra}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="merge traces/snapshots across engine replicas")
+    ap.add_argument("paths", nargs="*", metavar="PATH",
+                    help="trace or snapshot files, mode-dependent")
+    ap.add_argument("--request", metavar="ID",
+                    help="print this request's cross-process timeline "
+                         "from the given trace files")
+    ap.add_argument("--merge", metavar="OUT",
+                    help="write the epoch-aligned merge of the given "
+                         "trace files")
+    ap.add_argument("--merge-snapshots", action="store_true",
+                    help="treat PATHs as repro.obs/v1 snapshots and "
+                         "merge them (--out / --prom)")
+    ap.add_argument("--out", metavar="PATH",
+                    help="with --merge-snapshots: write the fleet "
+                         "snapshot JSON here")
+    ap.add_argument("--prom", metavar="PATH",
+                    help="with --merge-snapshots: write the fleet "
+                         "Prometheus exposition here")
+    args = ap.parse_args(argv)
+
+    if not args.paths:
+        ap.error("no input files")
+    if args.request:
+        return _print_timeline(args.request, args.paths)
+    if args.merge:
+        merged = T.merge_traces(*(_load(p) for p in args.paths))
+        with open(args.merge, "w") as f:
+            json.dump(merged, f)
+        print(f"merged {len(args.paths)} traces "
+              f"({len(merged['traceEvents'])} events) -> {args.merge}")
+        return 0
+    if args.merge_snapshots:
+        merged = A.merge_snapshots(
+            *(A.load_snapshot(p) for p in args.paths))
+        if args.out:
+            A.save_snapshot(merged, args.out)
+            print(f"fleet snapshot ({len(merged['metrics'])} metrics) "
+                  f"-> {args.out}")
+        if args.prom:
+            with open(args.prom, "w") as f:
+                f.write(A.render_snapshot(merged))
+            print(f"fleet exposition -> {args.prom}")
+        if not args.out and not args.prom:
+            print(A.render_snapshot(merged), end="")
+        return 0
+    ap.error("pick one of --request / --merge / --merge-snapshots")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

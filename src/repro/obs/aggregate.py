@@ -1,0 +1,279 @@
+"""Mergeable metrics snapshots: N replica registries -> one fleet view.
+
+The wire format the future prefix-aware router consumes for per-replica
+load (ROADMAP "fleet-scale serving"), and the offline half of the
+observability contract: the hot path only ever *writes* plain
+counters/gauges/histograms (obs/metrics.py); everything here — JSON
+serialization, cross-process merge, fleet Prometheus rendering — reads
+a frozen snapshot after the fact (docs/design.md §4.6).
+
+Schema (versioned like ``repro.tune/v1`` — foreign versions are
+refused, never coerced)::
+
+    {"schema": "repro.obs/v1", "replica": "r0" | null,
+     "created_unix": 1e9, "metrics": {
+        name: {"kind": "counter"|"gauge"|"histogram", "help": str,
+               "children": [{"labels": {...}, ...payload}]}}}
+
+counter payload   ``value``
+gauge payload     ``value``, ``ts`` (unix seconds of last write | null)
+histogram payload ``buckets``, ``bucket_counts`` (len+1, +Inf last),
+                  ``sum``, ``count``, ``min``/``max`` (null when empty),
+                  ``samples`` (raw observations while exact, else [])
+
+Merge semantics (:func:`merge_snapshots` — associative by
+construction, so folding replica snapshots in any grouping yields the
+same fleet document):
+
+  * counters with equal (name, labels) **sum** — the fleet total equals
+    the sum of the per-replica totals;
+  * histograms with equal (name, labels) merge via
+    ``Histogram.merge``: bucket counts/sum/count/min/max exactly,
+    samples kept only while every input is exact and the union fits
+    under ``MAX_SAMPLES``;
+  * gauges are **tagged, not summed**: each leaf snapshot's gauge
+    children gain a ``replica`` label (exactly once — merged snapshots
+    carry ``replica: null`` and never re-tag), so per-replica load
+    survives aggregation; two gauges that still collide take the
+    freshest ``ts`` (ties: larger value).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import time
+
+from repro.obs.metrics import Histogram, MetricsRegistry, _Family
+
+SCHEMA = "repro.obs/v1"
+
+_KINDS = ("counter", "gauge", "histogram")
+
+
+def _none_if_inf(v: float):
+    return None if not math.isfinite(v) else v
+
+
+def snapshot(*registries: MetricsRegistry, replica: str | None = None
+             ) -> dict:
+    """Serialize registries into one ``repro.obs/v1`` document.
+
+    Metric names must be disjoint across ``registries`` (same contract
+    as ``render_all`` — the engine's stats + prefix-cache pair).
+    ``replica`` names this process; the merge step turns it into the
+    ``replica`` gauge label.
+    """
+    metrics: dict = {}
+    for reg in registries:
+        for name, kind, help, children in reg.families():
+            if name in metrics:
+                raise ValueError(
+                    f"duplicate metric {name!r} across registries")
+            out_children = []
+            for c in children:
+                child: dict = {"labels": dict(c.labels)}
+                if kind == "histogram":
+                    child.update(
+                        buckets=list(c.buckets),
+                        bucket_counts=list(c.bucket_counts),
+                        sum=c.sum, count=c.count,
+                        min=_none_if_inf(c._min),
+                        max=_none_if_inf(c._max),
+                        samples=(list(c.samples) if c.exact else []))
+                elif kind == "gauge":
+                    child.update(value=c.value, ts=c.ts)
+                else:
+                    child.update(value=c.value)
+                out_children.append(child)
+            metrics[name] = {"kind": kind, "help": help,
+                             "children": out_children}
+    return {"schema": SCHEMA, "replica": replica,
+            "created_unix": time.time(), "metrics": metrics}
+
+
+def validate_snapshot(doc) -> list[str]:
+    """Problems in a snapshot document ([] = valid); foreign schema
+    versions are a single fatal problem, mirroring ``repro.tune``."""
+    if not isinstance(doc, dict):
+        return ["snapshot is not an object"]
+    if doc.get("schema") != SCHEMA:
+        return [f"schema {doc.get('schema')!r} is not {SCHEMA!r} — refusing"]
+    problems: list[str] = []
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict):
+        return problems + ["metrics missing or not an object"]
+    for name, fam in metrics.items():
+        kind = fam.get("kind")
+        if kind not in _KINDS:
+            problems.append(f"{name}: unknown kind {kind!r}")
+            continue
+        children = fam.get("children")
+        if not isinstance(children, list):
+            problems.append(f"{name}: children missing")
+            continue
+        for i, c in enumerate(children):
+            where = f"{name}.children[{i}]"
+            if not isinstance(c.get("labels"), dict):
+                problems.append(f"{where}: labels missing")
+            if kind == "histogram":
+                bc, bk = c.get("bucket_counts"), c.get("buckets")
+                if not isinstance(bk, list) or not isinstance(bc, list) \
+                        or len(bc) != len(bk) + 1:
+                    problems.append(f"{where}: bucket_counts/buckets "
+                                    "length mismatch")
+                    continue
+                if sum(bc) != c.get("count"):
+                    problems.append(f"{where}: bucket_counts sum "
+                                    f"{sum(bc)} != count {c.get('count')}")
+                samples = c.get("samples", [])
+                if samples and len(samples) != c.get("count"):
+                    problems.append(f"{where}: partial samples "
+                                    f"({len(samples)} of {c.get('count')})"
+                                    " — snapshots are exact or empty")
+                if not isinstance(c.get("sum"), (int, float)) \
+                        or not math.isfinite(c["sum"]):
+                    problems.append(f"{where}: non-finite sum")
+            else:
+                v = c.get("value")
+                if not isinstance(v, (int, float)) or (
+                        isinstance(v, float) and not math.isfinite(v)):
+                    problems.append(f"{where}: bad value {v!r}")
+    return problems
+
+
+def check_snapshot(doc) -> None:
+    problems = validate_snapshot(doc)
+    if problems:
+        raise ValueError("invalid metrics snapshot:\n  "
+                         + "\n  ".join(problems))
+
+
+def _child_key(labels: dict) -> tuple:
+    return tuple(sorted(labels.items()))
+
+
+def _hist_from_child(c: dict) -> Histogram:
+    h = Histogram(labels=dict(c["labels"]), buckets=tuple(c["buckets"]))
+    h.bucket_counts = list(c["bucket_counts"])
+    h.sum = float(c["sum"])
+    h.count = int(c["count"])
+    h._min = c["min"] if c.get("min") is not None else math.inf
+    h._max = c["max"] if c.get("max") is not None else -math.inf
+    h.samples = list(c.get("samples") or [])
+    return h
+
+
+def _hist_to_child(h: Histogram) -> dict:
+    return {"labels": dict(h.labels), "buckets": list(h.buckets),
+            "bucket_counts": list(h.bucket_counts), "sum": h.sum,
+            "count": h.count, "min": _none_if_inf(h._min),
+            "max": _none_if_inf(h._max),
+            "samples": list(h.samples) if h.exact else []}
+
+
+def merge_snapshots(*docs: dict) -> dict:
+    """Fold N snapshots into one fleet snapshot (see module docstring
+    for the per-kind rules). Refuses foreign schema versions."""
+    for doc in docs:
+        check_snapshot(doc)
+    metrics: dict = {}
+    for doc in docs:
+        replica = doc.get("replica")
+        for name, fam in doc["metrics"].items():
+            out = metrics.setdefault(
+                name, {"kind": fam["kind"], "help": fam.get("help", ""),
+                       "children": {}})
+            if out["kind"] != fam["kind"]:
+                raise ValueError(
+                    f"metric {name!r}: kind {fam['kind']!r} from replica "
+                    f"{replica!r} conflicts with {out['kind']!r}")
+            out["help"] = out["help"] or fam.get("help", "")
+            for c in fam["children"]:
+                labels = dict(c["labels"])
+                # leaf snapshots (replica set) tag their gauges exactly
+                # once; merged snapshots carry replica=None and pass
+                # children through untouched — that single-tagging rule
+                # is what makes the fold associative
+                if (fam["kind"] == "gauge" and replica is not None
+                        and "replica" not in labels):
+                    labels["replica"] = replica
+                key = _child_key(labels)
+                prev = out["children"].get(key)
+                if prev is None:
+                    merged = dict(c, labels=labels)
+                elif fam["kind"] == "counter":
+                    merged = {"labels": labels,
+                              "value": prev["value"] + c["value"]}
+                elif fam["kind"] == "gauge":
+                    # freshest write wins; ties break on value so the
+                    # choice is order-independent
+                    a = (prev.get("ts") or 0.0, prev["value"])
+                    b = (c.get("ts") or 0.0, c["value"])
+                    merged = dict((c if b >= a else prev), labels=labels)
+                else:
+                    merged = _hist_to_child(
+                        _hist_from_child(prev).merge(_hist_from_child(c)))
+                out["children"][key] = merged
+    return {"schema": SCHEMA, "replica": None, "created_unix": time.time(),
+            "metrics": {
+                name: {"kind": fam["kind"], "help": fam["help"],
+                       "children": [fam["children"][k]
+                                    for k in sorted(fam["children"])]}
+                for name, fam in metrics.items()}}
+
+
+def registry_from_snapshot(doc: dict) -> MetricsRegistry:
+    """Rebuild a live ``MetricsRegistry`` from a snapshot — the uniform
+    object the SLO evaluator and ``render_snapshot`` both consume, so a
+    fleet snapshot answers quantile/value queries exactly like the
+    registry it came from."""
+    check_snapshot(doc)
+    reg = MetricsRegistry()
+    for name, fam in doc["metrics"].items():
+        kind, help, children = fam["kind"], fam.get("help", ""), \
+            fam["children"]
+        labelnames = tuple(sorted(
+            {k for c in children for k in c["labels"]}))
+        if kind == "histogram":
+            buckets = tuple(children[0]["buckets"]) if children \
+                else None
+            m = reg.histogram(name, help, labelnames=labelnames,
+                              **({"buckets": buckets} if buckets else {}))
+        elif kind == "gauge":
+            m = reg.gauge(name, help, labelnames=labelnames)
+        else:
+            m = reg.counter(name, help, labelnames=labelnames)
+        for c in children:
+            child = m.labels(**c["labels"]) if isinstance(m, _Family) \
+                else m
+            if kind == "histogram":
+                h = _hist_from_child(c)
+                child.bucket_counts = h.bucket_counts
+                child.sum, child.count = h.sum, h.count
+                child._min, child._max = h._min, h._max
+                child.samples = h.samples
+            elif kind == "gauge":
+                child.value = c["value"]
+                child.ts = c.get("ts")
+            else:
+                child.value = c["value"]
+    return reg
+
+
+def render_snapshot(doc: dict) -> str:
+    """One Prometheus text exposition for a (possibly fleet-merged)
+    snapshot."""
+    return registry_from_snapshot(doc).render()
+
+
+def save_snapshot(doc: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(doc, f)
+
+
+def load_snapshot(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    check_snapshot(doc)
+    return doc

@@ -32,6 +32,7 @@ import bisect
 import math
 import re
 import threading
+import time
 
 _NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
 
@@ -85,20 +86,30 @@ class Counter(_Child):
 
 
 class Gauge(_Child):
-    """A value that can go up and down."""
+    """A value that can go up and down.
+
+    ``ts`` is the unix time of the last write (None until one happens):
+    the aggregation layer (obs/aggregate.py) serializes it so merged
+    fleet snapshots can pick the freshest of two writes to the *same*
+    series and the future router can judge per-replica staleness.
+    """
 
     def __init__(self, labels: dict | None = None):
         super().__init__(labels or {})
         self.value = 0.0
+        self.ts: float | None = None
 
     def set(self, value: float) -> None:
         self.value = value
+        self.ts = time.time()
 
     def inc(self, amount: float = 1.0) -> None:
         self.value += amount
+        self.ts = time.time()
 
     def dec(self, amount: float = 1.0) -> None:
         self.value -= amount
+        self.ts = time.time()
 
 
 class Histogram(_Child):
@@ -183,6 +194,71 @@ class Histogram(_Child):
             if i < len(self.buckets):
                 prev_edge = self.buckets[i]
         return min(max(est, self._min), self._max)
+
+    @property
+    def exact(self) -> bool:
+        """True while the raw samples cover every observation, i.e.
+        quantiles are exact rather than bucket-interpolated."""
+        return len(self.samples) == self.count
+
+    def cdf(self, value: float) -> float:
+        """Fraction of observations ≤ ``value`` (SLO error budgets).
+        Exact from samples when available, else cumulative-bucket
+        interpolation — same degradation contract as :meth:`quantile`.
+        """
+        if not self.count:
+            return math.nan
+        if self.exact:
+            return bisect.bisect_right(sorted(self.samples),
+                                       value) / self.count
+        if value >= self._max:
+            return 1.0
+        if value < self._min:
+            return 0.0
+        cum = 0
+        prev_edge = 0.0
+        for i, n in enumerate(self.bucket_counts):
+            edge = (self.buckets[i] if i < len(self.buckets)
+                    else math.inf)
+            if value < edge:
+                if n and math.isfinite(edge):
+                    frac = (value - prev_edge) / max(edge - prev_edge,
+                                                     1e-300)
+                    cum += n * min(max(frac, 0.0), 1.0)
+                elif n:
+                    cum += n
+                return min(cum / self.count, 1.0)
+            cum += n
+            prev_edge = edge
+        return 1.0
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        """A new histogram equal to observing both inputs' streams.
+
+        Bucket counts, sum, count, min and max merge *exactly* always.
+        Raw samples survive only when both inputs are exact and the
+        union fits under ``MAX_SAMPLES``; otherwise the result keeps no
+        samples and quantiles degrade to bucket interpolation — the
+        same contract as a single capped histogram. Under that rule the
+        merge is associative: exactness of a fold equals "every leaf
+        exact and the total count ≤ MAX_SAMPLES", independent of
+        grouping, and the kept samples are the sorted union.
+        """
+        if self.buckets != other.buckets:
+            raise ValueError(
+                f"cannot merge histograms with different buckets: "
+                f"{self.buckets} vs {other.buckets}")
+        out = Histogram(labels=dict(self.labels), buckets=self.buckets)
+        out.bucket_counts = [a + b for a, b in
+                             zip(self.bucket_counts, other.bucket_counts)]
+        out.sum = self.sum + other.sum
+        out.count = self.count + other.count
+        out._min = min(self._min, other._min)
+        out._max = max(self._max, other._max)
+        if (self.exact and other.exact
+                and out.count <= self.MAX_SAMPLES):
+            out.samples = sorted(self.samples + other.samples)
+        return out
 
 
 class _Family:
@@ -275,17 +351,23 @@ class MetricsRegistry:
         m = self._metrics.get(name)
         return default if m is None else m.value
 
+    def families(self):
+        """Yield ``(name, kind, help, children)`` per registered metric,
+        name-sorted — the uniform iteration surface ``render()`` and the
+        snapshot serializer (obs/aggregate.py) share."""
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            if isinstance(m, _Family):
+                yield name, m.kind, m.help, m.children
+            else:
+                yield name, m._kind, m._help, [m]
+
     # -- exposition ---------------------------------------------------------
 
     def render(self) -> str:
         """Prometheus text exposition of every registered metric."""
         out: list[str] = []
-        for name in sorted(self._metrics):
-            m = self._metrics[name]
-            if isinstance(m, _Family):
-                kind, help, children = m.kind, m.help, m.children
-            else:
-                kind, help, children = m._kind, m._help, [m]
+        for name, kind, help, children in self.families():
             if help:
                 out.append(f"# HELP {name} {_escape(help)}")
             out.append(f"# TYPE {name} {kind}")
@@ -324,3 +406,11 @@ def render_all(*registries: MetricsRegistry) -> str:
                              f"{sorted(dup)}")
         seen |= names
     return "".join(r.render() for r in registries)
+
+
+#: Process-global registry for publishers with no natural owner —
+#: `distributed/ft.py` membership/straggler metrics land here, the way
+#: spans land in the global ``trace.tracer``. The serving engine keeps
+#: its own (resettable) registries; this one is for process-lifetime
+#: infrastructure counters.
+default_registry = MetricsRegistry()

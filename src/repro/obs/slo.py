@@ -1,0 +1,239 @@
+"""Declarative SLO targets evaluated against metrics — never the hot path.
+
+A target is a plain dict (JSON-friendly so ``--config`` files work)::
+
+    {"name": "ttft_p95",  "metric": "engine_ttft_seconds",
+     "quantile": 0.95, "max": 2.0}                    # histogram tail
+    {"name": "decode_rate", "metric": "engine_decode_tokens_total",
+     "per": "engine_step_wall_seconds_sum", "min": 50.0}   # tokens/s
+    {"name": "hit_rate", "ratio": ["prefix_cache_hits_total",
+     ["prefix_cache_hits_total", "prefix_cache_misses_total"]],
+     "min": 0.5}                                      # cache hit rate
+    {"name": "bubble", "metric": "train_pipeline_bubble_fraction",
+     "max": 0.5}                                      # gauge ceiling
+
+Value resolution, uniformly over a live ``MetricsRegistry`` or a
+``repro.obs/v1`` snapshot (rebuilt via
+``aggregate.registry_from_snapshot`` — evaluation always reads a frozen
+registry, which is what keeps SLO checking off the serving hot path,
+docs/design.md §4.6):
+
+  * ``metric`` + ``quantile`` — the histogram quantile (labeled
+    children merged first, so fleet snapshots evaluate over the union
+    of replicas);
+  * ``metric`` alone — counter/gauge value (children summed);
+  * ``metric`` + ``per`` — ``metric / per`` (each side a summed
+    counter/gauge; histogram ``_sum``/``_count`` suffixes resolve);
+  * ``ratio: [num, den]`` — each side a name or list of names, summed.
+
+Bounds: ``min`` (floor) and/or ``max`` (ceiling). A target whose
+metrics are absent from the registry is *skipped*, not failed — one
+default config covers serving and training artifacts.
+
+Error budgets: for a quantile target with a ``max`` bound, the budget
+is the tolerated violating fraction ``1 - quantile``; the report's
+``budget_used`` is ``P(obs > max) / (1 - quantile)`` — 1.0 exactly at
+the SLO boundary, >1 when blown. Computed from the histogram CDF
+(exact below the sample cap, bucket-interpolated past it).
+
+CLI (CI's nonzero-exit gate)::
+
+    python -m repro.obs.slo --check --snapshot serve.snap.json \
+        [--config targets.json] [--set ttft_p95.max=0.001]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from functools import reduce
+
+from repro.obs import aggregate as A
+from repro.obs.metrics import Histogram, MetricsRegistry, _Family
+
+
+def default_targets() -> list[dict]:
+    """One config for both artifact families: serving targets (engine_*
+    / prefix_cache_*) and training targets (train_*) — whichever family
+    a registry lacks is skipped at evaluation time."""
+    return [
+        {"name": "ttft_p95", "metric": "engine_ttft_seconds",
+         "quantile": 0.95, "max": 30.0},
+        {"name": "itl_p99", "metric": "engine_itl_seconds",
+         "quantile": 0.99, "max": 10.0},
+        {"name": "decode_tokens_per_step_wall",
+         "metric": "engine_decode_tokens_total",
+         "per": "engine_step_wall_seconds_sum", "min": 0.5},
+        {"name": "prefix_cache_hit_rate",
+         "ratio": ["prefix_cache_hits_total",
+                   ["prefix_cache_hits_total",
+                    "prefix_cache_misses_total"]],
+         "min": 0.0},
+        {"name": "pipeline_bubble_fraction",
+         "metric": "train_pipeline_bubble_fraction", "max": 0.9},
+        {"name": "train_step_p95", "metric": "train_step_seconds",
+         "quantile": 0.95, "max": 600.0},
+    ]
+
+
+# ---------------------------------------------------------------------------
+# value resolution over a registry
+# ---------------------------------------------------------------------------
+
+def _merged_children(reg: MetricsRegistry, name: str):
+    m = reg.get(name)
+    if m is None:
+        return None, None
+    kind = m.kind if isinstance(m, _Family) else m._kind
+    children = m.children if isinstance(m, _Family) else [m]
+    return kind, children
+
+
+def _scalar(reg: MetricsRegistry, name: str) -> float | None:
+    """Summed value of a counter/gauge family; histogram ``_sum`` /
+    ``_count`` suffixes resolve to the merged histogram's fields."""
+    for suffix, attr in (("_sum", "sum"), ("_count", "count")):
+        if name.endswith(suffix):
+            kind, children = _merged_children(reg, name[:-len(suffix)])
+            if kind == "histogram":
+                return float(sum(getattr(c, attr) for c in children))
+    kind, children = _merged_children(reg, name)
+    if kind is None or kind == "histogram":
+        return None
+    return float(sum(c.value for c in children))
+
+
+def _histogram(reg: MetricsRegistry, name: str) -> Histogram | None:
+    kind, children = _merged_children(reg, name)
+    if kind != "histogram" or not children:
+        return None
+    return reduce(lambda a, b: a.merge(b), children)
+
+
+def _sum_names(reg: MetricsRegistry, names) -> float | None:
+    names = [names] if isinstance(names, str) else list(names)
+    vals = [_scalar(reg, n) for n in names]
+    if any(v is None for v in vals):
+        return None
+    return sum(vals)
+
+
+def evaluate_target(target: dict, reg: MetricsRegistry) -> dict:
+    """One result row: ``{name, value, min, max, ok, skipped,
+    budget_used}`` (``value`` None when skipped)."""
+    name = target.get("name", "?")
+    lo, hi = target.get("min"), target.get("max")
+    value = budget_used = None
+    if "ratio" in target:
+        num, den = target["ratio"]
+        n, d = _sum_names(reg, num), _sum_names(reg, den)
+        if n is not None and d is not None:
+            value = n / d if d else math.nan
+    elif "quantile" in target:
+        h = _histogram(reg, target["metric"])
+        if h is not None and h.count:
+            q = float(target["quantile"])
+            value = h.quantile(q)
+            if hi is not None and 0.0 < q < 1.0:
+                violating = 1.0 - h.cdf(hi)
+                budget_used = violating / (1.0 - q)
+    elif "per" in target:
+        n = _sum_names(reg, target["metric"])
+        d = _sum_names(reg, target["per"])
+        if n is not None and d is not None:
+            value = n / d if d else math.nan
+    else:
+        value = _sum_names(reg, target["metric"])
+    if value is None:
+        return {"name": name, "value": None, "min": lo, "max": hi,
+                "ok": True, "skipped": True, "budget_used": None}
+    ok = not math.isnan(value) \
+        and (lo is None or value >= lo) \
+        and (hi is None or value <= hi)
+    return {"name": name, "value": value, "min": lo, "max": hi,
+            "ok": ok, "skipped": False, "budget_used": budget_used}
+
+
+def evaluate(targets: list[dict], source) -> list[dict]:
+    """Evaluate targets against a ``MetricsRegistry`` or a
+    ``repro.obs/v1`` snapshot dict (the offline surfaces — callers with
+    a live engine snapshot it first)."""
+    reg = source if isinstance(source, MetricsRegistry) \
+        else A.registry_from_snapshot(source)
+    return [evaluate_target(t, reg) for t in targets]
+
+
+def format_report(results: list[dict]) -> str:
+    lines = []
+    for r in results:
+        if r["skipped"]:
+            lines.append(f"SKIP {r['name']}: metric absent")
+            continue
+        bound = " ".join(
+            f"{side}={v:g}" for side, v in
+            (("min", r["min"]), ("max", r["max"])) if v is not None)
+        budget = (f" budget_used={r['budget_used']:.3f}"
+                  if r["budget_used"] is not None else "")
+        lines.append(f"{'OK  ' if r['ok'] else 'FAIL'} {r['name']}: "
+                     f"value={r['value']:.6g} {bound}{budget}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _apply_overrides(targets: list[dict], sets: list[str]) -> None:
+    """``--set name.min|max=VALUE`` — how CI deliberately tightens a
+    target past the measured value to prove the nonzero exit."""
+    by_name = {t.get("name"): t for t in targets}
+    for s in sets:
+        try:
+            key, value = s.split("=", 1)
+            tname, field = key.rsplit(".", 1)
+        except ValueError:
+            raise SystemExit(f"--set wants name.min|max=VALUE, got {s!r}")
+        if field not in ("min", "max") or tname not in by_name:
+            raise SystemExit(f"--set: unknown target/field {key!r}")
+        by_name[tname][field] = float(value)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.slo",
+        description="evaluate SLO targets against metrics snapshots")
+    ap.add_argument("--snapshot", action="append", default=[],
+                    metavar="PATH", required=True,
+                    help="repro.obs/v1 snapshot (repeat to merge a fleet)")
+    ap.add_argument("--config", metavar="PATH",
+                    help="JSON list of targets (default: built-ins)")
+    ap.add_argument("--set", action="append", default=[], dest="sets",
+                    metavar="NAME.min|max=V", help="override one bound")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any evaluated target fails")
+    args = ap.parse_args(argv)
+
+    if args.config:
+        with open(args.config) as f:
+            targets = json.load(f)
+    else:
+        targets = default_targets()
+    _apply_overrides(targets, args.sets)
+
+    snaps = [A.load_snapshot(p) for p in args.snapshot]
+    doc = snaps[0] if len(snaps) == 1 else A.merge_snapshots(*snaps)
+    results = evaluate(targets, doc)
+    print(format_report(results))
+    failed = [r for r in results if not r["ok"]]
+    evaluated = [r for r in results if not r["skipped"]]
+    print(f"slo: {len(evaluated) - len(failed)}/{len(evaluated)} "
+          f"evaluated targets ok, {len(results) - len(evaluated)} skipped")
+    if args.check and failed:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

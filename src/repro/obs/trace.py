@@ -28,6 +28,20 @@ Two serving-specific extras:
 Thread-safe: events append under a lock (cross-session replicas or a
 metrics HTTP thread may export mid-run), and ``tid`` records the
 emitting thread so nesting is judged per thread.
+
+Fleet extensions (PR 9): ``pid`` is stamped at *emit* time with the
+real ``os.getpid()`` (a fork after import can no longer alias two
+replicas onto one track), ``set_process_name()`` names the replica, and
+``export()`` prepends Chrome ``ph:"M"`` ``process_name``/``thread_name``
+metadata events so N merged traces render as per-replica tracks.
+``perf_counter`` timestamps are per-process, so ``export()`` also
+records ``otherData.epoch_offset_us`` — the offset that maps this
+process's span timestamps onto the shared unix epoch — and
+:func:`merge_traces` applies it, making cross-process timelines
+comparable. :func:`iter_spans` / :func:`request_spans` reconstruct
+completed spans (B/E pairs + instants) and filter them by the
+``request``/``requests`` span args the engine attaches; the
+``python -m repro.obs --request <id>`` CLI builds on them.
 """
 
 from __future__ import annotations
@@ -102,9 +116,14 @@ class Tracer:
         self.events: list[dict] = []
         self._lock = threading.Lock()
         self._seen_keys: set = set()
-        self._pid = os.getpid()
+        self.process_name: str | None = None
 
     # -- control ------------------------------------------------------------
+
+    def set_process_name(self, name: str) -> None:
+        """Name this process's track in merged traces (replica/host id);
+        lands in the ``process_name`` metadata event and ``otherData``."""
+        self.process_name = name
 
     def enable(self, *, annotate_steps: bool | None = None) -> None:
         if annotate_steps is not None:
@@ -158,8 +177,11 @@ class Tracer:
             self._emit("i", name, dict(args) if args else None)
 
     def _emit(self, ph: str, name: str, args: dict | None) -> None:
+        # pid is read at emit time, not cached at construction: the
+        # module-level tracer predates any fork, and a cached pid would
+        # alias every worker of a forked replica onto one trace track
         ev = {"name": name, "ph": ph, "ts": time.perf_counter() * 1e6,
-              "pid": self._pid, "tid": threading.get_ident()}
+              "pid": os.getpid(), "tid": threading.get_ident()}
         if args is not None:
             ev["args"] = args
         if ph == "i":
@@ -172,11 +194,40 @@ class Tracer:
     # -- export -------------------------------------------------------------
 
     def export(self) -> dict:
-        """Chrome trace event format object (deep-copied args)."""
+        """Chrome trace event format object (deep-copied args).
+
+        Prepends ``process_name``/``thread_name`` metadata events for
+        every (pid, tid) that emitted, and records
+        ``otherData.epoch_offset_us`` — ``time.time() -
+        time.perf_counter()`` in µs — so :func:`merge_traces` can place
+        this process's per-process timestamps on the shared unix epoch.
+        """
         with self._lock:
             events = [dict(e, args=dict(e["args"])) if "args" in e
                       else dict(e) for e in self.events]
-        return {"traceEvents": events, "displayTimeUnit": "ms"}
+        pname = self.process_name or f"pid {os.getpid()}"
+        main_tid = threading.main_thread().ident
+        meta: list[dict] = []
+        seen_pids: set = set()
+        seen_tids: set = set()
+        for e in events:
+            pid, tid = e["pid"], e["tid"]
+            if pid not in seen_pids:
+                seen_pids.add(pid)
+                meta.append({"name": "process_name", "ph": "M", "ts": 0.0,
+                             "pid": pid, "tid": 0,
+                             "args": {"name": pname}})
+            if (pid, tid) not in seen_tids:
+                seen_tids.add((pid, tid))
+                meta.append({"name": "thread_name", "ph": "M", "ts": 0.0,
+                             "pid": pid, "tid": tid,
+                             "args": {"name": ("MainThread"
+                                               if tid == main_tid
+                                               else f"thread-{tid}")}})
+        offset_us = (time.time() - time.perf_counter()) * 1e6
+        return {"traceEvents": meta + events, "displayTimeUnit": "ms",
+                "otherData": {"process_name": pname,
+                              "epoch_offset_us": offset_us}}
 
     def write(self, path: str) -> None:
         with open(path, "w") as f:
@@ -185,3 +236,92 @@ class Tracer:
 
 #: The process-global tracer every instrumented module shares.
 tracer = Tracer()
+
+
+# ---------------------------------------------------------------------------
+# Cross-process merge + span reconstruction (python -m repro.obs)
+# ---------------------------------------------------------------------------
+
+def merge_traces(*docs: dict) -> dict:
+    """Merge N exported trace documents into one epoch-aligned trace.
+
+    Each document's ``otherData.epoch_offset_us`` shifts its event
+    timestamps onto the unix epoch; metadata events come first, the rest
+    sort by shifted ts (a constant shift per document, so per-thread
+    list order — what the validator checks — is preserved). The merged
+    document carries ``epoch_offset_us: 0`` so merging is idempotent
+    and associative: merge(merge(a, b), c) == merge(a, b, c).
+    """
+    meta: list[dict] = []
+    seen_meta: set = set()
+    events: list[dict] = []
+    for doc in docs:
+        off = float((doc.get("otherData") or {}).get("epoch_offset_us", 0.0))
+        for ev in doc.get("traceEvents", ()):
+            if ev.get("ph") == "M":
+                key = (ev.get("name"), ev.get("pid"), ev.get("tid"))
+                if key not in seen_meta:
+                    seen_meta.add(key)
+                    meta.append(dict(ev))
+            else:
+                ev = dict(ev)
+                ev["ts"] = ev["ts"] + off
+                events.append(ev)
+    events.sort(key=lambda e: e["ts"])
+    return {"traceEvents": meta + events, "displayTimeUnit": "ms",
+            "otherData": {"epoch_offset_us": 0.0, "merged": len(docs)}}
+
+
+def process_names(doc: dict) -> dict:
+    """pid -> process/replica name from the metadata events."""
+    names: dict = {}
+    for ev in doc.get("traceEvents", ()):
+        if ev.get("ph") == "M" and ev.get("name") == "process_name":
+            names[ev["pid"]] = (ev.get("args") or {}).get("name")
+    return names
+
+
+def iter_spans(doc: dict):
+    """Yield completed spans and instants from a trace document.
+
+    Spans come from matched B/E pairs per (pid, tid) stack — args from
+    both ends merged — as ``{"name", "ts", "dur", "pid", "tid",
+    "args"}``; instants carry ``dur == 0.0``. Unclosed spans are
+    dropped (the validator flags those separately).
+    """
+    stacks: dict[tuple, list[dict]] = {}
+    for ev in doc.get("traceEvents", ()):
+        ph = ev.get("ph")
+        key = (ev.get("pid"), ev.get("tid"))
+        if ph == "B":
+            stacks.setdefault(key, []).append(ev)
+        elif ph == "E":
+            stack = stacks.get(key)
+            if stack and stack[-1]["name"] == ev["name"]:
+                b = stack.pop()
+                args = dict(b.get("args") or {})
+                args.update(ev.get("args") or {})
+                yield {"name": b["name"], "ts": b["ts"],
+                       "dur": ev["ts"] - b["ts"], "pid": b["pid"],
+                       "tid": b["tid"], "args": args}
+        elif ph in ("i", "I"):
+            yield {"name": ev["name"], "ts": ev["ts"], "dur": 0.0,
+                   "pid": ev["pid"], "tid": ev["tid"],
+                   "args": dict(ev.get("args") or {})}
+
+
+def request_spans(doc: dict, request_id: str) -> list[dict]:
+    """Spans/instants belonging to one request, chronological.
+
+    A span belongs when its args carry ``request == request_id`` or
+    list ``request_id`` in ``requests`` — the two conventions the
+    engine uses for per-sequence and batched phases respectively.
+    """
+    out = []
+    for span in iter_spans(doc):
+        a = span["args"]
+        if (a.get("request") == request_id
+                or request_id in (a.get("requests") or ())):
+            out.append(span)
+    out.sort(key=lambda s: s["ts"])
+    return out

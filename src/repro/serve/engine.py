@@ -322,6 +322,19 @@ class Engine:
             regs.append(self.prefix_cache.registry)
         return OM.render_all(*regs)
 
+    def snapshot_metrics(self, *, replica: str | None = None) -> dict:
+        """Versioned ``repro.obs/v1`` snapshot of every engine registry
+        (``launch/serve.py --metrics-snapshot``). Unlike the rendered
+        exposition this is mergeable: the fleet aggregator
+        (``python -m repro.obs --merge-snapshots``) folds N replicas'
+        snapshots into one exposition whose counters are the fleet sums
+        and whose gauges keep a per-``replica`` label."""
+        from repro.obs import aggregate as OA
+        regs = [self.stats.registry]
+        if self.prefix_cache is not None:
+            regs.append(self.prefix_cache.registry)
+        return OA.snapshot(*regs, replica=replica)
+
     def pop_result(self, request_id: str) -> Sequence:
         """Drain one finished sequence. ``results`` retains finished
         sequences until popped — long-running callers must drain (and may
@@ -351,13 +364,20 @@ class Engine:
                     seq.slot = self.pool.alloc()
                     seq.status = SequenceStatus.PREFILLING
                     self._slots[seq.slot] = seq
-                    with tracer.span("prefix_lookup",
-                                     request=seq.request_id) as lk:
-                        PF.start_prefill(seq, self.pool,
-                                         self.econf.prefill_chunk,
-                                         self.prefix_cache,
-                                         pool_resident=self._batch_prefill)
-                        lk.set("cached_tokens", seq.cached_tokens)
+                    # per-request child of the batch-level admit span:
+                    # the first span of a request's cross-process
+                    # timeline (python -m repro.obs --request <id>)
+                    with tracer.span("admission",
+                                     request=seq.request_id,
+                                     slot=seq.slot):
+                        with tracer.span("prefix_lookup",
+                                         request=seq.request_id) as lk:
+                            PF.start_prefill(
+                                seq, self.pool,
+                                self.econf.prefill_chunk,
+                                self.prefix_cache,
+                                pool_resident=self._batch_prefill)
+                            lk.set("cached_tokens", seq.cached_tokens)
                     cached_tokens += seq.cached_tokens
                     admitted += 1
                 adm.set("admitted", admitted)
@@ -391,9 +411,17 @@ class Engine:
                     rejected=draft_tokens - accepted_tokens)
                 budget -= decode_charge
             elif plan.decode:
-                with tracer.span("decode_batch",
-                                 compile_key=("decode", self.pool.n_slots),
-                                 slots=len(plan.decode)):
+                dec_span = tracer.span(
+                    "decode_batch",
+                    compile_key=("decode", self.pool.n_slots),
+                    slots=len(plan.decode))
+                if tracer.enabled:
+                    # batched phases list every member request so the
+                    # per-request timeline can claim them; guarded so
+                    # the disabled path builds no list
+                    dec_span.set("requests",
+                                 [s.request_id for s in plan.decode])
+                with dec_span:
                     tokens = np.zeros((self.pool.n_slots, 1), np.int32)
                     mask = np.zeros((self.pool.n_slots,), bool)
                     for s in plan.decode:
@@ -453,12 +481,24 @@ class Engine:
                     if not group:
                         break
                     c = group[0].next_chunk
-                    with tracer.span(
-                            "prefill_batch",
-                            compile_key=(("prefill_pool", c)
-                                         if len(group) > 1
-                                         else ("prefill_slot", c)),
-                            slots=len(group), chunk=c):
+                    grp_span = tracer.span(
+                        "prefill_batch",
+                        compile_key=(("prefill_pool", c)
+                                     if len(group) > 1
+                                     else ("prefill_slot", c)),
+                        slots=len(group), chunk=c)
+                    if tracer.enabled:
+                        grp_span.set("requests",
+                                     [s.request_id for s in group])
+                    with grp_span:
+                        if tracer.enabled:
+                            # the group span fans into per-slot markers
+                            # so each request's timeline shows *its*
+                            # slot inside the pooled dispatch
+                            for s in group:
+                                tracer.instant("prefill_slot",
+                                               request=s.request_id,
+                                               slot=s.slot, chunk=c)
                         prefill_tokens += PF.advance_prefill_batch(
                             group, self.pool, self._pool_prefill_fn,
                             self.prefix_cache, self._slot_prefill_fn)
@@ -543,8 +583,13 @@ class Engine:
         """
         from repro.spec.verify import accepted_prefix
 
-        with tracer.span("draft", compile_key=("draft", k), k=k,
-                         slots=len(decoding)):
+        rids = ([s.request_id for s in decoding] if tracer.enabled
+                else None)
+        draft_span = tracer.span("draft", compile_key=("draft", k), k=k,
+                                 slots=len(decoding))
+        if rids is not None:
+            draft_span.set("requests", rids)
+        with draft_span:
             drafts = self.drafter.draft(decoding, k)
         tokens = np.zeros((self.pool.n_slots, k + 1), np.int32)
         mask = np.zeros((self.pool.n_slots,), bool)
@@ -553,8 +598,11 @@ class Engine:
             tokens[s.slot, 1:] = drafts[s.slot]
             mask[s.slot] = True
         snap = self.pool.cache          # O(1): arrays are immutable
-        with tracer.span("verify", compile_key=("verify", k + 1), k=k,
-                         slots=len(decoding)):
+        verify_span = tracer.span("verify", compile_key=("verify", k + 1),
+                                  k=k, slots=len(decoding))
+        if rids is not None:
+            verify_span.set("requests", rids)
+        with verify_span:
             logits, self.pool.cache = self._verify_fn(
                 jnp.asarray(tokens), jnp.asarray(mask), self.pool.cache)
             greedy = np.asarray(jnp.argmax(logits, axis=-1))  # (slots, k+1)
@@ -610,6 +658,7 @@ class Engine:
         if self.drafter is not None:
             self.drafter.on_ready(s)
         s.t_first_token = time.perf_counter()
+        tracer.instant("first_token", request=s.request_id)
         self.stats.record_first_token(s.ttft)
         events.append(self._emit(s, self._sample(s, s.last_logits[0, -1]),
                                  first=True))
@@ -658,6 +707,8 @@ class Engine:
     def _finish(self, seq: Sequence) -> None:
         seq.status = SequenceStatus.FINISHED
         seq.t_finish = time.perf_counter()
+        tracer.instant("finish", request=seq.request_id,
+                       tokens=len(seq.out_tokens))
         self._slots[seq.slot] = None
         if self.drafter is not None:
             self.drafter.release(seq.slot)

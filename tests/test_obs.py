@@ -56,8 +56,9 @@ def test_tracer_nesting_and_chrome_validity():
     doc = tr.export()
     assert V.validate_chrome_trace(
         doc, require_spans=("step", "admit", "decode")) == []
-    # B/E pairs per span, in nesting order
-    phs = [(e["name"], e["ph"]) for e in doc["traceEvents"]]
+    # B/E pairs per span, in nesting order (metadata events precede)
+    phs = [(e["name"], e["ph"]) for e in doc["traceEvents"]
+           if e["ph"] != "M"]
     assert phs == [("step", "B"), ("admit", "B"), ("admit", "E"),
                    ("decode", "B"), ("decode", "E"), ("step", "E"),
                    ("step", "B"), ("decode", "B"), ("decode", "E"),
@@ -270,12 +271,49 @@ def engine_artifacts(tmp_path_factory):
 def test_engine_trace_covers_phases(engine_artifacts):
     _, doc, _, _ = engine_artifacts
     assert V.validate_chrome_trace(doc, require_spans=(
-        "engine_step", "admit", "prefix_lookup", "prefill_batch",
-        "decode_batch")) == []
+        "engine_step", "admit", "admission", "prefix_lookup",
+        "prefill_batch", "decode_batch")) == []
     compiles = [e for e in doc["traceEvents"]
                 if e.get("args", {}).get("compile")]
     assert compiles, "no first-dispatch span was tagged compile=true"
     assert json.dumps(doc)               # JSON-serializable end to end
+
+
+def test_engine_trace_is_request_scoped(engine_artifacts):
+    """Every request's id threads through admission → prefill → decode
+    → first_token → finish, so ``request_spans`` reconstructs a full
+    per-request timeline from the engine trace alone."""
+    from repro.obs.trace import request_spans
+
+    _, doc, _, _ = engine_artifacts
+    for rid in ("a0", "a1", "b0", "b1"):
+        spans = request_spans(doc, rid)
+        names = {s["name"] for s in spans}
+        assert {"admission", "prefix_lookup", "decode_batch",
+                "first_token", "finish"} <= names, \
+            f"{rid}: incomplete timeline {sorted(names)}"
+        # prefill shows up either as pooled per-slot markers (cold) or
+        # per-chunk spans (cache-resumed suffix)
+        assert names & {"prefill_slot", "prefill_chunk"}, \
+            f"{rid}: no prefill attribution in {sorted(names)}"
+        ts = [s["ts"] for s in spans]
+        assert ts == sorted(ts)
+        # admission precedes first_token precedes finish
+        order = [s["name"] for s in spans]
+        assert order.index("admission") < order.index("first_token") \
+            < order.index("finish")
+
+
+def test_engine_trace_process_metadata(engine_artifacts):
+    """Exported docs carry emit-time pids plus process/thread metadata
+    events — the fix for multi-process traces aliasing onto one track."""
+    import os
+
+    _, doc, _, _ = engine_artifacts
+    assert {e["pid"] for e in doc["traceEvents"]} == {os.getpid()}
+    metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert any(e["name"] == "process_name" for e in metas)
+    assert any(e["name"] == "thread_name" for e in metas)
 
 
 def test_engine_exposition_valid(engine_artifacts):

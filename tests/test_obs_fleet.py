@@ -1,0 +1,502 @@
+"""Fleet-grade observability: snapshots, merge, SLO, trace merge, FT.
+
+The contract under test (docs/observability.md):
+  * snapshot merge is associative and order-independent — fleet
+    counters equal the sum of per-replica counters, gauges survive
+    as per-replica series, histograms merge bucket-exactly;
+  * foreign schema versions (e.g. ``repro.tune/v1``) are refused,
+    never coerced;
+  * cross-process trace merge yields one valid Chrome trace and
+    ``request_spans`` reconstructs one request's timeline across pids;
+  * the SLO evaluator passes on healthy metrics, fails (exit 1) when a
+    target is tightened, and *skips* absent metrics so one config
+    covers serving and training;
+  * ``Membership``/``StragglerDetector`` publish into a registry so
+    replica health rides along in fleet snapshots;
+  * ``benchmarks.run.compare_docs`` flags perf regressions and
+    coverage loss against a committed baseline.
+"""
+
+import json
+
+import pytest
+
+from repro.obs import aggregate as OA
+from repro.obs import slo as OS
+from repro.obs import trace as OT
+from repro.obs import validate as V
+from repro.obs.metrics import Histogram, MetricsRegistry
+from tests._hypothesis_compat import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# Snapshot round-trip and merge algebra
+# ---------------------------------------------------------------------------
+
+def _leaf_registry(tok_count, ttft_obs):
+    reg = MetricsRegistry()
+    reg.counter("engine_decode_tokens_total", "tokens").inc(tok_count)
+    reg.gauge("engine_active_slots", "slots").set(tok_count % 5)
+    h = reg.histogram("engine_ttft_seconds", "ttft",
+                      buckets=(0.1, 1.0, 10.0))
+    for v in ttft_obs:
+        h.observe(v)
+    fam = reg.counter("by_site_total", "per site", labelnames=("site",))
+    fam.labels(site="decode").inc(tok_count)
+    return reg
+
+
+def test_snapshot_roundtrip_and_render():
+    reg = _leaf_registry(7, [0.05, 0.5, 2.0])
+    doc = OA.snapshot(reg, replica="r0")
+    assert OA.validate_snapshot(doc) == []
+    assert doc["replica"] == "r0"
+    rebuilt = OA.registry_from_snapshot(doc)
+    assert rebuilt.value("engine_decode_tokens_total") == 7
+    text = OA.render_snapshot(doc)
+    assert V.validate_prometheus_text(text, require_metrics=(
+        "engine_decode_tokens_total", "engine_ttft_seconds")) == []
+    # quantiles answered from the snapshot match the live registry
+    assert rebuilt.get("engine_ttft_seconds").quantile(0.5) == \
+        reg.get("engine_ttft_seconds").quantile(0.5)
+
+
+def test_snapshot_refuses_foreign_schema():
+    doc = OA.snapshot(_leaf_registry(1, []), replica="r0")
+    alien = dict(doc, schema="repro.tune/v1")
+    probs = OA.validate_snapshot(alien)
+    assert len(probs) == 1 and "refusing" in probs[0]
+    with pytest.raises(ValueError, match="refusing"):
+        OA.merge_snapshots(doc, alien)
+
+
+def test_snapshot_rejects_partial_samples():
+    doc = OA.snapshot(_leaf_registry(1, [0.2, 0.3]), replica="r0")
+    child = doc["metrics"]["engine_ttft_seconds"]["children"][0]
+    child["samples"] = child["samples"][:1]       # partial = corrupt
+    assert any("partial samples" in p for p in OA.validate_snapshot(doc))
+
+
+def test_merge_counters_sum_and_gauges_tag():
+    s0 = OA.snapshot(_leaf_registry(3, [0.2]), replica="r0")
+    s1 = OA.snapshot(_leaf_registry(4, [0.3, 5.0]), replica="r1")
+    fleet = OA.merge_snapshots(s0, s1)
+    assert OA.validate_snapshot(fleet) == []
+    assert fleet["replica"] is None
+    m = fleet["metrics"]
+    # counters: fleet total is the per-replica sum (labelled too)
+    assert m["engine_decode_tokens_total"]["children"][0]["value"] == 7
+    sites = {OA._child_key(c["labels"]): c["value"]
+             for c in m["by_site_total"]["children"]}
+    assert sites[(("site", "decode"),)] == 7
+    # gauges: one child per replica, not a sum
+    replicas = sorted(c["labels"]["replica"]
+                      for c in m["engine_active_slots"]["children"])
+    assert replicas == ["r0", "r1"]
+    # histograms: counts merge exactly
+    h = m["engine_ttft_seconds"]["children"][0]
+    assert h["count"] == 3 and sorted(h["samples"]) == [0.2, 0.3, 5.0]
+
+
+def test_merge_is_associative_and_order_independent():
+    # 0.25/0.5/0.75 are binary-exact so histogram sums fold exactly;
+    # merge associativity is exact up to float addition order
+    docs = [OA.snapshot(_leaf_registry(n, [0.25 * (n + 1)]),
+                        replica=f"r{n}") for n in range(3)]
+
+    def metrics(d):
+        return d["metrics"]
+
+    ab_c = OA.merge_snapshots(OA.merge_snapshots(docs[0], docs[1]), docs[2])
+    a_bc = OA.merge_snapshots(docs[0], OA.merge_snapshots(docs[1], docs[2]))
+    flat = OA.merge_snapshots(*docs)
+    rev = OA.merge_snapshots(*docs[::-1])
+    assert metrics(ab_c) == metrics(a_bc) == metrics(flat) == metrics(rev)
+    # merging a merged doc with itself never re-tags gauges
+    twice = OA.merge_snapshots(flat)
+    for c in twice["metrics"]["engine_active_slots"]["children"]:
+        assert list(c["labels"]) == ["replica"]
+
+
+def test_merge_kind_conflict_raises():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("x_total")
+    b.gauge("x_total")
+    s0 = OA.snapshot(a, replica="r0")
+    s1 = OA.snapshot(b, replica="r1")
+    with pytest.raises(ValueError, match="conflicts"):
+        OA.merge_snapshots(s0, s1)
+
+
+def test_snapshot_save_load(tmp_path):
+    doc = OA.snapshot(_leaf_registry(2, [0.2]), replica="r0")
+    p = tmp_path / "r0.snap"
+    OA.save_snapshot(doc, str(p))
+    assert OA.load_snapshot(str(p))["metrics"] == doc["metrics"]
+    p.write_text(json.dumps(dict(doc, schema="nope/v9")))
+    with pytest.raises(ValueError, match="refusing"):
+        OA.load_snapshot(str(p))
+
+
+# ---------------------------------------------------------------------------
+# Histogram merge + post-cap quantile properties
+# ---------------------------------------------------------------------------
+
+def test_histogram_merge_exact_and_capped():
+    a = Histogram(buckets=(1.0, 10.0))
+    b = Histogram(buckets=(1.0, 10.0))
+    for v in (0.5, 2.0):
+        a.observe(v)
+    for v in (3.0, 20.0):
+        b.observe(v)
+    m = a.merge(b)
+    assert m.count == 4 and m.sum == pytest.approx(25.5)
+    assert m.bucket_counts == [1, 2, 1]
+    assert m.samples == [0.5, 2.0, 3.0, 20.0]
+    assert (m._min, m._max) == (0.5, 20.0)
+    # original inputs untouched
+    assert a.count == 2 and b.count == 2
+
+    with pytest.raises(ValueError, match="bucket"):
+        a.merge(Histogram(buckets=(5.0,)))
+
+    # capped input: merged bucket counts stay exact, samples drop
+    orig, Histogram.MAX_SAMPLES = Histogram.MAX_SAMPLES, 2
+    try:
+        c = Histogram(buckets=(1.0, 10.0))
+        for v in (0.5, 2.0, 3.0):
+            c.observe(v)
+        assert not c.exact
+        m2 = c.merge(b)
+        assert m2.count == 5 and m2.samples == []
+        assert m2.bucket_counts == [1, 3, 1]
+        # a merge whose union would exceed the cap also drops samples
+        m3 = a.merge(b)
+        assert m3.exact is False or m3.samples == []
+        assert m3.bucket_counts == [1, 2, 1]
+    finally:
+        Histogram.MAX_SAMPLES = orig
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=99.0,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=40),
+       st.sampled_from([0.5, 0.9, 0.95, 0.99]))
+def test_histogram_post_cap_quantile_within_bucket_width(values, q):
+    """After MAX_SAMPLES, quantiles fall back to bucket interpolation;
+    the answer must stay within one bucket width of the exact value."""
+    buckets = (1.0, 5.0, 25.0, 100.0)
+    exact = Histogram(buckets=buckets)
+    orig, Histogram.MAX_SAMPLES = Histogram.MAX_SAMPLES, 4
+    try:
+        capped = Histogram(buckets=buckets)
+        for v in values:
+            exact.observe(v)
+            capped.observe(v)
+        true_q = exact.quantile(q)
+        approx_q = capped.quantile(q)
+    finally:
+        Histogram.MAX_SAMPLES = orig
+    edges = [0.0, *buckets]
+    width = max(hi - lo for lo, hi in zip(edges, edges[1:]))
+    assert abs(approx_q - true_q) <= width + 1e-9
+    assert 0.0 <= approx_q <= buckets[-1] + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=99.0,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=20),
+       st.lists(st.floats(min_value=0.0, max_value=99.0,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=20))
+def test_histogram_merge_of_capped_keeps_counts_exact(xs, ys):
+    buckets = (1.0, 5.0, 25.0, 100.0)
+    orig, Histogram.MAX_SAMPLES = Histogram.MAX_SAMPLES, 3
+    try:
+        a, b, ref = (Histogram(buckets=buckets) for _ in range(3))
+        for v in xs:
+            a.observe(v)
+            ref.observe(v)
+        for v in ys:
+            b.observe(v)
+            ref.observe(v)
+        m = a.merge(b)
+    finally:
+        Histogram.MAX_SAMPLES = orig
+    assert m.bucket_counts == ref.bucket_counts
+    assert m.count == ref.count
+    assert m.sum == pytest.approx(ref.sum)
+    assert (m._min, m._max) == (ref._min, ref._max)
+
+
+# ---------------------------------------------------------------------------
+# SLO evaluation
+# ---------------------------------------------------------------------------
+
+def _serving_registry():
+    reg = MetricsRegistry()
+    ttft = reg.histogram("engine_ttft_seconds", "ttft",
+                         buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.2, 0.4):
+        ttft.observe(v)
+    step = reg.histogram("engine_step_wall_seconds", "step",
+                         buckets=(0.1, 1.0))
+    for v in (0.1, 0.1):
+        step.observe(v)
+    reg.counter("engine_decode_tokens_total").inc(10)
+    reg.counter("prefix_cache_hits_total").inc(3)
+    reg.counter("prefix_cache_misses_total").inc(1)
+    return reg
+
+
+def test_slo_defaults_pass_and_skip_absent():
+    results = OS.evaluate(OS.default_targets(), _serving_registry())
+    by = {r["name"]: r for r in results}
+    assert by["ttft_p95"]["ok"] and not by["ttft_p95"]["skipped"]
+    # histogram _sum suffix resolves for the throughput ratio
+    assert by["decode_tokens_per_step_wall"]["value"] == pytest.approx(50.0)
+    assert by["prefix_cache_hit_rate"]["value"] == pytest.approx(0.75)
+    # training-only targets skip on a serving registry, not fail
+    assert by["pipeline_bubble_fraction"]["skipped"]
+    assert by["train_step_p95"]["skipped"]
+    assert all(r["ok"] for r in results if not r["skipped"])
+
+
+def test_slo_tightened_target_fails_with_budget():
+    targets = OS.default_targets()
+    OS._apply_overrides(targets, ["ttft_p95.max=0.1"])
+    results = OS.evaluate(targets, _serving_registry())
+    by = {r["name"]: r for r in results}
+    assert not by["ttft_p95"]["ok"]
+    assert by["ttft_p95"]["budget_used"] > 0.0
+
+
+def test_slo_evaluates_snapshot_source():
+    doc = OA.snapshot(_serving_registry(), replica="r0")
+    results = OS.evaluate(OS.default_targets(), doc)
+    assert any(r["name"] == "ttft_p95" and r["ok"] for r in results)
+
+
+def test_slo_cli_exit_codes(tmp_path):
+    doc = OA.snapshot(_serving_registry(), replica="r0")
+    p = tmp_path / "r0.snap"
+    OA.save_snapshot(doc, str(p))
+    assert OS.main(["--snapshot", str(p), "--check"]) == 0
+    assert OS.main(["--snapshot", str(p), "--check",
+                    "--set", "ttft_p95.max=0.0001"]) == 1
+
+
+def test_slo_config_file_and_bad_override(tmp_path):
+    cfgp = tmp_path / "slo.json"
+    cfgp.write_text(json.dumps([
+        {"name": "tok_floor", "metric": "engine_decode_tokens_total",
+         "min": 5}]))
+    doc = OA.snapshot(_serving_registry(), replica="r0")
+    snapp = tmp_path / "s.snap"
+    OA.save_snapshot(doc, str(snapp))
+    assert OS.main(["--snapshot", str(snapp), "--config", str(cfgp),
+                    "--check"]) == 0
+    with pytest.raises(SystemExit):
+        OS._apply_overrides(OS.default_targets(), ["no_such.max=1"])
+
+
+# ---------------------------------------------------------------------------
+# Cross-process trace merge + request timeline
+# ---------------------------------------------------------------------------
+
+def _replica_trace(name, rid):
+    tr = OT.Tracer()
+    tr.set_process_name(name)
+    tr.enable()
+    with tr.span("admission", request=rid, slot=0):
+        pass
+    sp = tr.span("decode_batch", slots=1)
+    sp.set("requests", [rid])
+    with sp:
+        tr.instant("first_token", request=rid)
+    return tr.export()
+
+
+def test_trace_export_carries_process_metadata():
+    import os
+    doc = _replica_trace("r9", "reqX")
+    metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert any(e["name"] == "process_name"
+               and e["args"]["name"] == "r9" for e in metas)
+    assert any(e["name"] == "thread_name" for e in metas)
+    pids = {e["pid"] for e in doc["traceEvents"]}
+    assert pids == {os.getpid()}          # emit-time pid, one per process
+    assert doc["otherData"]["process_name"] == "r9"
+    assert "epoch_offset_us" in doc["otherData"]
+
+
+def test_merge_traces_valid_and_idempotent():
+    d0 = _replica_trace("r0", "req0")
+    d1 = _replica_trace("r1", "req0")
+    # distinct pids are required for a meaningful cross-process merge;
+    # same-process tests fake the second replica's pid
+    for e in d1["traceEvents"]:
+        e["pid"] += 1
+    merged = OT.merge_traces(d0, d1)
+    assert V.validate_chrome_trace(merged, require_spans=(
+        "admission", "decode_batch")) == []
+    assert merged["otherData"]["epoch_offset_us"] == 0.0
+    names = OT.process_names(merged)
+    assert sorted(names.values()) == ["r0", "r1"]
+    # merging a merged doc is a fixed point (offset already applied)
+    again = OT.merge_traces(merged)
+    ts0 = [e["ts"] for e in merged["traceEvents"]]
+    ts1 = [e["ts"] for e in again["traceEvents"]]
+    assert ts0 == ts1
+
+
+def test_request_spans_reconstruct_cross_process_timeline():
+    d0 = _replica_trace("r0", "req0")
+    d1 = _replica_trace("r1", "req0")
+    for e in d1["traceEvents"]:
+        e["pid"] += 1
+    merged = OT.merge_traces(d0, d1)
+    spans = OT.request_spans(merged, "req0")
+    # per replica: admission (request=), decode_batch (requests=[]),
+    # first_token instant = 3 spans x 2 replicas
+    assert len(spans) == 6
+    assert [s["ts"] for s in spans] == sorted(s["ts"] for s in spans)
+    assert {s["name"] for s in spans} == \
+        {"admission", "decode_batch", "first_token"}
+    assert len({s["pid"] for s in spans}) == 2
+    assert OT.request_spans(merged, "nope") == []
+
+
+# ---------------------------------------------------------------------------
+# FT membership + straggler metrics
+# ---------------------------------------------------------------------------
+
+def test_membership_metrics_lifecycle():
+    from repro.distributed.ft import Membership
+
+    t = [0.0]
+    reg = MetricsRegistry()
+    m = Membership(timeout_s=10.0, registry=reg, clock=lambda: t[0])
+    m.heartbeat("hostA")
+    t[0] = 2.0
+    m.heartbeat("hostB")
+    assert m.members == ["hostA", "hostB"]
+    assert m.epoch == 2                   # two joins
+    assert reg.value("ft_members") == 2
+    assert reg.value("ft_heartbeats_total") == 2
+    assert reg.value("ft_epoch_changes_total") == 2
+    ages = {c.labels["peer"]: c.value
+            for c in reg.get("ft_heartbeat_age_seconds").children}
+    assert ages["hostA"] == pytest.approx(2.0)
+    assert ages["hostB"] == pytest.approx(0.0)
+
+    t[0] = 11.0                           # hostA silent > timeout
+    assert m.sweep() == ["hostA"]
+    assert m.members == ["hostB"] and m.epoch == 3
+    assert reg.value("ft_members") == 1
+    # the expired peer's series freezes at the timeout
+    ages = {c.labels["peer"]: c.value
+            for c in reg.get("ft_heartbeat_age_seconds").children}
+    assert ages["hostA"] == pytest.approx(10.0)
+
+    t[0] = 12.0                           # re-join bumps the epoch again
+    m.heartbeat("hostA")
+    assert m.epoch == 4
+    # membership health rides along in a fleet snapshot
+    doc = OA.snapshot(reg, replica="r0")
+    assert OA.validate_snapshot(doc) == []
+    assert "ft_members" in doc["metrics"]
+
+
+def test_straggler_detector_publishes():
+    from repro.distributed.ft import StragglerDetector
+
+    reg = MetricsRegistry()
+    det = StragglerDetector(threshold=2.0, registry=reg)
+    assert det.observe(1.0) is False
+    assert det.observe(1.0) is False
+    assert det.observe(5.0) is True       # 5x the EWMA
+    assert reg.value("ft_straggler_events_total") == 1
+    assert reg.value("ft_step_time_ewma_seconds") == pytest.approx(det.ewma)
+    # registry-free construction still works (no obs coupling)
+    assert StragglerDetector().observe(1.0) is False
+
+
+# ---------------------------------------------------------------------------
+# Perf-regression sentinel (benchmarks/run.py --compare)
+# ---------------------------------------------------------------------------
+
+def _bench_doc():
+    return {"name": "serving_throughput", "config": {},
+            "cells": [{"batch": 2, "prompt_len": 64, "gen_len": 16,
+                       "engine_tok_s": 100.0, "speedup_vs_naive": 2.0,
+                       "ttft_p95_s": 0.2, "itl_p95_s": 0.02}]}
+
+
+def test_compare_docs_clean_and_regressed():
+    from benchmarks.run import compare_docs
+
+    old = _bench_doc()
+    assert compare_docs(old, _bench_doc()) == []
+    # within tolerance: not a regression
+    ok = _bench_doc()
+    ok["cells"][0]["engine_tok_s"] = 80.0
+    assert compare_docs(old, ok, tolerance=0.25) == []
+    # beyond tolerance on a higher-is-better metric
+    bad = _bench_doc()
+    bad["cells"][0]["engine_tok_s"] = 50.0
+    probs = compare_docs(old, bad, tolerance=0.25)
+    assert any("engine_tok_s" in p for p in probs)
+    # lower-is-better regression
+    slow = _bench_doc()
+    slow["cells"][0]["ttft_p95_s"] = 0.5
+    assert any("ttft_p95_s" in p for p in compare_docs(old, slow))
+
+
+def test_compare_docs_coverage_and_name():
+    from benchmarks.run import compare_docs
+
+    old = _bench_doc()
+    empty = dict(_bench_doc(), cells=[])
+    assert any("missing" in p for p in compare_docs(old, empty))
+    # new coverage is never a regression
+    more = _bench_doc()
+    more["cells"].append(dict(more["cells"][0], batch=4))
+    assert compare_docs(old, more) == []
+    renamed = dict(_bench_doc(), name="other")
+    assert any("name changed" in p for p in compare_docs(old, renamed))
+
+
+def test_compare_docs_recurses_subdocs():
+    from benchmarks.run import compare_docs
+
+    sub = {"name": "serving_decode_heavy", "config": {},
+           "cells": [{"batch": 1, "drafter": "ngram", "speculate_k": 4,
+                      "tok_s": 50.0, "speedup": 1.5}]}
+    old = dict(_bench_doc(), decode_heavy=sub)
+    new = dict(_bench_doc(), decode_heavy=json.loads(json.dumps(sub)))
+    assert compare_docs(old, new) == []
+    new["decode_heavy"]["cells"][0]["tok_s"] = 10.0
+    assert any("tok_s" in p for p in compare_docs(old, new))
+    gone = dict(_bench_doc())
+    assert any("decode_heavy" in p for p in compare_docs(old, gone))
+
+
+# ---------------------------------------------------------------------------
+# Pipeline stage occupancy (the trainer's per-stage bubble breakdown)
+# ---------------------------------------------------------------------------
+
+def test_stage_occupancy_accounts_every_tick():
+    from repro.distributed.pipeline import bubble_fraction, stage_occupancy
+
+    S, M = 4, 16
+    occ = stage_occupancy(S, M)
+    assert len(occ) == S
+    ticks = M + S - 1
+    for row in occ:
+        assert row["warmup_idle"] + row["busy"] + row["drain_idle"] == ticks
+        assert row["idle_fraction"] == pytest.approx(bubble_fraction(S, M))
+    assert occ[0]["warmup_idle"] == 0 and occ[0]["drain_idle"] == S - 1
+    assert occ[-1]["warmup_idle"] == S - 1 and occ[-1]["drain_idle"] == 0
