@@ -55,6 +55,10 @@ SERVING_CELL_KEYS = {
         "overlap", "shared_len", "ttft_cold_s", "ttft_cached_s",
         "ttft_speedup", "prefill_tokens_cold", "prefill_tokens_cached",
         "cached_prefix_tokens"),
+    "serving_router": (
+        "requests", "shared_len", "ttft_blind_s", "ttft_affine_s",
+        "ttft_speedup", "cached_tokens_blind", "cached_tokens_affine",
+        "prefix_routed", "bit_identical"),
 }
 
 
@@ -92,9 +96,24 @@ def validate_serving_doc(doc: dict) -> list[str]:
                                     "mean_speculate_k") if k not in cell]
         if missing:
             problems.append(f"{name}.cells[{i}]: missing keys {missing}")
+    if name == "serving_router":
+        mig = doc.get("migration")
+        if not isinstance(mig, dict):
+            problems.append(f"{name}: missing migration sub-record")
+        else:
+            for k in ("wire_bytes", "roundtrip_s", "bit_identical"):
+                if k not in mig:
+                    problems.append(f"{name}.migration: missing key {k!r}")
+            if mig.get("bit_identical") is not True:
+                problems.append(f"{name}.migration: stream not bit-identical"
+                                " after migration")
+        for i, cell in enumerate(doc.get("cells") or []):
+            if cell.get("bit_identical") is not True:
+                problems.append(f"{name}.cells[{i}]: routed streams not "
+                                "bit-identical to the solo reference")
     _finite(doc, name or "doc", problems)
-    # nested sub-documents (full serving_throughput runs embed both)
-    for sub in ("decode_heavy", "shared_prefix"):
+    # nested sub-documents (full serving_throughput runs embed them)
+    for sub in ("decode_heavy", "shared_prefix", "router"):
         if sub in doc:
             problems += validate_serving_doc(doc[sub])
     return problems
@@ -184,6 +203,11 @@ COMPARE_SPEC = {
         "higher": ("ttft_speedup",),
         "lower": ("ttft_cached_s",),
     },
+    "serving_router": {
+        "key": ("requests", "shared_len"),
+        "higher": ("ttft_speedup", "cached_tokens_affine"),
+        "lower": (),
+    },
     "training_composed": {
         "key": ("seq_len", "mesh_data", "mesh_pipe", "mesh_seq",
                 "microbatches"),
@@ -201,7 +225,8 @@ def compare_docs(old: dict, new: dict, *, tolerance: float = 0.25
     lower-is-better one when ``new > old*(1+tol)``. Cells present only
     on one side are reported (coverage loss is a regression too — a
     silently dropped cell would otherwise read as "no regression").
-    Nested sub-documents (``decode_heavy``/``shared_prefix``) recurse.
+    Nested sub-documents (``decode_heavy``/``shared_prefix``/``router``)
+    recurse.
     """
     name = old.get("name")
     if name != new.get("name"):
@@ -240,7 +265,7 @@ def compare_docs(old: dict, new: dict, *, tolerance: float = 0.25
                         f"{name}[{key_str(key)}].{metric}: "
                         f"{ov:.4g} -> {nv:.4g} "
                         f"({(nv / ov - 1) * 100:+.1f}% > +{tolerance:.0%})")
-    for sub in ("decode_heavy", "shared_prefix"):
+    for sub in ("decode_heavy", "shared_prefix", "router"):
         if sub in old:
             if sub not in new:
                 problems.append(f"{name}: sub-document {sub!r} missing "
@@ -307,6 +332,9 @@ def main() -> None:
         overlaps=(0.75,) if fast else (0.5, 0.75, 1.0),
         plen=256 if fast else 512,
         prefill_chunk=64 if fast else 128)
+    serving_throughput.run_router(n_requests=4 if fast else 8,
+                                  plen=128 if fast else 256,
+                                  chunk=32 if fast else 64)
     print(f"benchmarks_total,{(time.time() - t0) * 1e6:.0f},", flush=True)
 
 

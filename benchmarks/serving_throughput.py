@@ -274,6 +274,169 @@ def run_shared_prefix(overlaps=(0.5, 0.75, 1.0), batch=4, plen=512,
 
 
 # ---------------------------------------------------------------------------
+# Router mode: prefix-affine placement vs affinity-blind, + migration cost
+# ---------------------------------------------------------------------------
+
+def _router_fleet(cfg, params, n, plen, gen, chunk):
+    def mk(rid):
+        return Engine(cfg, params, EngineConfig(
+            replica_id=rid, n_slots=max(2, n // 2),
+            prefill_chunk=chunk, token_budget=chunk + n,
+            max_seq_len=plen + gen + 1, prefix_cache_mb=256))
+    return [mk("r0"), mk("r1")]
+
+
+def _router_reqs(cfg, n, plen, shared_len, salt, gen, seed=51):
+    """``n`` requests alternating between two system prompts (A on even,
+    B on odd), each with a fresh per-(salt, i) tail — the two-tenant
+    workload where placement decides whether the shared prefix is a
+    cache hit or a cold prefill."""
+    heads = [
+        [int(t) for t in jax.random.randint(
+            jax.random.PRNGKey(seed + h), (shared_len,), 0, cfg.vocab)]
+        for h in range(2)]
+    out = []
+    for i in range(n):
+        tail = jax.random.randint(
+            jax.random.PRNGKey(seed + 100 + 1009 * salt + i),
+            (plen - shared_len,), 0, cfg.vocab)
+        out.append(Request(f"s{salt}q{i}", heads[i % 2] + [int(t) for t in tail],
+                           max_new_tokens=gen))
+    return out
+
+
+def _drive_assigned(engines, pairs):
+    """Submit each (engine, request) pair and step all engines to
+    completion; returns (mean TTFT, cache-served tokens, token lists)."""
+    for eng, r in pairs:
+        eng.reset_metrics()
+    for eng, r in pairs:
+        eng.submit(r)
+    while not all(e.idle for e in engines):
+        for e in engines:
+            if not e.idle:
+                e.step()
+    seqs = [e.results[r.request_id] for e, r in pairs]
+    ttft = sum(s.ttft for s in seqs) / len(seqs)
+    toks = {s.request_id: s.out_tokens for s in seqs}
+    return ttft, sum(s.cached_tokens for s in seqs), toks
+
+
+def run_router(n_requests=8, plen=256, gen=4, chunk=64,
+               d_model=64, n_layers=2):
+    """Two-replica fleet serving a two-tenant shared-prefix workload:
+    TTFT under prefix-affine routing (serve/router.py scores prompts
+    against every replica's advertised trie boundaries) vs an
+    affinity-blind round-robin that strands half the requests on the
+    replica *not* holding their prefix — plus one measured live
+    migration round trip (export → wire blob → import) and the
+    bit-identity check across all three placements."""
+    from repro.serve.router import Router
+
+    cfg = _cfg(d_model, n_layers)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    shared_len = (3 * plen // 4 // chunk) * chunk
+    doc = {"name": "serving_router",
+           "config": {"replicas": 2, "requests": n_requests,
+                      "prompt_len": plen, "shared_len": shared_len,
+                      "gen_len": gen, "prefill_chunk": chunk,
+                      "d_model": d_model, "n_layers": n_layers,
+                      "backend": jax.default_backend()},
+           "cells": []}
+
+    # reference streams: one solo engine, no cache — the ground truth
+    # every placement must reproduce bit-for-bit
+    ref = Engine(cfg, params, EngineConfig(
+        n_slots=2, prefill_chunk=chunk, token_budget=chunk + n_requests,
+        max_seq_len=plen + gen + 1))
+    want = {}
+    for salt in (1, 2):
+        for r in _router_reqs(cfg, n_requests, plen, shared_len, salt, gen):
+            want.update(ref.generate([r]))
+
+    def warmed_fleet():
+        """Fresh pair, warmed so tenant A's prefix is cached on r0 and
+        B's on r1 (and every shape is compiled) before the clock runs."""
+        fleet = _router_fleet(cfg, params, n_requests, plen, gen, chunk)
+        warm = _router_reqs(cfg, n_requests, plen, shared_len, 0, gen)
+        _drive_assigned(fleet, [(fleet[i % 2], r)
+                                for i, r in enumerate(warm)])
+        return fleet
+
+    # arm 1: affinity-blind — requests alternate A,B but placement
+    # pairs them off so exactly half land on the wrong replica
+    fleet = warmed_fleet()
+    reqs = _router_reqs(cfg, n_requests, plen, shared_len, 1, gen)
+    t0 = time.perf_counter()
+    ttft_blind, cached_blind, toks_blind = _drive_assigned(
+        fleet, [(fleet[(i // 2) % 2], r) for i, r in enumerate(reqs)])
+    wall_blind = time.perf_counter() - t0
+
+    # arm 2: prefix-affine — the router scores each prompt against the
+    # replicas' trie summaries and follows the longest cached prefix
+    rt = Router(warmed_fleet())
+    reqs = _router_reqs(cfg, n_requests, plen, shared_len, 2, gen)
+    t0 = time.perf_counter()
+    for r in reqs:
+        rt.submit(r)
+    for _ in rt.run():
+        pass
+    wall_affine = time.perf_counter() - t0
+    seqs = [rt.results[r.request_id] for r in reqs]
+    ttft_affine = sum(s.ttft for s in seqs) / len(seqs)
+    cached_affine = sum(s.cached_tokens for s in seqs)
+    prefix_routed = int(rt._prefix_c.value)
+
+    bit_identical = (
+        all(toks_blind[f"s1q{i}"] == want[f"s1q{i}"]
+            for i in range(n_requests))
+        and all(rt.results[f"s2q{i}"].out_tokens == want[f"s2q{i}"]
+                for i in range(n_requests)))
+
+    row = {"requests": n_requests, "shared_len": shared_len,
+           "ttft_blind_s": ttft_blind, "ttft_affine_s": ttft_affine,
+           "ttft_speedup": ttft_blind / max(ttft_affine, 1e-9),
+           "cached_tokens_blind": cached_blind,
+           "cached_tokens_affine": cached_affine,
+           "prefix_routed": prefix_routed,
+           "bit_identical": bit_identical}
+    doc["cells"].append(row)
+    emit(f"router_affine_r{n_requests}_p{plen}", wall_affine * 1e6,
+         f"ttft_blind_s={ttft_blind:.4f};ttft_affine_s={ttft_affine:.4f};"
+         f"ttft_speedup={row['ttft_speedup']:.2f};"
+         f"cached_affine={cached_affine};cached_blind={cached_blind}")
+
+    # migration round trip: drain a decoding stream, ship it, restore it
+    # on the peer, finish there — timed, sized, and checked bit-exact
+    rt2 = Router(_router_fleet(cfg, params, 2, plen, gen + 12, chunk))
+    mreq = Request("mig0", _prompts(cfg, 1, plen, seed=77)[0],
+                   max_new_tokens=gen + 12)
+    mwant = Engine(cfg, params, EngineConfig(
+        n_slots=1, prefill_chunk=chunk, token_budget=chunk + 1,
+        max_seq_len=plen + gen + 13)).generate([mreq])["mig0"]
+    rt2.submit(mreq)
+    emitted = 0
+    while emitted < 2:
+        emitted += sum(e.request_id == "mig0" for e in rt2.step())
+    src = rt2._owner["mig0"]
+    dst = "r1" if src == "r0" else "r0"
+    t0 = time.perf_counter()
+    nbytes = rt2.migrate("mig0", dst)
+    mig_wall = time.perf_counter() - t0
+    for _ in rt2.run():
+        pass
+    doc["migration"] = {
+        "wire_bytes": nbytes,
+        "roundtrip_s": mig_wall,
+        "tokens_before": 2, "tokens_total": gen + 12,
+        "bit_identical": rt2.results["mig0"].out_tokens == mwant}
+    emit(f"router_migrate_p{plen}", mig_wall * 1e6,
+         f"wire_bytes={nbytes};"
+         f"bit_identical={int(doc['migration']['bit_identical'])}")
+    return doc
+
+
+# ---------------------------------------------------------------------------
 # Decode-heavy mode: one-token-per-step vs speculative decoding
 # ---------------------------------------------------------------------------
 
@@ -380,6 +543,10 @@ def main():
                     help="only run the decode-heavy speculation cells")
     ap.add_argument("--shared-prefix", action="store_true",
                     help="only run the shared-prefix prefix-cache cells")
+    ap.add_argument("--router", action="store_true",
+                    help="only run the two-replica router cells "
+                         "(prefix-affine vs affinity-blind TTFT, one "
+                         "timed live-migration round trip)")
     ap.add_argument("--trace", default=None, metavar="PREFIX",
                     help="write one Chrome-trace JSON per standard cell "
                          "to PREFIX_b{B}_p{P}_g{G}.json")
@@ -393,6 +560,10 @@ def main():
             overlaps=(0.75,) if args.fast else (0.5, 0.75, 1.0),
             plen=256 if args.fast else 512,
             prefill_chunk=64 if args.fast else 128)
+    elif args.router:
+        doc = run_router(n_requests=4 if args.fast else 8,
+                         plen=128 if args.fast else 256,
+                         chunk=32 if args.fast else 64)
     else:
         cells = ((2, 64, 8),) if args.fast else \
             ((2, 64, 16), (4, 64, 16), (4, 128, 16), (2, 128, 32))
@@ -405,6 +576,9 @@ def main():
             overlaps=(0.75,) if args.fast else (0.5, 0.75, 1.0),
             plen=256 if args.fast else 512,
             prefill_chunk=64 if args.fast else 128)
+        doc["router"] = run_router(n_requests=4 if args.fast else 8,
+                                   plen=128 if args.fast else 256,
+                                   chunk=32 if args.fast else 64)
     check_serving_doc(doc)
     print(json.dumps(doc, indent=2))
     if args.json:

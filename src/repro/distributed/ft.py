@@ -158,6 +158,20 @@ class Membership:
                      peer, self.epoch, len(self._last_beat))
         self.publish()
 
+    def leave(self, peer: str) -> None:
+        """Explicit departure (cooperative preemption / drain): drop the
+        peer now, without waiting for its heartbeats to time out. A
+        leave bumps the epoch exactly like an expiry."""
+        if peer not in self._last_beat:
+            return
+        del self._last_beat[peer]
+        self.epoch += 1
+        self._epoch_c.inc()
+        self._age_g.labels(peer=peer).set(self.timeout_s)
+        log.info("peer %s left (epoch %d, %d members)",
+                 peer, self.epoch, len(self._last_beat))
+        self.publish()
+
     def sweep(self) -> list[str]:
         """Expire peers silent for ``timeout_s``; each is a leave
         (epoch bump). Returns the expired peers."""

@@ -26,14 +26,28 @@ exactly how the engine's ServePlan and each trace-time attention site
 were chosen. All of it observational: streams are bit-identical with
 every flag on or off.
 
-Fleet mode: ``--replica NAME`` names this process (the trace's
-process-name track and the snapshot's gauge tag) and
-``--metrics-snapshot PATH`` writes the mergeable ``repro.obs/v1``
-snapshot at exit. Run N replicas, then::
+Fleet mode: ``--replica NAME`` names this process — it threads into
+``EngineConfig.replica_id``, the ONE identity obs snapshots,
+``ft.Membership`` and the router agree on — and ``--metrics-snapshot
+PATH`` writes the mergeable ``repro.obs/v1`` snapshot at exit. Run N
+replicas, then::
 
     python -m repro.obs --request req0 r0_trace.json r1_trace.json
     python -m repro.obs --merge-snapshots r0.snap r1.snap --prom fleet.prom
     python -m repro.obs.slo --check --snapshot r0.snap --snapshot r1.snap
+
+Router mode (``--router``, serve/router.py): the same workload runs
+against ``--replicas N`` in-process engine replicas behind the
+prefix-aware router, with live migration on preemption
+(``--migrate-on-preempt``, default on; ``--preempt-step K`` force-
+preempts the busiest replica at fleet step K — the CI chaos check).
+``--metrics-snapshot`` then writes the *merged* fleet snapshot (every
+replica + the router's ``router_*``/``ft_*`` families), and ``--check``
+still validates every stream against the naive baseline — migration
+included, because migrated streams are bit-identical::
+
+    python -m repro.launch.serve --router --replicas 2 --preempt-step 6 \
+        --requests 4 --prefix-cache -1
 """
 
 from __future__ import annotations
@@ -147,6 +161,29 @@ def run_workload(engine: Engine, reqs, arrivals):
     return {r.request_id: engine.results[r.request_id] for r in reqs}
 
 
+def run_router_workload(router, reqs, arrivals, *, preempt_step: int = 0):
+    """Drive the fleet with the same arrival schedule, keyed on fleet
+    steps. ``preempt_step > 0`` force-preempts the busiest replica once
+    at that step — decoding streams migrate mid-flight (or replay,
+    without ``migrate_on_preempt``) and, because migration is
+    bit-identical, the caller's ``--check`` still holds."""
+    pending = sorted(zip(arrivals, reqs), key=lambda p: p[0])
+    step = 0
+    while pending or not router.idle:
+        while pending and pending[0][0] <= step:
+            router.submit(pending.pop(0)[1])
+        router.step()
+        step += 1
+        if step == preempt_step and len(router.replicas) > 1:
+            victim = max(router.replicas,
+                         key=lambda r: len(router.replicas[r].sequences))
+            moved = router.preempt(victim)
+            print(f"preempted {victim} at step {step}: "
+                  f"{len(moved['migrated'])} migrated, "
+                  f"{len(moved['resubmitted'])} resubmitted")
+    return {r.request_id: router.results[r.request_id] for r in reqs}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
@@ -200,8 +237,23 @@ def main():
                          "snapshot at exit (fleet aggregation / SLO "
                          "input: python -m repro.obs / repro.obs.slo)")
     ap.add_argument("--replica", default=None, metavar="NAME",
-                    help="name this replica: tags the trace's process "
-                         "track and the snapshot's gauges")
+                    help="name this replica (EngineConfig.replica_id): "
+                         "tags the trace's process track, the snapshot's "
+                         "gauges and the fleet membership")
+    ap.add_argument("--router", action="store_true",
+                    help="serve through the prefix-aware router over "
+                         "--replicas in-process engine replicas "
+                         "(serve/router.py)")
+    ap.add_argument("--replicas", type=int, default=2, metavar="N",
+                    help="router mode: number of engine replicas")
+    ap.add_argument("--no-migrate-on-preempt", dest="migrate_on_preempt",
+                    action="store_false",
+                    help="router mode: replay preempted streams from "
+                         "scratch instead of live-migrating them")
+    ap.add_argument("--preempt-step", type=int, default=0, metavar="K",
+                    help="router mode: force-preempt the busiest replica "
+                         "at fleet step K (0 = never) — exercises live "
+                         "migration under --check")
     ap.add_argument("--metrics-port", type=int, default=0, metavar="PORT",
                     help="serve the exposition live on "
                          "http://localhost:PORT/metrics (0 = off)")
@@ -247,16 +299,29 @@ def main():
     if args.decision_log:
         OD.log.enable()
 
-    engine = Engine(cfg, params, EngineConfig(
-        n_slots=args.slots, prefill_chunk=args.prefill_chunk,
-        token_budget=args.token_budget, cache_kind=args.cache,
-        max_seq_len=args.prompt_len + args.gen + 1,
-        temperature=args.temperature,
-        prefix_cache_mb=args.prefix_cache,
-        speculate_k=args.speculate,
-        spec=SpecConfig(drafter=args.drafter,
-                        draft_layers=args.draft_layers)))
-    plan = engine.plan
+    def econf(replica_id):
+        return EngineConfig(
+            n_slots=args.slots, prefill_chunk=args.prefill_chunk,
+            token_budget=args.token_budget, cache_kind=args.cache,
+            max_seq_len=args.prompt_len + args.gen + 1,
+            temperature=args.temperature,
+            prefix_cache_mb=args.prefix_cache,
+            speculate_k=args.speculate,
+            spec=SpecConfig(drafter=args.drafter,
+                            draft_layers=args.draft_layers),
+            replica_id=replica_id)
+
+    router = None
+    if args.router:
+        from repro.serve.router import Router
+        engines = [Engine(cfg, params, econf(f"r{i}"))
+                   for i in range(max(args.replicas, 1))]
+        router = Router(engines,
+                        migrate_on_preempt=args.migrate_on_preempt)
+        engine, plan = engines[0], engines[0].plan
+    else:
+        engine = Engine(cfg, params, econf(args.replica))
+        plan = engine.plan
     print(f"serve plan: cache={plan.cache_kind} "
           f"prefill={plan.prefill.name} decode={plan.decode.name}"
           + (f" verify={plan.verify.name}" if plan.verify else "")
@@ -266,12 +331,27 @@ def main():
     reqs, arrivals = mixed_arrival_workload(
         cfg, args.requests, args.prompt_len, args.gen,
         top_k=args.top_k, top_p=args.top_p, shared_frac=args.shared_prefix)
-    results = run_workload(engine, reqs, arrivals)
-
-    summary = engine.stats.summary()
-    print(json.dumps(summary, indent=2))
-    shared = max((m.active_decoding for m in engine.stats.steps), default=0)
-    print(f"max sequences sharing a decode batch: {shared}")
+    if router is not None:
+        results = run_router_workload(router, reqs, arrivals,
+                                      preempt_step=args.preempt_step)
+        routed = {rid: int(c.value) for rid, c in
+                  [(r, router._requests_c.labels(replica=r))
+                   for r in sorted({*router.replicas,
+                                    *(o for o in router._owner.values())})]}
+        print(json.dumps({
+            "replicas": sorted(router.replicas),
+            "routed": routed,
+            "migrations": int(router._migrations_c.value),
+            "resubmissions": int(router._resub_c.value),
+            "wire_bytes": int(router._wire_c.value),
+            "epoch": router.membership.epoch}, indent=2))
+    else:
+        results = run_workload(engine, reqs, arrivals)
+        summary = engine.stats.summary()
+        print(json.dumps(summary, indent=2))
+        shared = max((m.active_decoding for m in engine.stats.steps),
+                     default=0)
+        print(f"max sequences sharing a decode batch: {shared}")
 
     if args.trace:
         tracer.write(args.trace)
@@ -279,13 +359,17 @@ def main():
         print(f"trace: {len(tracer.export()['traceEvents'])} events "
               f"-> {args.trace}")
     if args.metrics_file:
+        from repro.obs import aggregate as OA
+        body = (OA.render_snapshot(router.fleet_snapshot())
+                if router is not None else engine.render_metrics())
         with open(args.metrics_file, "w") as f:
-            f.write(engine.render_metrics())
+            f.write(body)
         print(f"metrics exposition -> {args.metrics_file}")
     if args.metrics_snapshot:
         from repro.obs import aggregate as OA
-        OA.save_snapshot(engine.snapshot_metrics(replica=args.replica),
-                         args.metrics_snapshot)
+        snap = (router.fleet_snapshot() if router is not None
+                else engine.snapshot_metrics())
+        OA.save_snapshot(snap, args.metrics_snapshot)
         print(f"metrics snapshot -> {args.metrics_snapshot}")
     if args.decision_log:
         OD.log.write_jsonl(args.decision_log)

@@ -84,6 +84,9 @@ class EngineConfig:
     prefix_cache_mb: float = 0.0  # shared-prefix cache byte budget in MB
     #   (0 = cache off; <0 = on, unbounded)
     prefix: PrefixCacheConfig = field(default_factory=PrefixCacheConfig)
+    replica_id: str | None = None  # fleet identity: ONE name threaded
+    #   through obs snapshots, ft.Membership and the router (serve/
+    #   router.py) — None = single-replica deployment
 
 
 def _filter_logits(lg: jnp.ndarray, top_k: int, top_p: float) -> jnp.ndarray:
@@ -132,6 +135,7 @@ class Engine:
                 f"decoder architectures (pattern {tuple(cfg.layer_pattern)})")
         self.cfg = cfg
         self.econf = econf
+        self.replica_id = econf.replica_id
         # One routing decision for the whole engine: cache layout
         # (resolving cache_kind="auto" through the paper's N1 memory
         # crossover) plus the prefill/decode path selections the
@@ -328,11 +332,17 @@ class Engine:
         exposition this is mergeable: the fleet aggregator
         (``python -m repro.obs --merge-snapshots``) folds N replicas'
         snapshots into one exposition whose counters are the fleet sums
-        and whose gauges keep a per-``replica`` label."""
+        and whose gauges keep a per-``replica`` label.
+
+        ``replica`` defaults to ``EngineConfig.replica_id`` — the ONE
+        identity the router, membership and obs agree on; the override
+        exists for tooling that relabels snapshots after the fact."""
         from repro.obs import aggregate as OA
         regs = [self.stats.registry]
         if self.prefix_cache is not None:
             regs.append(self.prefix_cache.registry)
+        if replica is None:
+            replica = self.replica_id
         return OA.snapshot(*regs, replica=replica)
 
     def pop_result(self, request_id: str) -> Sequence:
@@ -340,6 +350,163 @@ class Engine:
         sequences until popped — long-running callers must drain (and may
         then reuse the request_id), or memory grows with requests served."""
         return self.results.pop(request_id)
+
+    # ------------------------------------------------------------------
+    # Live migration (serve/wire.py + serve/router.py)
+    # ------------------------------------------------------------------
+    #
+    # A decoding stream is its slot snapshot plus the request and the
+    # tokens emitted so far — O(layers·d²) bytes for Taylor slots,
+    # independent of context (the paper's asset; ROADMAP "fleet-scale
+    # serving"). Migration happens only at step boundaries: between
+    # steps the slot state has absorbed exactly prompt + out_tokens[:-1]
+    # (the last emitted token is the *next* decode feed), so a peer
+    # restoring the snapshot continues the stream with the same float
+    # ops a non-migrated engine would run — bit-identical tokens.
+    # Sampling survives too: keys are derived from (engine seed,
+    # request_id, token index), none of which move with the machine.
+
+    def _fingerprint(self) -> dict:
+        """What the importing engine must agree on for the continued
+        stream to be bit-identical to an unmigrated run."""
+        return {"model": {"name": self.cfg.name,
+                          "n_layers": self.cfg.n_layers,
+                          "d_model": self.cfg.d_model,
+                          "n_heads": self.cfg.n_heads,
+                          "vocab": self.cfg.vocab},
+                "seed": self.econf.seed,
+                "temperature": self.econf.temperature}
+
+    def export_request(self, request_id: str) -> bytes:
+        """Drain one decoding stream into a ``repro.state/v1`` wire blob
+        and drop it from this engine (slot freed, bookkeeping cleared).
+
+        Only DECODING streams export — WAITING/PREFILLING requests hold
+        no state worth shipping (cancel + resubmit replays them
+        deterministically), and mid-step there is no boundary to cut at.
+        """
+        from repro.serve import wire
+        seq = self.sequences.get(request_id)
+        if seq is None:
+            raise KeyError(f"unknown request {request_id!r}")
+        if seq.status is not SequenceStatus.DECODING:
+            raise ValueError(
+                f"request {request_id!r} is {seq.status.value}; only "
+                "decoding streams migrate (step-boundary invariant)")
+        with tracer.span("migrate_export", request=request_id):
+            r = seq.request
+            blob = wire.encode_stream(
+                self.pool.snapshot(seq.slot),
+                request={"request_id": r.request_id,
+                         "prompt": [int(t) for t in r.prompt],
+                         "max_new_tokens": r.max_new_tokens,
+                         "eos_id": r.eos_id, "temperature": r.temperature,
+                         "top_k": r.top_k, "top_p": r.top_p},
+                out_tokens=seq.out_tokens,
+                cache_kind=self.plan.cache_kind,
+                cache_len=self.pool.cache_len,
+                model=self._fingerprint(), replica=self.replica_id)
+        # drain only after the snapshot is safely in the blob
+        self._slots[seq.slot] = None
+        if self.drafter is not None:
+            self.drafter.release(seq.slot)
+        self.pool.release(seq.slot)
+        seq.slot = None
+        del self.sequences[request_id]
+        return blob
+
+    def import_request(self, blob: bytes) -> Sequence:
+        """Restore a migrated stream from a wire blob and resume
+        decoding it here. All-or-nothing: every validation — blob
+        integrity (wire.decode), engine compatibility, duplicate id,
+        capacity, structural shape/dtype match against this pool's slot
+        template — runs *before* a slot is touched, so a refused blob
+        leaves the engine bit-exactly as it was (never half-restored).
+        """
+        from repro.serve import wire
+        meta, state = wire.decode_stream(blob)
+        req = Request(**meta["request"])
+        rid = req.request_id
+        out = [int(t) for t in meta["out_tokens"]]
+        if rid in self.sequences or rid in self.results:
+            raise ValueError(f"duplicate request_id {rid!r}")
+        if not out:
+            raise wire.WireError(
+                "stream blob has no emitted tokens — a decoding stream "
+                "always has at least the first token")
+        if len(out) >= req.max_new_tokens or out[-1] == req.eos_id:
+            raise wire.WireError("stream blob is already finished")
+        if len(req.prompt) + req.max_new_tokens > self.econf.max_seq_len:
+            raise ValueError("prompt + max_new_tokens exceeds max_seq_len")
+        if meta["cache_kind"] != self.plan.cache_kind:
+            raise wire.WireError(
+                f"blob cache_kind {meta['cache_kind']!r} != engine "
+                f"{self.plan.cache_kind!r}")
+        if meta["cache_len"] != self.pool.cache_len:
+            raise wire.WireError(
+                f"blob cache_len {meta['cache_len']} != pool "
+                f"{self.pool.cache_len}")
+        fp = self._fingerprint()
+        if meta.get("model", fp) != fp:
+            raise wire.WireError(
+                f"engine fingerprint mismatch: blob {meta['model']} vs "
+                f"here {fp} — continued stream would not be bit-identical")
+        # structural check: the blob's tree must match this pool's slot
+        # layout leaf for leaf (shape AND dtype) before any scatter
+        template = jax.eval_shape(
+            lambda c: M.cache_gather_slot(c, 0), self.pool.cache)
+        t_def = jax.tree.structure(template)
+        s_def = jax.tree.structure(state)
+        if t_def != s_def:
+            raise wire.WireError(
+                f"blob tree structure {s_def} != slot template {t_def}")
+        for i, (want, got) in enumerate(zip(jax.tree.leaves(template),
+                                            jax.tree.leaves(state))):
+            if want.shape != got.shape or want.dtype != got.dtype:
+                raise wire.WireError(
+                    f"leaf {i}: blob {got.shape}/{got.dtype} != slot "
+                    f"template {want.shape}/{want.dtype}")
+        if not self.pool.free_slots:
+            raise RuntimeError("no free slot")
+        with tracer.span("migrate_import", request=rid):
+            slot = self.pool.alloc()
+            try:
+                self.pool.restore(slot, state)
+                seq = Sequence(request=req,
+                               status=SequenceStatus.DECODING,
+                               slot=slot, out_tokens=out,
+                               consumed=len(req.prompt))
+                seq.t_first_token = seq.t_submit  # TTFT was paid at the
+                #   source; don't re-record it here
+                self._slots[slot] = seq
+                self.sequences[rid] = seq
+                if self.drafter is not None:
+                    self.drafter.on_ready(seq)
+            except Exception:
+                self._slots[slot] = None
+                self.pool.release(slot)
+                self.sequences.pop(rid, None)
+                raise
+        return seq
+
+    def cancel(self, request_id: str) -> Request:
+        """Abandon a live request (any pre-FINISHED status), free its
+        slot if it holds one, and return the Request — the router's
+        replay path (failed hard, nothing exportable) resubmits it
+        elsewhere; determinism makes the replayed stream identical."""
+        seq = self.sequences.get(request_id)
+        if seq is None:
+            raise KeyError(f"unknown request {request_id!r}")
+        if seq.status is SequenceStatus.WAITING:
+            self.queue._q.remove(seq)
+        else:
+            self._slots[seq.slot] = None
+            if self.drafter is not None:
+                self.drafter.release(seq.slot)
+            self.pool.release(seq.slot)
+            seq.slot = None
+        del self.sequences[request_id]
+        return seq.request
 
     # ------------------------------------------------------------------
     # One scheduler step

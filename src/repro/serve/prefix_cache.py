@@ -41,11 +41,13 @@ sub-dict re-based on the last reset) and the Prometheus exposition.
 
 from __future__ import annotations
 
+import zlib
 from collections import OrderedDict, deque
 from dataclasses import dataclass
-from typing import Sequence as Seq
+from typing import Iterator, Sequence as Seq
 
 import jax
+import numpy as np
 
 from repro.obs.metrics import MetricsRegistry
 
@@ -54,6 +56,21 @@ def tree_nbytes(tree) -> int:
     """Total bytes of every array leaf in a pytree."""
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
                if hasattr(x, "size"))
+
+
+def chunk_hash_chain(chunks: Seq[tuple[int, ...]]) -> list[int]:
+    """Rolling crc32 over a chunk sequence: ``out[k]`` identifies the
+    path ``chunks[:k+1]`` as one integer. This is what a replica
+    *advertises* instead of its raw trie (``PrefixCache.summary``) and
+    what the router scores prompts with (``serve/router.py``) — a
+    collision can only misroute a request (a perf wobble), never change
+    its tokens, since the landing replica's own trie does the real
+    token-exact lookup."""
+    out, h = [], 0
+    for c in chunks:
+        h = zlib.crc32(np.asarray(c, np.int64).tobytes(), h)
+        out.append(h)
+    return out
 
 
 @dataclass
@@ -340,6 +357,67 @@ class PrefixCache:
                and node.entry is None):
             del node.parent.children[node.edge]
             node = node.parent
+
+    # -- fleet surface (serve/router.py + serve/wire.py) --------------------
+
+    def entries(self) -> Iterator[tuple[list[int], CacheEntry]]:
+        """Every resident entry as ``(path_tokens, entry)`` — the full
+        token path from the root, which is exactly the prompt prefix the
+        entry caches (``len(path) == entry.n_tokens``)."""
+        stack = [(self.root, ())]
+        while stack:
+            node, path = stack.pop()
+            if node.entry is not None:
+                yield list(path), node.entry
+            for edge, ch in node.children.items():
+                stack.append((ch, path + edge))
+
+    def summary(self) -> dict:
+        """The advertised trie: ``{"chunk_tokens": C, "boundaries":
+        {chain_hash: n_tokens}}`` — a few ints per entry instead of
+        O(layers·d²) state, cheap enough to gossip to a router every
+        step. Hashes come from :func:`chunk_hash_chain` over each
+        entry's path."""
+        boundaries: dict[int, int] = {}
+        stack = [(self.root, 0)]
+        while stack:
+            node, h = stack.pop()
+            if node.entry is not None:
+                boundaries[h] = node.entry.n_tokens
+            for edge, ch in node.children.items():
+                stack.append(
+                    (ch, zlib.crc32(np.asarray(edge, np.int64).tobytes(), h)))
+        return {"chunk_tokens": self.chunk_tokens, "boundaries": boundaries}
+
+    def export_entries(self, max_entries: int = 0) -> list[bytes]:
+        """Serialize resident entries (most-recently-used first, capped
+        at ``max_entries`` when > 0) into ``repro.state/v1`` blobs a
+        peer's :meth:`import_entries` can warm from."""
+        from repro.serve import wire
+        order = {id(n.entry): i for i, n in enumerate(reversed(self._lru))}
+        pairs = sorted(self.entries(),
+                       key=lambda te: order.get(id(te[1]), len(order)))
+        if max_entries > 0:
+            pairs = pairs[:max_entries]
+        return [wire.encode_trie_entry(toks, e.n_tokens, e.state, e.logits)
+                for toks, e in pairs]
+
+    def import_entries(self, blobs: Seq[bytes]) -> int:
+        """Warm this trie from a peer's exported entries; returns how
+        many were stored. Every blob passes the full wire integrity
+        check, and ``insert`` applies the same grid/budget discipline as
+        local inserts — an off-grid boundary (peer with a different
+        chunk size) is refused, never bent onto this grid."""
+        from repro.serve import wire
+        n = 0
+        for blob in blobs:
+            toks, n_tokens, state, logits = wire.decode_trie_entry(blob)
+            if n_tokens != len(toks):
+                raise wire.WireError(
+                    f"trie blob path {len(toks)} tokens != boundary "
+                    f"{n_tokens}")
+            n += bool(self.insert(toks, n_tokens, state, logits))
+        return n
 
     # -- introspection ------------------------------------------------------
 

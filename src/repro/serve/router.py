@@ -1,0 +1,379 @@
+"""Prefix-aware router over engine replicas, with live migration.
+
+The fleet tier the ROADMAP's "fleet-scale serving" item asks for: N
+:class:`~repro.serve.engine.Engine` replicas behind one front door.
+Three jobs, all built on the paper's constant-size recurrent state:
+
+  * **Placement** — each request is scored against every replica's
+    *advertised* trie summary (``PrefixCache.summary``: chunk-hash
+    chains, a few ints per entry) and routed to the replica holding its
+    longest cached prefix; ties and cold prompts fall back to
+    least-loaded. A hash collision can only misroute (perf), never
+    change tokens — the landing replica's trie does the token-exact
+    lookup.
+  * **Cache federation** — ``warm_from_peer`` ships a peer's trie
+    entries as ``repro.state/v1`` blobs (``serve/wire.py``) so a cold
+    replica starts with warm prefixes.
+  * **Migration** — a decoding stream drains at a step boundary
+    (``Engine.export_request``: slot snapshot + lifecycle meta,
+    O(layers·d²) bytes for Taylor state regardless of context), ships
+    as one wire blob, restores into a peer's pool
+    (``Engine.import_request``) and continues **bit-identically** —
+    emitted streams are a pure function of (params, config, request,
+    seed), and the machine they run on is not in that list.
+
+Health is ``distributed/ft.Membership``: the router heartbeats every
+replica it steps; :meth:`kill` (hard crash — engine gone, heartbeats
+stop) leaves in-flight requests orphaned until the sweep expires the
+peer, at which point they are *replayed* on surviving replicas —
+determinism makes the replayed stream identical, and already-delivered
+event indices are suppressed so downstream consumers never see a
+duplicate token. :meth:`preempt` (cooperative — straggler replacement,
+planned eviction) migrates decoding streams instead of replaying them
+when ``migrate_on_preempt`` is set, cancels + resubmits the rest, and
+``Membership.leave``s immediately.
+
+Everything observable publishes into one router-owned registry —
+``router_*`` counters/gauges next to the membership's ``ft_*`` series —
+snapshot via :meth:`snapshot_metrics` (tagged ``replica="router"``) and
+merged with the replicas' snapshots into a single fleet exposition.
+
+In-process by design: replicas are Engine objects in one process, the
+"wire" is bytes in memory. That keeps the chaos suite
+(tests/test_router.py) honest — every failure mode is driven through
+the same code paths a networked deployment would take, minus the
+transport.
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from typing import Iterable, Iterator
+
+from repro.distributed.ft import Membership, StragglerDetector
+from repro.obs import metrics as OM
+from repro.obs.trace import tracer
+from repro.serve.engine import Engine
+from repro.serve.prefix_cache import chunk_hash_chain
+from repro.serve.request import Request, SequenceStatus, TokenEvent
+
+log = logging.getLogger("repro.router")
+
+
+class Router:
+    """Front door over a set of live Engine replicas.
+
+    Every replica must carry a unique ``EngineConfig.replica_id`` —
+    the ONE identity the router, its ``ft.Membership`` and the obs
+    snapshots agree on. ``clock`` is injectable (tests drive time to
+    force heartbeat expiry); ``timeout_s`` is the membership's silence
+    budget.
+    """
+
+    def __init__(self, replicas: Iterable[Engine] = (), *,
+                 timeout_s: float = 10.0, migrate_on_preempt: bool = True,
+                 registry: OM.MetricsRegistry | None = None,
+                 clock=time.monotonic):
+        self.registry = registry or OM.MetricsRegistry()
+        self.membership = Membership(timeout_s=timeout_s,
+                                     registry=self.registry, clock=clock)
+        self.migrate_on_preempt = migrate_on_preempt
+        self.replicas: dict[str, Engine] = {}
+        self.results: dict[str, object] = {}    # request_id -> Sequence
+        self._requests: dict[str, Request] = {}  # live requests, by id
+        self._owner: dict[str, str] = {}         # request_id -> replica
+        self._emitted: dict[str, int] = {}       # next expected ev.index
+        self._stragglers: dict[str, StragglerDetector] = {}
+        r = self.registry
+        self._requests_c = r.counter("router_requests_total",
+                                     "requests routed, by landing replica",
+                                     labelnames=("replica",))
+        self._prefix_c = r.counter("router_prefix_routed_total",
+                                   "requests placed by cached-prefix score")
+        self._loaded_c = r.counter("router_least_loaded_routed_total",
+                                   "requests placed by least-loaded fallback")
+        self._migrations_c = r.counter("router_migrations_total",
+                                       "live streams migrated between "
+                                       "replicas")
+        self._resub_c = r.counter("router_resubmissions_total",
+                                  "requests replayed after replica loss")
+        self._wire_c = r.counter("router_wire_bytes_total",
+                                 "repro.state/v1 bytes shipped")
+        self._failures_c = r.counter("router_replica_failures_total",
+                                     "replicas lost to heartbeat expiry")
+        self._cache_import_c = r.counter("router_cache_import_entries_total",
+                                         "prefix-cache entries imported "
+                                         "from peers")
+        self._replicas_g = r.gauge("router_replicas",
+                                   "replicas currently serving")
+        for eng in replicas:
+            self.add_replica(eng)
+
+    # ------------------------------------------------------------------
+    # Membership
+    # ------------------------------------------------------------------
+
+    def add_replica(self, engine: Engine) -> str:
+        rid = engine.replica_id
+        if not rid:
+            raise ValueError("router replicas need EngineConfig.replica_id")
+        if rid in self.replicas:
+            raise ValueError(f"duplicate replica_id {rid!r}")
+        self.replicas[rid] = engine
+        self._stragglers[rid] = StragglerDetector()
+        self.membership.heartbeat(rid)      # join (epoch bump)
+        self._replicas_g.set(len(self.replicas))
+        return rid
+
+    @property
+    def live(self) -> list[str]:
+        """Replicas that are both attached and membership-live."""
+        return [r for r in self.membership.members if r in self.replicas]
+
+    def kill(self, rid: str) -> None:
+        """Hard crash: the engine vanishes, its heartbeats stop. Its
+        in-flight requests stay orphaned until the membership sweep
+        expires the peer (heartbeat-loss detection), then replay on the
+        survivors — the chaos suite's main lever."""
+        self.replicas.pop(rid, None)
+        self._stragglers.pop(rid, None)
+        self._replicas_g.set(len(self.replicas))
+
+    def preempt(self, rid: str) -> dict:
+        """Cooperative drain (planned eviction / straggler replacement).
+
+        Decoding streams migrate to peers with free slots when
+        ``migrate_on_preempt`` (else cancel + resubmit, still
+        deterministic — just re-paying prefill); waiting/prefilling
+        requests always cancel + resubmit (nothing emitted yet, so
+        replay is trivially identical). The replica then ``leave``s the
+        membership immediately — no timeout wait.
+        """
+        eng = self.replicas.get(rid)
+        if eng is None:
+            raise KeyError(f"unknown replica {rid!r}")
+        moved = {"migrated": [], "resubmitted": []}
+        with tracer.span("router_preempt", replica=rid):
+            for req_id in [r for r, o in self._owner.items() if o == rid]:
+                seq = eng.sequences[req_id]
+                dst = (self._pick_migration_target(rid)
+                       if (self.migrate_on_preempt
+                           and seq.status is SequenceStatus.DECODING)
+                       else None)
+                if dst is not None:
+                    self.migrate(req_id, dst)
+                    moved["migrated"].append(req_id)
+                else:
+                    req = eng.cancel(req_id)
+                    self._resubmit(req, exclude=rid)
+                    moved["resubmitted"].append(req_id)
+        self.replicas.pop(rid, None)
+        self._stragglers.pop(rid, None)
+        self.membership.leave(rid)
+        self._replicas_g.set(len(self.replicas))
+        log.info("preempted %s: %d migrated, %d resubmitted", rid,
+                 len(moved["migrated"]), len(moved["resubmitted"]))
+        return moved
+
+    def _pick_migration_target(self, exclude: str) -> str | None:
+        """Least-loaded live peer with a free pool slot."""
+        cands = [(self.replicas[r].queue.depth
+                  + len(self.replicas[r].sequences), r)
+                 for r in self.live
+                 if r != exclude and self.replicas[r].pool.free_slots]
+        return min(cands)[1] if cands else None
+
+    # ------------------------------------------------------------------
+    # Placement
+    # ------------------------------------------------------------------
+
+    def _score(self, summary: dict | None, prompt) -> int:
+        """Longest advertised cached prefix of ``prompt``, in tokens."""
+        if not summary or not summary["boundaries"]:
+            return 0
+        C = summary["chunk_tokens"]
+        chunks = [tuple(int(t) for t in prompt[i:i + C])
+                  for i in range(0, (len(prompt) // C) * C, C)]
+        best = 0
+        for h, n_chunks in zip(chunk_hash_chain(chunks),
+                               range(1, len(chunks) + 1)):
+            n = summary["boundaries"].get(h)
+            if n == n_chunks * C:       # depth must agree, not just hash
+                best = n
+        return best
+
+    def route(self, request: Request, *, _exclude: str | None = None) -> str:
+        """Pick the landing replica: deepest advertised cached prefix
+        wins; cold prompts (or all-zero scores) go least-loaded.
+        Replicas with a full admission queue never win. ``_exclude``
+        bars a replica that is being drained — it is still live while
+        ``preempt`` walks its requests, but must not win them back."""
+        cands = [r for r in self.live
+                 if r != _exclude and not self.replicas[r].queue.full]
+        if not cands:
+            raise RuntimeError("no live replica with admission capacity")
+        with tracer.span("router_route", request=request.request_id):
+            scored = []
+            for rid in cands:
+                eng = self.replicas[rid]
+                summ = (eng.prefix_cache.summary()
+                        if eng.prefix_cache is not None else None)
+                load = eng.queue.depth + len(eng.sequences)
+                scored.append((self._score(summ, request.prompt),
+                               -load, rid))
+            score, _, rid = max(scored)
+        (self._prefix_c if score > 0 else self._loaded_c).inc()
+        return rid
+
+    def submit(self, request: Request) -> str:
+        """Route + submit one request; returns the landing replica."""
+        rid = self.route(request)
+        self.replicas[rid].submit(request)
+        self._requests[request.request_id] = request
+        self._owner[request.request_id] = rid
+        self._emitted.setdefault(request.request_id, 0)
+        self._requests_c.labels(replica=rid).inc()
+        return rid
+
+    def _resubmit(self, request: Request, *,
+                  exclude: str | None = None) -> str:
+        rid = self.route(request, _exclude=exclude)
+        self.replicas[rid].submit(request)
+        self._owner[request.request_id] = rid
+        self._resub_c.inc()
+        return rid
+
+    # ------------------------------------------------------------------
+    # Serving loop
+    # ------------------------------------------------------------------
+
+    def step(self) -> list[TokenEvent]:
+        """One fleet step: step every non-idle replica, heartbeat the
+        live ones, sweep for expiries, replay the dead one's requests.
+
+        Duplicate suppression: a replayed request re-emits from index 0
+        on its new replica; events below the already-delivered index are
+        dropped here, so the merged stream the caller sees is each
+        request's tokens exactly once, in order — and bit-identical to
+        an undisturbed run."""
+        events: list[TokenEvent] = []
+        for rid in list(self.replicas):
+            eng = self.replicas[rid]
+            if not eng.idle:
+                t0 = time.perf_counter()
+                _, evs = eng.step()
+                self._stragglers[rid].observe(time.perf_counter() - t0)
+                for ev in evs:
+                    seen = self._emitted.get(ev.request_id, 0)
+                    if ev.index < seen:
+                        continue            # replay of a delivered token
+                    self._emitted[ev.request_id] = ev.index + 1
+                    events.append(ev)
+                    if ev.finished:
+                        self.results[ev.request_id] = eng.pop_result(
+                            ev.request_id)
+                        self._requests.pop(ev.request_id, None)
+                        self._owner.pop(ev.request_id, None)
+                        self._emitted.pop(ev.request_id, None)
+            self.membership.heartbeat(rid)
+        for dead in self.membership.sweep():
+            self._handle_failure(dead)
+        return events
+
+    def _handle_failure(self, rid: str) -> None:
+        """A peer's heartbeats expired: drop whatever is left of it and
+        replay its unfinished requests on the survivors."""
+        self._failures_c.inc()
+        self.kill(rid)
+        orphans = [r for r, o in self._owner.items() if o == rid]
+        log.warning("replica %s expired; replaying %d requests",
+                    rid, len(orphans))
+        for req_id in orphans:
+            self._resubmit(self._requests[req_id])
+
+    @property
+    def idle(self) -> bool:
+        return (all(e.idle for e in self.replicas.values())
+                and not self._owner)
+
+    def run(self) -> Iterator[TokenEvent]:
+        """Drive fleet steps until idle, streaming merged TokenEvents."""
+        while not self.idle:
+            yield from self.step()
+
+    def generate(self, requests: list[Request]) -> dict[str, list[int]]:
+        """Batch convenience mirroring ``Engine.generate``."""
+        for r in requests:
+            self.submit(r)
+        for _ in self.run():
+            pass
+        return {r.request_id: self.results[r.request_id].out_tokens
+                for r in requests}
+
+    # ------------------------------------------------------------------
+    # Migration + cache federation
+    # ------------------------------------------------------------------
+
+    def migrate(self, request_id: str, dst: str) -> int:
+        """Move one decoding stream to replica ``dst`` through the wire
+        format; returns the blob size in bytes. The continued stream is
+        bit-identical to an unmigrated run (tests/test_router.py pins
+        the whole matrix: greedy/sampled × taylor/kv × spec on/off)."""
+        src = self._owner.get(request_id)
+        if src is None:
+            raise KeyError(f"unknown request {request_id!r}")
+        if dst not in self.replicas:
+            raise KeyError(f"unknown replica {dst!r}")
+        if dst == src:
+            raise ValueError(f"request already on {dst!r}")
+        with tracer.span("router_migrate", request=request_id,
+                         src=src, dst=dst):
+            blob = self.replicas[src].export_request(request_id)
+            try:
+                self.replicas[dst].import_request(blob)
+            except Exception:
+                # the stream is drained from src but intact in the blob;
+                # replaying the request is always a safe landing
+                log.exception("import on %s failed; replaying %s",
+                              dst, request_id)
+                self._resubmit(self._requests[request_id])
+                raise
+        self._owner[request_id] = dst
+        self._migrations_c.inc()
+        self._wire_c.inc(len(blob))
+        return len(blob)
+
+    def warm_from_peer(self, dst: str, src: str,
+                       max_entries: int = 0) -> int:
+        """Import ``src``'s prefix-cache entries into ``dst`` (both must
+        have caches); returns entries stored."""
+        s, d = self.replicas[src], self.replicas[dst]
+        if s.prefix_cache is None or d.prefix_cache is None:
+            raise ValueError("both replicas need a prefix cache")
+        with tracer.span("router_cache_warm", src=src, dst=dst):
+            blobs = s.prefix_cache.export_entries(max_entries)
+            n = d.prefix_cache.import_entries(blobs)
+        self._wire_c.inc(sum(len(b) for b in blobs))
+        self._cache_import_c.inc(n)
+        return n
+
+    # ------------------------------------------------------------------
+    # Observability
+    # ------------------------------------------------------------------
+
+    def snapshot_metrics(self) -> dict:
+        """``repro.obs/v1`` snapshot of the router registry (router_*
+        + the membership's ft_* series), tagged ``replica="router"`` so
+        it merges cleanly next to the replicas' own snapshots."""
+        from repro.obs import aggregate as OA
+        self.membership.publish()
+        return OA.snapshot(self.registry, replica="router")
+
+    def fleet_snapshot(self) -> dict:
+        """One merged ``repro.obs/v1`` snapshot: every replica's engine
+        registries plus the router's own."""
+        from repro.obs import aggregate as OA
+        snaps = [eng.snapshot_metrics() for eng in self.replicas.values()]
+        snaps.append(self.snapshot_metrics())
+        return OA.merge_snapshots(*snaps)

@@ -1,0 +1,284 @@
+"""``repro.state/v1`` — the serving-state wire format.
+
+The paper's constant-size recurrent attention state makes an entire
+in-flight request cheap to ship between machines: a decoding stream is
+O(layers · d²) bytes of Taylor state plus a few counters, independent
+of how much context it has absorbed ("Transformers are RNNs" is the
+lineage — PAPERS.md). This module turns that observation into bytes:
+a versioned, self-describing binary encoding of the serving state
+pytrees — ``StatePool`` slot snapshots, ``prefix_cache.PrefixCache``
+trie entries (Taylor state and "and Back" kv blocks, plus boundary
+logits rows), and request lifecycle metadata — that round-trips
+**bit-exactly** and *refuses* anything it cannot prove intact.
+
+Blob layout::
+
+    magic   b"REPROST1"                      (8 bytes)
+    hlen    u32 little-endian                (4 bytes)
+    header  JSON, utf-8                      (hlen bytes)
+    payload concatenated raw array bytes
+    crc     u32 little-endian crc32 over hlen|header|payload
+
+Header schema::
+
+    {"schema": "repro.state/v1", "kind": "<caller tag>",
+     "meta": {...json metadata...},
+     "tree": <structure skeleton>,
+     "arrays": [{"dtype": "float32", "shape": [..], "nbytes": n}, ...]}
+
+The ``tree`` skeleton mirrors the pytree with array leaves replaced by
+payload indices — dicts, lists, tuples, ``core.taylor.TaylorState``
+and plain scalars are all representable, which covers every decode
+cache / trie entry shape the serving stack produces. Versioning
+follows the ``repro.tune/v1`` / ``repro.obs/v1`` convention: foreign
+schema strings are refused with a clear error, never coerced.
+
+Integrity contract (tests/test_wire.py pins it with hypothesis):
+``decode(encode(tree))`` is the identity for every leaf, bit for bit
+and dtype for dtype; any truncation or byte mutation of a blob raises
+:class:`WireError` — a blob either restores completely or not at all
+(the crc covers the length field, the header and the payload, so there
+is no mutable region the check misses; the crc itself is covered
+because a mutated crc no longer matches the recomputed one). This is a
+checksum against corruption and truncation, not a MAC against an
+adversary — transport security is the deployment's problem.
+"""
+
+from __future__ import annotations
+
+import json
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.taylor import TaylorState
+
+SCHEMA = "repro.state/v1"
+
+_MAGIC = b"REPROST1"
+
+# NamedTuple leaves allowed in serving-state pytrees. Anything else is
+# refused at encode time — silently pickling unknown node types is how
+# wire formats grow un-versionable.
+_NAMEDTUPLES = {"TaylorState": TaylorState}
+
+
+class WireError(ValueError):
+    """Blob refused: foreign version, corrupt, truncated, or a
+    structure the format does not speak. Nothing was restored."""
+
+
+# ---------------------------------------------------------------------------
+# Encode
+# ---------------------------------------------------------------------------
+
+def _encode_node(node, arrays: list) -> object:
+    """Recursively fold a pytree node into the JSON skeleton, appending
+    array leaves to ``arrays``."""
+    if isinstance(node, (np.ndarray, jnp.ndarray)):
+        a = np.asarray(node)
+        arrays.append(a)
+        return {"__arr__": len(arrays) - 1}
+    for name, cls in _NAMEDTUPLES.items():
+        if isinstance(node, cls):
+            return {"__nt__": name,
+                    "fields": {k: _encode_node(v, arrays)
+                               for k, v in node._asdict().items()}}
+    if isinstance(node, dict):
+        if not all(isinstance(k, str) for k in node):
+            raise WireError("wire trees need str dict keys")
+        return {"__dict__": {k: _encode_node(v, arrays)
+                             for k, v in node.items()}}
+    if isinstance(node, tuple):
+        return {"__tuple__": [_encode_node(v, arrays) for v in node]}
+    if isinstance(node, list):
+        return {"__list__": [_encode_node(v, arrays) for v in node]}
+    if node is None or isinstance(node, (bool, int, float, str)):
+        return {"__val__": node}
+    raise WireError(f"cannot serialize node of type {type(node).__name__}")
+
+
+def encode(kind: str, tree, meta: dict | None = None) -> bytes:
+    """Serialize ``tree`` (+ JSON-able ``meta``) into one self-describing
+    blob. ``kind`` tags what the blob is (``"stream"``, ``"trie"``, …)
+    so a decoder can refuse a blob handed to the wrong restore path."""
+    arrays: list[np.ndarray] = []
+    skeleton = _encode_node(tree, arrays)
+    payload = b"".join(a.tobytes() for a in arrays)
+    header = json.dumps({
+        "schema": SCHEMA, "kind": kind, "meta": meta or {},
+        "tree": skeleton,
+        "arrays": [{"dtype": a.dtype.name, "shape": list(a.shape),
+                    "nbytes": a.nbytes} for a in arrays],
+    }, sort_keys=True).encode()
+    body = len(header).to_bytes(4, "little") + header + payload
+    crc = zlib.crc32(body).to_bytes(4, "little")
+    return _MAGIC + body + crc
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def _dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        pass
+    try:                         # ml_dtypes extras (bfloat16, fp8, ...)
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+    except (ImportError, AttributeError, TypeError):
+        raise WireError(f"unknown array dtype {name!r}") from None
+
+
+def _decode_node(node, leaves: list):
+    if not isinstance(node, dict) or len(node) == 0:
+        raise WireError(f"malformed tree node {node!r}")
+    if "__arr__" in node:
+        idx = node["__arr__"]
+        if not isinstance(idx, int) or not 0 <= idx < len(leaves):
+            raise WireError(f"array index {idx!r} out of range")
+        return leaves[idx]
+    if "__nt__" in node:
+        cls = _NAMEDTUPLES.get(node["__nt__"])
+        if cls is None:
+            raise WireError(f"unknown namedtuple {node.get('__nt__')!r}")
+        fields = {k: _decode_node(v, leaves)
+                  for k, v in node["fields"].items()}
+        if set(fields) != set(cls._fields):
+            raise WireError(f"{node['__nt__']} fields {sorted(fields)} != "
+                            f"{sorted(cls._fields)}")
+        return cls(**fields)
+    if "__dict__" in node:
+        return {k: _decode_node(v, leaves)
+                for k, v in node["__dict__"].items()}
+    if "__tuple__" in node:
+        return tuple(_decode_node(v, leaves) for v in node["__tuple__"])
+    if "__list__" in node:
+        return [_decode_node(v, leaves) for v in node["__list__"]]
+    if "__val__" in node:
+        return node["__val__"]
+    raise WireError(f"malformed tree node {node!r}")
+
+
+def decode(blob: bytes, expect_kind: str | None = None,
+           as_jax: bool = True) -> tuple[str, dict, object]:
+    """Restore ``(kind, meta, tree)`` from a blob.
+
+    All-or-nothing: every integrity check — magic, schema version, crc
+    over length/header/payload, per-array byte accounting — runs before
+    any tree is built, so a caller can scatter the result into live
+    state knowing the blob was intact. ``expect_kind`` additionally
+    pins which restore path the blob is allowed to feed. ``as_jax``
+    returns ``jnp`` leaves (device-ready); pass False for raw numpy.
+    """
+    if not isinstance(blob, (bytes, bytearray, memoryview)):
+        raise WireError("blob is not bytes")
+    blob = bytes(blob)
+    if len(blob) < len(_MAGIC) + 8:
+        raise WireError(f"truncated blob ({len(blob)} bytes)")
+    if blob[:len(_MAGIC)] != _MAGIC:
+        raise WireError("bad magic — not a repro.state blob")
+    body, crc_stored = blob[len(_MAGIC):-4], blob[-4:]
+    if zlib.crc32(body).to_bytes(4, "little") != crc_stored:
+        raise WireError("crc mismatch — blob corrupt or truncated")
+    hlen = int.from_bytes(body[:4], "little")
+    if hlen > len(body) - 4:
+        raise WireError("header length exceeds blob")
+    try:
+        header = json.loads(body[4:4 + hlen].decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise WireError(f"header is not valid JSON: {e}") from None
+    if not isinstance(header, dict):
+        raise WireError("header is not an object")
+    if header.get("schema") != SCHEMA:
+        raise WireError(f"schema {header.get('schema')!r} is not "
+                        f"{SCHEMA!r} — refusing (foreign version)")
+    kind = header.get("kind")
+    if expect_kind is not None and kind != expect_kind:
+        raise WireError(f"blob kind {kind!r}, expected {expect_kind!r}")
+    meta = header.get("meta")
+    specs = header.get("arrays")
+    if not isinstance(meta, dict) or not isinstance(specs, list):
+        raise WireError("header missing meta/arrays")
+    payload = body[4 + hlen:]
+    leaves, off = [], 0
+    for i, spec in enumerate(specs):
+        try:
+            dt = _dtype(spec["dtype"])
+            shape = tuple(int(s) for s in spec["shape"])
+            nbytes = int(spec["nbytes"])
+        except (KeyError, TypeError, ValueError):
+            raise WireError(f"arrays[{i}]: malformed spec") from None
+        want = dt.itemsize * int(np.prod(shape, dtype=np.int64))
+        if nbytes != want:
+            raise WireError(f"arrays[{i}]: nbytes {nbytes} != "
+                            f"dtype×shape {want}")
+        if off + nbytes > len(payload):
+            raise WireError(f"arrays[{i}]: payload truncated")
+        a = np.frombuffer(payload, dtype=dt, count=want // dt.itemsize,
+                          offset=off).reshape(shape)
+        if as_jax and jax.dtypes.canonicalize_dtype(dt) == dt:
+            # Only promote to jax when the dtype survives canonicalization
+            # bit-for-bit — jnp.asarray silently narrows int64/float64 when
+            # x64 is off, which would break the round-trip contract.
+            a = jnp.asarray(a)
+        leaves.append(a)
+        off += nbytes
+    if off != len(payload):
+        raise WireError(f"payload has {len(payload) - off} trailing bytes")
+    tree = _decode_node(header.get("tree"), leaves)
+    return kind, meta, tree
+
+
+# ---------------------------------------------------------------------------
+# Serving-state conveniences (the three kinds the fleet ships around)
+# ---------------------------------------------------------------------------
+
+KIND_STREAM = "stream"       # a live request: slot state + lifecycle meta
+KIND_TRIE = "trie"           # one prefix-cache entry: state + logits row
+KIND_SNAPSHOT = "snapshot"   # a bare slot/pool snapshot (tests, tooling)
+
+
+def encode_stream(state, *, request: dict, out_tokens: list[int],
+                  cache_kind: str, cache_len: int,
+                  model: dict | None = None,
+                  replica: str | None = None) -> bytes:
+    """One in-flight decoding request: the slot's state snapshot plus
+    everything a peer needs to continue the stream bit-identically."""
+    return encode(KIND_STREAM, state, meta={
+        "request": request, "out_tokens": [int(t) for t in out_tokens],
+        "cache_kind": cache_kind, "cache_len": int(cache_len),
+        "model": model or {}, "replica": replica})
+
+
+def decode_stream(blob: bytes) -> tuple[dict, object]:
+    """(meta, state) of a :func:`encode_stream` blob."""
+    _, meta, state = decode(blob, expect_kind=KIND_STREAM)
+    for key in ("request", "out_tokens", "cache_kind", "cache_len"):
+        if key not in meta:
+            raise WireError(f"stream blob meta missing {key!r}")
+    return meta, state
+
+
+def encode_trie_entry(tokens, n_tokens: int, state, logits) -> bytes:
+    """One prefix-cache boundary: the trie path's tokens, the state
+    snapshot, and the boundary logits row (None for partial entries)."""
+    return encode(KIND_TRIE, {"state": state, "logits": logits},
+                  meta={"tokens": [int(t) for t in tokens],
+                        "n_tokens": int(n_tokens)})
+
+
+def decode_trie_entry(blob: bytes) -> tuple[list[int], int, object, object]:
+    """(tokens, n_tokens, state, logits) of an :func:`encode_trie_entry`
+    blob."""
+    _, meta, tree = decode(blob, expect_kind=KIND_TRIE)
+    if "tokens" not in meta or "n_tokens" not in meta:
+        raise WireError("trie blob meta missing tokens/n_tokens")
+    if not isinstance(tree, dict) or set(tree) != {"state", "logits"}:
+        raise WireError("trie blob tree must be {state, logits}")
+    return (list(meta["tokens"]), int(meta["n_tokens"]),
+            tree["state"], tree["logits"])

@@ -248,17 +248,24 @@ class SelfDrafter(Drafter):
     # -- lifecycle ----------------------------------------------------------
 
     def on_ready(self, seq) -> None:
-        """Absorb the prompt through the shallow model into this slot —
-        chunked exactly like the main prefill (same power-of-two chunk
-        plan, so the shallow prefill shapes are a subset of shapes the
-        engine already compiles for the full model)."""
+        """Absorb the sequence's accepted context through the shallow
+        model into this slot — chunked exactly like the main prefill
+        (same power-of-two chunk plan, so the shallow prefill shapes are
+        a subset of shapes the engine already compiles for the full
+        model). The context is prompt + all-but-the-last emitted token:
+        normally ``out_tokens`` is empty here (the engine calls on_ready
+        before the first emit), but a migrated stream (engine.
+        import_request) arrives mid-generation, and the drafter contract
+        — state equals "shallow model over the accepted context", where
+        the last emitted token is the *next* decode feed — must hold for
+        it too."""
         from repro.serve.prefill import plan_chunks
 
         cache = self.pool.new_sequence_cache()
-        prompt = seq.request.prompt
+        ctx = [*seq.request.prompt, *seq.out_tokens[:-1]]
         lo = 0
-        for c in plan_chunks(len(prompt), self.prefill_chunk):
-            toks = jnp.asarray([prompt[lo:lo + c]], jnp.int32)
+        for c in plan_chunks(len(ctx), self.prefill_chunk):
+            toks = jnp.asarray([ctx[lo:lo + c]], jnp.int32)
             _, cache = self._prefill_fn(toks, cache)
             lo += c
         self.pool.scatter(cache, seq.slot)

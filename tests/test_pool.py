@@ -1,0 +1,142 @@
+"""StatePool snapshot/restore/reset: aliasing and immutability.
+
+Direct unit coverage of the pool contract (previously only exercised
+indirectly through test_spec.py's rollback paths): a snapshot is
+zero-copy — just the gathered sub-pytree, no clone — yet can never
+observe later pool writes, because jax arrays are immutable and every
+pool "mutation" rebinds ``pool.cache`` to a new functionally-updated
+pytree. Migration (serve/wire.py, serve/router.py) and speculative
+rollback (repro.spec) both stand on exactly this.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve.pool import StatePool
+
+CACHE_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("stablelm-1.6b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _pool(cfg, cache_kind, n_slots=2):
+    return StatePool(cfg, n_slots, cache_len=CACHE_LEN,
+                     cache_kind=cache_kind)
+
+
+def _filled_state(cfg, params, pool, seed):
+    """A non-trivial single-sequence cache: real prefill over random
+    tokens (zeros would make 'unchanged' assertions vacuous)."""
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (1, 8), 0, cfg.vocab)
+    _, cache = M.prefill_from_state(params, cfg, {"tokens": toks},
+                                    pool.new_sequence_cache())
+    return cache
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree.leaves(tree)]
+
+
+def _assert_trees_equal(a, b):
+    la, lb = _leaves(a), _leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot immutability under later pool writes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cache_kind", ["taylor", "kv"])
+def test_snapshot_unaffected_by_later_scatter(setup, cache_kind):
+    """A snapshot taken before a slot is overwritten must stay
+    bit-exact — the whole premise of zero-copy rollback/migration."""
+    cfg, params = setup
+    pool = _pool(cfg, cache_kind)
+    a = _filled_state(cfg, params, pool, seed=1)
+    b = _filled_state(cfg, params, pool, seed=2)
+    slot = pool.alloc()
+    pool.scatter(a, slot)
+    snap = pool.snapshot(slot)
+    frozen = _leaves(snap)          # host copies = ground truth
+
+    pool.scatter(b, slot)           # overwrite the slot
+    pool.reset(slot)                # and zero it for good measure
+    for before, after in zip(frozen, _leaves(snap)):
+        np.testing.assert_array_equal(before, after)
+
+
+@pytest.mark.parametrize("cache_kind", ["taylor", "kv"])
+def test_restore_is_bit_exact(setup, cache_kind):
+    cfg, params = setup
+    pool = _pool(cfg, cache_kind)
+    a = _filled_state(cfg, params, pool, seed=3)
+    b = _filled_state(cfg, params, pool, seed=4)
+    slot = pool.alloc()
+    pool.scatter(a, slot)
+    snap = pool.snapshot(slot)
+    pool.scatter(b, slot)           # diverge
+    pool.restore(slot, snap)
+    _assert_trees_equal(pool.gather(slot), snap)
+
+
+def test_snapshot_isolated_between_slots(setup):
+    """Writing slot 1 never perturbs slot 0's state or snapshot."""
+    cfg, params = setup
+    pool = _pool(cfg, "taylor")
+    a = _filled_state(cfg, params, pool, seed=5)
+    b = _filled_state(cfg, params, pool, seed=6)
+    s0, s1 = pool.alloc(), pool.alloc()
+    pool.scatter(a, s0)
+    snap0 = pool.snapshot(s0)
+    pool.scatter(b, s1)
+    pool.reset(s1)
+    _assert_trees_equal(pool.gather(s0), snap0)
+
+
+# ---------------------------------------------------------------------------
+# reset / release
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cache_kind", ["taylor", "kv"])
+def test_release_zero_resets(setup, cache_kind):
+    cfg, params = setup
+    pool = _pool(cfg, cache_kind)
+    slot = pool.alloc()
+    pool.scatter(_filled_state(cfg, params, pool, seed=7), slot)
+    assert any(np.any(x) for x in _leaves(pool.gather(slot)))
+    pool.release(slot)
+    for leaf in _leaves(pool.gather(slot)):
+        np.testing.assert_array_equal(leaf, np.zeros_like(leaf))
+
+
+def test_alloc_release_bookkeeping(setup):
+    cfg, _ = setup
+    pool = _pool(cfg, "taylor", n_slots=2)
+    assert pool.free_slots == 2 and pool.occupancy == 0.0
+    s0 = pool.alloc()
+    s1 = pool.alloc()
+    assert {s0, s1} == {0, 1}
+    assert pool.free_slots == 0 and pool.occupancy == 1.0
+    with pytest.raises(RuntimeError):
+        pool.alloc()
+    pool.release(s0)
+    assert pool.free_slots == 1
+    assert pool.alloc() == s0       # recycled
+
+
+def test_pool_needs_a_slot(setup):
+    cfg, _ = setup
+    with pytest.raises(ValueError):
+        StatePool(cfg, 0, cache_len=CACHE_LEN)

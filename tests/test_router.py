@@ -1,0 +1,423 @@
+"""Chaos/fault-injection suite for the fleet tier (serve/router.py).
+
+The claims under attack:
+
+  * **Migration bit-identity** — a stream drained mid-decode, shipped
+    as a ``repro.state/v1`` blob and continued on a peer emits exactly
+    the tokens the same request gets on an undisturbed engine, across
+    greedy/seeded-sampling × taylor/kv × speculation on/off.
+  * **Never half-restore** — truncated/corrupt/foreign blobs are
+    refused with the destination engine bit-exactly untouched.
+  * **Heartbeat loss** — a hard-killed replica's requests replay on
+    survivors with no duplicate token events and identical streams.
+  * **Placement** — prefix-affine requests land on the replica
+    advertising their longest cached prefix; routing tracks membership
+    churn; one ``replica_id`` threads engine, obs and membership.
+"""
+
+import jax
+import pytest
+
+from repro.configs import SpecConfig, get_config
+from repro.models import model as M
+from repro.serve import Engine, EngineConfig, Request
+from repro.serve import wire
+from repro.serve.router import Router
+
+PROMPT, GEN, CHUNK = 10, 8, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("stablelm-1.6b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _econf(rid, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("prefill_chunk", CHUNK)
+    kw.setdefault("max_seq_len", PROMPT + GEN + 6)
+    return EngineConfig(replica_id=rid, **kw)
+
+
+def _prompt(cfg, n, seed):
+    return [int(t) for t in jax.random.randint(
+        jax.random.PRNGKey(seed), (n,), 0, cfg.vocab)]
+
+
+def _req(cfg, rid, seed, n=PROMPT):
+    return Request(rid, _prompt(cfg, n, seed), max_new_tokens=GEN)
+
+
+def _step_until(rt, rid, n_emitted):
+    """Step the fleet until request ``rid`` has emitted ``n_emitted``
+    tokens (and is still decoding — GEN leaves headroom)."""
+    count, events = 0, []
+    while count < n_emitted:
+        evs = rt.step()
+        events += evs
+        count += sum(e.request_id == rid for e in evs)
+    return events
+
+
+# ---------------------------------------------------------------------------
+# Migration bit-identity matrix
+# ---------------------------------------------------------------------------
+
+MATRIX = [  # (cache_kind, temperature, speculate_k) — pairwise coverage
+    ("taylor", 0.0, 0),
+    ("taylor", 0.8, 2),
+    ("kv", 0.0, 2),
+    ("kv", 0.8, 0),
+]
+
+
+@pytest.mark.parametrize("cache_kind,temp,spec_k", MATRIX)
+def test_migration_bit_identity(setup, cache_kind, temp, spec_k):
+    """Kill-free live migration: drain q0 mid-decode, ship it, continue
+    on the peer — merged streams equal the undisturbed solo run."""
+    cfg, params = setup
+    kw = dict(cache_kind=cache_kind, temperature=temp, speculate_k=spec_k)
+    ref = Engine(cfg, params, _econf("ref", **kw))
+    want = ref.generate([_req(cfg, "q0", 0), _req(cfg, "q1", 1)])
+
+    rt = Router([Engine(cfg, params, _econf("a", **kw)),
+                 Engine(cfg, params, _econf("b", **kw))])
+    rt.submit(_req(cfg, "q0", 0))
+    rt.submit(_req(cfg, "q1", 1))
+    _step_until(rt, "q0", 2)
+    src = rt._owner["q0"]
+    dst = "b" if src == "a" else "a"
+    nbytes = rt.migrate("q0", dst)
+    assert nbytes > 0 and rt._owner["q0"] == dst
+    for _ in rt.run():
+        pass
+    assert rt.results["q0"].out_tokens == want["q0"]
+    assert rt.results["q1"].out_tokens == want["q1"]
+
+
+def test_migration_with_self_drafter(setup):
+    """The self-drafter's shadow pool must re-absorb prompt + emitted
+    context on import (not just the prompt) — the on_ready contract a
+    migrated mid-generation stream exercises."""
+    cfg, params = setup
+    kw = dict(speculate_k=2,
+              spec=SpecConfig(drafter="self", draft_layers=1))
+    ref = Engine(cfg, params, _econf("ref", **kw))
+    want = ref.generate([_req(cfg, "q0", 3)])
+
+    rt = Router([Engine(cfg, params, _econf("a", **kw)),
+                 Engine(cfg, params, _econf("b", **kw))])
+    rt.submit(_req(cfg, "q0", 3))
+    _step_until(rt, "q0", 2)
+    rt.migrate("q0", "b" if rt._owner["q0"] == "a" else "a")
+    for _ in rt.run():
+        pass
+    assert rt.results["q0"].out_tokens == want["q0"]
+
+
+def test_double_migration(setup):
+    """There and back again: two hops, still bit-identical."""
+    cfg, params = setup
+    ref = Engine(cfg, params, _econf("ref"))
+    want = ref.generate([_req(cfg, "q0", 5)])
+    rt = Router([Engine(cfg, params, _econf("a")),
+                 Engine(cfg, params, _econf("b"))])
+    rt.submit(_req(cfg, "q0", 5))
+    _step_until(rt, "q0", 1)
+    first = rt._owner["q0"]
+    other = "b" if first == "a" else "a"
+    rt.migrate("q0", other)
+    _step_until(rt, "q0", 3)
+    rt.migrate("q0", first)
+    for _ in rt.run():
+        pass
+    assert rt.results["q0"].out_tokens == want["q0"]
+    assert int(rt._migrations_c.value) == 2
+
+
+# ---------------------------------------------------------------------------
+# Never half-restore: corrupt / truncated / foreign / mismatched blobs
+# ---------------------------------------------------------------------------
+
+def _exported_blob(cfg, params, **kw):
+    """A real mid-decode stream blob plus a fresh same-config peer."""
+    src = Engine(cfg, params, _econf("src", **kw))
+    src.submit(_req(cfg, "q0", 7))
+    emitted = 0
+    while emitted < 2:
+        _, evs = src.step()
+        emitted += len(evs)
+    return src.export_request("q0"), Engine(cfg, params,
+                                            _econf("dst", **kw))
+
+
+def _engine_untouched(eng):
+    return (eng.pool.free_slots == eng.pool.n_slots
+            and not eng.sequences and not eng.results
+            and all(s is None for s in eng._slots))
+
+
+def test_corrupt_blob_refused_dst_untouched(setup):
+    cfg, params = setup
+    blob, dst = _exported_blob(cfg, params)
+    for mangled in (blob[:len(blob) // 2],             # truncated
+                    bytes([blob[0] ^ 1]) + blob[1:],   # bad magic
+                    blob[:-2] + bytes([blob[-2] ^ 1]) + blob[-1:],  # crc
+                    blob[:40] + bytes([blob[40] ^ 0x10]) + blob[41:]):
+        with pytest.raises(wire.WireError):
+            dst.import_request(mangled)
+        assert _engine_untouched(dst)
+    # the intact blob still restores and runs to completion afterwards
+    seq = dst.import_request(blob)
+    assert seq.slot is not None and len(seq.out_tokens) == 2
+    while not dst.idle:
+        dst.step()
+    assert len(dst.results["q0"].out_tokens) == GEN
+
+
+def test_cache_kind_mismatch_refused(setup):
+    cfg, params = setup
+    blob, _ = _exported_blob(cfg, params, cache_kind="taylor")
+    kv_dst = Engine(cfg, params, _econf("kv", cache_kind="kv"))
+    with pytest.raises(wire.WireError, match="cache_kind"):
+        kv_dst.import_request(blob)
+    assert _engine_untouched(kv_dst)
+
+
+def test_engine_fingerprint_mismatch_refused(setup):
+    """A different seed would silently fork sampled streams — refuse."""
+    cfg, params = setup
+    blob, _ = _exported_blob(cfg, params)
+    other = Engine(cfg, params, _econf("o", seed=123))
+    with pytest.raises(wire.WireError, match="fingerprint"):
+        other.import_request(blob)
+    assert _engine_untouched(other)
+
+
+def test_export_gates(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, _econf("e"))
+    eng.submit(_req(cfg, "q0", 9))
+    with pytest.raises(ValueError, match="waiting"):
+        eng.export_request("q0")        # migration only at step
+    #   boundaries of a *decoding* stream
+    with pytest.raises(KeyError):
+        eng.export_request("nope")
+    while not eng.idle:
+        eng.step()
+    with pytest.raises(KeyError):
+        eng.export_request("q0")        # finished = gone
+
+    # duplicate import: the id is already live here
+    blob, dst = _exported_blob(cfg, params)
+    dst.import_request(blob)
+    with pytest.raises(ValueError, match="duplicate"):
+        dst.import_request(blob)
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat loss / hard kill
+# ---------------------------------------------------------------------------
+
+def test_kill_replays_bit_identical_no_duplicates(setup):
+    """Hard crash: heartbeats stop, the sweep expires the peer, its
+    in-flight requests replay on the survivor. Determinism makes the
+    replayed stream identical; index suppression means the merged event
+    stream carries each token exactly once."""
+    cfg, params = setup
+    ref = Engine(cfg, params, _econf("ref"))
+    want = ref.generate([_req(cfg, "q0", 11), _req(cfg, "q1", 12)])
+
+    clk = {"t": 0.0}
+    rt = Router([Engine(cfg, params, _econf("a")),
+                 Engine(cfg, params, _econf("b"))],
+                timeout_s=5.0, clock=lambda: clk["t"])
+    rt.submit(_req(cfg, "q0", 11))
+    rt.submit(_req(cfg, "q1", 12))
+    events = _step_until(rt, "q0", 2)
+    victim = rt._owner["q0"]
+    rt.kill(victim)
+    clk["t"] += 10.0                    # silence > timeout
+    for ev in rt.run():
+        events.append(ev)
+    assert int(rt._failures_c.value) == 1
+    assert int(rt._resub_c.value) >= 1
+    for rid in ("q0", "q1"):
+        assert rt.results[rid].out_tokens == want[rid]
+        idxs = [e.index for e in events if e.request_id == rid]
+        assert idxs == sorted(set(idxs)), f"duplicate events for {rid}"
+        assert idxs == list(range(GEN))
+
+
+def test_preempt_migrates_and_leaves(setup):
+    """Cooperative preemption: decoding streams migrate (not replay),
+    the replica leaves the membership immediately, streams stay exact."""
+    cfg, params = setup
+    ref = Engine(cfg, params, _econf("ref"))
+    want = ref.generate([_req(cfg, "q0", 13), _req(cfg, "q1", 14)])
+    rt = Router([Engine(cfg, params, _econf("a")),
+                 Engine(cfg, params, _econf("b"))])
+    rt.submit(_req(cfg, "q0", 13))
+    rt.submit(_req(cfg, "q1", 14))
+    _step_until(rt, "q0", 1)
+    victim = rt._owner["q0"]
+    epoch = rt.membership.epoch
+    moved = rt.preempt(victim)
+    assert moved["migrated"] or moved["resubmitted"]
+    assert victim not in rt.membership.members
+    assert rt.membership.epoch > epoch
+    for _ in rt.run():
+        pass
+    assert rt.results["q0"].out_tokens == want["q0"]
+    assert rt.results["q1"].out_tokens == want["q1"]
+
+
+def test_preempt_without_migration_resubmits_to_peer(setup):
+    """With migration off, a drained replica's requests must resubmit
+    to a *peer* — never back onto the replica being drained (which
+    would orphan them once it's popped) — and replay bit-identically."""
+    cfg, params = setup
+    ref = Engine(cfg, params, _econf("ref"))
+    want = ref.generate([_req(cfg, "q0", 15), _req(cfg, "q1", 16)])
+    rt = Router([Engine(cfg, params, _econf("a")),
+                 Engine(cfg, params, _econf("b"))],
+                migrate_on_preempt=False)
+    rt.submit(_req(cfg, "q0", 15))
+    rt.submit(_req(cfg, "q1", 16))
+    _step_until(rt, "q0", 1)
+    victim = rt._owner["q0"]
+    moved = rt.preempt(victim)
+    assert moved["resubmitted"] and not moved["migrated"]
+    assert victim not in rt.replicas
+    assert all(o != victim for o in rt._owner.values())
+    for _ in range(500):                # bounded: a regression here
+        if rt.idle:                     # used to spin forever
+            break
+        rt.step()
+    assert rt.idle, "fleet never drained after no-migrate preempt"
+    assert rt.results["q0"].out_tokens == want["q0"]
+    assert rt.results["q1"].out_tokens == want["q1"]
+
+
+# ---------------------------------------------------------------------------
+# Placement: prefix affinity, churn, cache federation
+# ---------------------------------------------------------------------------
+
+def test_prefix_affine_routing(setup):
+    """A request whose prompt extends a prefix cached on replica A must
+    route to A even when A is busier; cold prompts go least-loaded."""
+    cfg, params = setup
+    shared = _prompt(cfg, 2 * CHUNK, 21)
+    warm = Engine(cfg, params, _econf("warm", prefix_cache_mb=-1))
+    warm.generate([Request("w0", [*shared, *_prompt(cfg, 3, 22)],
+                           max_new_tokens=2)])
+    assert warm.prefix_cache.stats()["entries"] >= 1
+    cold = Engine(cfg, params, _econf("cold", prefix_cache_mb=-1))
+    rt = Router([warm, cold])
+
+    affine = Request("aff", [*shared, *_prompt(cfg, 4, 23)],
+                     max_new_tokens=2)
+    assert rt.route(affine) == "warm"
+    prefix_routed = int(rt._prefix_c.value)
+    assert rt.submit(affine) == "warm"
+    assert int(rt._prefix_c.value) == prefix_routed + 1
+
+    # cold prompt: least-loaded fallback ("warm" now has a live request)
+    assert rt.route(_req(cfg, "cold1", 24)) == "cold"
+    for _ in rt.run():
+        pass
+    assert rt.results["aff"].out_tokens is not None
+
+
+def test_warm_from_peer_federation(setup):
+    """Cache export/import: a cold replica warms from a peer's wire
+    blobs, serves the shared prefix from cache, and the stream is
+    bit-identical to an uncached engine's."""
+    cfg, params = setup
+    shared = _prompt(cfg, 2 * CHUNK, 31)
+    tail = _prompt(cfg, 3, 32)
+    nocache = Engine(cfg, params, _econf("ref"))
+    want = nocache.generate([Request("f0", [*shared, *tail],
+                                     max_new_tokens=GEN)])
+
+    warm = Engine(cfg, params, _econf("w", prefix_cache_mb=-1))
+    cold = Engine(cfg, params, _econf("c", prefix_cache_mb=-1))
+    warm.generate([Request("seed", [*shared, *_prompt(cfg, 2, 33)],
+                           max_new_tokens=2)])
+    rt = Router([warm, cold])
+    n = rt.warm_from_peer("c", "w")
+    assert n >= 1
+    assert cold.prefix_cache.stats()["entries"] >= 1
+    assert int(rt._cache_import_c.value) == n
+
+    cold.submit(Request("f0", [*shared, *tail], max_new_tokens=GEN))
+    while not cold.idle:
+        cold.step()
+    got = cold.results["f0"]
+    assert got.cached_tokens >= 2 * CHUNK       # served from the import
+    assert got.out_tokens == want["f0"]
+
+
+def test_routing_under_churn(setup):
+    """Membership churn: joins/leaves bump the epoch and routing only
+    ever lands on live, attached replicas."""
+    cfg, params = setup
+    clk = {"t": 0.0}
+    rt = Router([Engine(cfg, params, _econf("a"))],
+                timeout_s=5.0, clock=lambda: clk["t"])
+    assert rt.route(_req(cfg, "x", 41)) == "a"
+    e0 = rt.membership.epoch
+    rt.add_replica(Engine(cfg, params, _econf("b")))
+    assert rt.membership.epoch == e0 + 1 and set(rt.live) == {"a", "b"}
+
+    rt.submit(_req(cfg, "x", 41))
+    victim = rt._owner["x"]
+    survivor = "b" if victim == "a" else "a"
+    rt.kill(victim)
+    clk["t"] += 10.0
+    assert rt.route(_req(cfg, "y", 42)) == survivor
+    for _ in rt.run():
+        pass
+    assert rt.route(_req(cfg, "z", 43)) == survivor
+    assert set(rt.live) == {survivor}
+    assert len(rt.results["x"].out_tokens) == GEN
+
+    with pytest.raises(ValueError, match="replica_id"):
+        rt.add_replica(Engine(cfg, params, EngineConfig()))
+    with pytest.raises(ValueError, match="duplicate"):
+        rt.add_replica(Engine(cfg, params, _econf(survivor)))
+
+
+# ---------------------------------------------------------------------------
+# One replica identity across engine, obs, membership
+# ---------------------------------------------------------------------------
+
+def test_replica_id_threads_through_obs_and_membership(setup):
+    cfg, params = setup
+    e_a = Engine(cfg, params, _econf("ra"))
+    e_b = Engine(cfg, params, _econf("rb"))
+    assert e_a.replica_id == "ra" == e_a.econf.replica_id
+    snap = e_a.snapshot_metrics()       # no per-call string needed
+    assert snap["replica"] == "ra"
+    assert e_a.snapshot_metrics(replica="override")["replica"] == "override"
+
+    rt = Router([e_a, e_b])
+    assert rt.membership.members == ["ra", "rb"]
+    rt.submit(_req(cfg, "m0", 51))
+    for _ in rt.run():
+        pass
+
+    from repro.obs import aggregate as OA
+    fleet = rt.fleet_snapshot()
+    assert OA.validate_snapshot(fleet) == []
+    names = set(fleet["metrics"])
+    for fam in ("router_requests_total", "router_migrations_total",
+                "router_resubmissions_total", "router_wire_bytes_total",
+                "router_replica_failures_total", "router_replicas",
+                "router_prefix_routed_total",
+                "router_least_loaded_routed_total",
+                "ft_members", "ft_heartbeats_total",
+                "ft_epoch_changes_total"):
+        assert fam in names, f"missing {fam} in fleet snapshot"

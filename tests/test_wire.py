@@ -1,0 +1,271 @@
+"""serve/wire.py — the ``repro.state/v1`` integrity contract.
+
+Two halves, both pinned with hypothesis where it pays:
+
+  * **Identity**: decode(encode(tree)) returns every leaf bit-for-bit
+    and dtype-for-dtype, for arbitrary nested dict/list/tuple/
+    TaylorState structures over arbitrary dtypes (bfloat16 included).
+  * **Refusal**: foreign schema versions, truncations, and single-byte
+    mutations anywhere in a blob always raise WireError — a blob either
+    restores completely or not at all (never half-restored).
+"""
+
+import json
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.taylor import TaylorState
+from repro.models import model as M
+from repro.serve import wire
+from repro.serve.pool import StatePool
+from tests._hypothesis_compat import given, settings, st
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("stablelm-1.6b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _assert_leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert jax.tree.structure(a) == jax.tree.structure(b)
+    for x, y in zip(la, lb):
+        if hasattr(x, "dtype"):
+            assert np.asarray(x).dtype == np.asarray(y).dtype
+            assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+        else:
+            assert x == y and type(x) is type(y)
+
+
+def _rebuild(blob: bytes, **header_updates) -> bytes:
+    """Re-pack a valid blob with a modified header and a *correct* crc —
+    isolates the schema/kind checks from the crc check."""
+    body = blob[len(wire._MAGIC):-4]
+    hlen = int.from_bytes(body[:4], "little")
+    header = json.loads(body[4:4 + hlen].decode())
+    header.update(header_updates)
+    hdr = json.dumps(header, sort_keys=True).encode()
+    nbody = len(hdr).to_bytes(4, "little") + hdr + body[4 + hlen:]
+    return wire._MAGIC + nbody + zlib.crc32(nbody).to_bytes(4, "little")
+
+
+# ---------------------------------------------------------------------------
+# Round-trip identity
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_mixed_tree():
+    tree = {
+        "groups": [TaylorState(jnp.ones((2, 3), jnp.bfloat16),
+                               jnp.arange(3, dtype=jnp.float32),
+                               jnp.ones((), jnp.float32),
+                               jnp.array(7, jnp.int32))],
+        "rem": [np.arange(6, dtype=np.int32).reshape(2, 3)],
+        "pos": jnp.array([1, 2], jnp.int32),
+        "scalars": (1, 2.5, None, True, "x"),
+        "empty": np.zeros((0, 4), np.float16),
+        "zero_d": np.full((), 3.25, np.float32),
+    }
+    kind, meta, out = wire.decode(wire.encode("snapshot", tree, {"m": 1}))
+    assert kind == "snapshot" and meta == {"m": 1}
+    assert isinstance(out["groups"][0], TaylorState)
+    assert out["scalars"] == (1, 2.5, None, True, "x")
+    _assert_leaves_equal(tree, out)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "float16", "bfloat16",
+                                   "int32", "uint8", "bool"])
+def test_roundtrip_dtypes(dtype):
+    dt = jnp.dtype(dtype) if dtype != "bfloat16" else jnp.bfloat16
+    a = jnp.arange(12).reshape(3, 4).astype(dt)
+    _, _, out = wire.decode(wire.encode("snapshot", a))
+    assert np.asarray(out).dtype == np.asarray(a).dtype
+    assert np.asarray(out).tobytes() == np.asarray(a).tobytes()
+
+
+def test_roundtrip_wide_dtypes_stay_exact():
+    """int64/float64 leaves survive bit-exactly even with jax x64 off
+    (decode falls back to numpy instead of letting jnp narrow them)."""
+    tree = {"i": np.arange(4, dtype=np.int64) * 2**40,
+            "f": np.array([1e300, -2.5], np.float64)}
+    _, _, out = wire.decode(wire.encode("snapshot", tree))
+    _assert_leaves_equal(tree, out)
+
+
+def test_roundtrip_real_slot_state(setup):
+    """A real StatePool slot snapshot (the migration payload) ships and
+    returns bit-exactly, both cache kinds."""
+    cfg, params = setup
+    for kind in ("taylor", "kv"):
+        pool = StatePool(cfg, 2, cache_len=24, cache_kind=kind)
+        toks = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0,
+                                  cfg.vocab)
+        _, cache = M.prefill_from_state(params, cfg, {"tokens": toks},
+                                        pool.new_sequence_cache())
+        slot = pool.alloc()
+        pool.scatter(cache, slot)
+        snap = pool.snapshot(slot)
+        _, _, out = wire.decode(wire.encode("snapshot", snap))
+        _assert_leaves_equal(snap, out)
+
+
+def test_stream_and_trie_conveniences(setup):
+    cfg, params = setup
+    pool = StatePool(cfg, 1, cache_len=24, cache_kind="taylor")
+    toks = jax.random.randint(jax.random.PRNGKey(4), (1, 8), 0, cfg.vocab)
+    logits, cache = M.prefill_from_state(params, cfg, {"tokens": toks},
+                                         pool.new_sequence_cache())
+    blob = wire.encode_stream(cache, request={"request_id": "r"},
+                              out_tokens=[5, 6], cache_kind="taylor",
+                              cache_len=24)
+    meta, state = wire.decode_stream(blob)
+    assert meta["out_tokens"] == [5, 6] and meta["cache_kind"] == "taylor"
+    _assert_leaves_equal(cache, state)
+
+    path = [int(t) for t in toks[0]]
+    tblob = wire.encode_trie_entry(path, 8, cache, logits[:, -1:])
+    toks2, n, state2, lg2 = wire.decode_trie_entry(tblob)
+    assert toks2 == path and n == 8
+    _assert_leaves_equal(cache, state2)
+    _assert_leaves_equal(logits[:, -1:], lg2)
+
+    with pytest.raises(wire.WireError):
+        wire.decode_stream(tblob)       # kind pinning
+    with pytest.raises(wire.WireError):
+        wire.decode_trie_entry(blob)
+
+
+def test_unserializable_node_refused():
+    with pytest.raises(wire.WireError):
+        wire.encode("snapshot", {"bad": object()})
+    with pytest.raises(wire.WireError):
+        wire.encode("snapshot", {1: "non-str key"})
+
+
+# ---------------------------------------------------------------------------
+# Refusal: foreign versions, truncation, corruption
+# ---------------------------------------------------------------------------
+
+BLOB = wire.encode("snapshot",
+                   {"s": TaylorState(jnp.ones((2, 2)), jnp.zeros((2,)),
+                                     jnp.ones(()), jnp.array(3, jnp.int32)),
+                    "pos": jnp.array([4], jnp.int32)},
+                   {"tag": "refusal-fixture"})
+
+
+def test_foreign_version_refused_with_clear_error():
+    alien = _rebuild(BLOB, schema="repro.state/v2")
+    with pytest.raises(wire.WireError, match="repro.state/v1"):
+        wire.decode(alien)
+    ancient = _rebuild(BLOB, schema="somebody.else/v9")
+    with pytest.raises(wire.WireError, match="foreign"):
+        wire.decode(ancient)
+
+
+def test_kind_mismatch_refused():
+    with pytest.raises(wire.WireError, match="kind"):
+        wire.decode(BLOB, expect_kind="stream")
+
+
+def test_every_truncation_refused():
+    for cut in range(len(BLOB)):
+        with pytest.raises(wire.WireError):
+            wire.decode(BLOB[:cut])
+
+
+def test_every_single_byte_mutation_refused():
+    """Exhaustive, not sampled: flip each byte of the blob in turn —
+    magic, length, header, payload, crc — and every variant must be
+    refused. There is no mutable region the checks miss."""
+    for i in range(len(BLOB)):
+        bad = bytearray(BLOB)
+        bad[i] ^= 0xFF
+        with pytest.raises(wire.WireError):
+            wire.decode(bytes(bad))
+
+
+def test_not_bytes_refused():
+    with pytest.raises(wire.WireError):
+        wire.decode("not bytes")
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties
+# ---------------------------------------------------------------------------
+
+_DTYPES = ("float32", "float16", "int32", "int8", "uint8", "bool")
+
+
+def _array_from(dtype, shape, fill):
+    n = int(np.prod(shape, dtype=np.int64))
+    flat = np.asarray([fill[i % len(fill)] for i in range(n)], np.int64)
+    return flat.astype(np.dtype(dtype)).reshape(shape)
+
+
+_leaf = st.one_of(
+    st.integers(min_value=-2**31, max_value=2**31 - 1),
+    st.floats(allow_nan=False, allow_infinity=False, width=32),
+    st.booleans(), st.none(), st.text(max_size=8),
+    st.builds(_array_from,
+              st.sampled_from(_DTYPES),
+              st.lists(st.integers(min_value=0, max_value=3), min_size=0,
+                       max_size=3).map(tuple),
+              st.lists(st.integers(min_value=-100, max_value=100),
+                       min_size=1, max_size=8)),
+)
+
+_tree = st.recursive(
+    _leaf,
+    lambda kids: st.one_of(
+        st.dictionaries(st.text(max_size=6), kids, max_size=3),
+        st.lists(kids, max_size=3),
+        st.lists(kids, max_size=3).map(tuple),
+        st.builds(lambda a, b: TaylorState(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            np.full((), 1.0, np.float32),
+            np.array(2, np.int32)),
+            st.lists(st.floats(allow_nan=False, allow_infinity=False,
+                               width=32), min_size=1, max_size=4),
+            st.lists(st.floats(allow_nan=False, allow_infinity=False,
+                               width=32), min_size=1, max_size=4)),
+    ),
+    max_leaves=8)
+
+
+@given(tree=_tree)
+@settings(max_examples=40, deadline=None)
+def test_prop_roundtrip_identity(tree):
+    _, _, out = wire.decode(wire.encode("snapshot", tree))
+    _assert_leaves_equal(tree, out)
+
+
+@given(idx=st.integers(min_value=0), flip=st.integers(min_value=1,
+                                                      max_value=255))
+@settings(max_examples=60, deadline=None)
+def test_prop_any_mutation_refused(idx, flip):
+    bad = bytearray(BLOB)
+    bad[idx % len(bad)] ^= flip
+    with pytest.raises(wire.WireError):
+        wire.decode(bytes(bad))
+
+
+@given(cut=st.integers(min_value=0))
+@settings(max_examples=40, deadline=None)
+def test_prop_any_truncation_refused(cut):
+    with pytest.raises(wire.WireError):
+        wire.decode(BLOB[:cut % len(BLOB)])
+
+
+@given(ver=st.text(min_size=1, max_size=20))
+@settings(max_examples=40, deadline=None)
+def test_prop_foreign_versions_refused(ver):
+    if ver == wire.SCHEMA:
+        return
+    with pytest.raises(wire.WireError):
+        wire.decode(_rebuild(BLOB, schema=ver))
